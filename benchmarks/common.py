@@ -1,0 +1,154 @@
+"""Shared benchmark substrate: small trained denoisers (disk-cached) and
+speedup measurement helpers.
+
+The paper's experiments run pretrained StableDiffusion/LSUN/Robomimic
+models; offline stand-ins are small DiT denoisers trained on the synthetic
+pipelines (DESIGN.md §9.3).  Wall-clock numbers on this 1-core CPU container
+cannot show *parallel* speedup — the headline metric is the paper's own
+*algorithmic* speedup (sequential model-call depth), wall-clock is reported
+for completeness.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+from repro.configs.base import ModelConfig
+from repro.core.asd import asd_sample_batched
+from repro.core.schedules import Schedule, sl_geometric
+from repro.core.sequential import sequential_sample
+from repro.data.pipeline import BlobImages, GMMSequences, RobotReach
+from repro.models.diffusion import (
+    DenoiserConfig,
+    denoiser_init,
+    make_sl_model_fn,
+    sl_denoiser_loss,
+)
+from repro.nn.param import unbox
+from repro.training.optimizer import adamw, constant_schedule
+from repro.training.train_step import make_train_step
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "results/bench_models")
+T_MIN, T_MAX = 0.05, 50.0
+
+
+def _backbone(n_layers, d_model, n_heads, d_ff):
+    return ModelConfig(
+        name=f"bench-{n_layers}x{d_model}", family="dense", n_layers=n_layers,
+        d_model=d_model, n_heads=n_heads, n_kv_heads=n_heads, d_ff=d_ff,
+        vocab_size=1, pos_embed="none", embed_inputs=False,
+        compute_dtype="float32", remat=False,
+    )
+
+
+MODELS = {
+    # latent-diffusion stand-in (Fig 2 / Tab 1): blob "latents" 64 tokens
+    "ldm": dict(bb=_backbone(4, 128, 4, 512),
+                data=lambda: BlobImages(grid=8, patch_dim=16, batch=32),
+                seq_len=64, d_data=16, d_cond=0, steps=250),
+    # pixel-model stand-in (Fig 4 / Tab 2): wider channels, cheaper net
+    "pixel": dict(bb=_backbone(3, 96, 4, 384),
+                  data=lambda: BlobImages(grid=8, patch_dim=24, batch=32),
+                  seq_len=64, d_data=24, d_cond=0, steps=250),
+    # diffusion policy (Fig 5 / Tab 3)
+    "policy": dict(bb=_backbone(4, 128, 4, 512),
+                   data=lambda: RobotReach(horizon=16, batch=128),
+                   seq_len=16, d_data=2, d_cond=4, steps=400),
+}
+
+
+def get_trained(kind: str):
+    """(params, DenoiserConfig, data) — trains once, then disk-cached."""
+    spec = MODELS[kind]
+    dc = DenoiserConfig(
+        backbone=spec["bb"], seq_len=spec["seq_len"], d_data=spec["d_data"],
+        d_cond=spec["d_cond"], time_log=True,
+    )
+    data = spec["data"]()
+    params = unbox(denoiser_init(jax.random.PRNGKey(0), dc))
+    cdir = os.path.join(CACHE_DIR, kind)
+    if ckpt.latest_step(cdir) is not None:
+        params, _ = ckpt.restore(cdir, target=params)
+        return params, dc, data
+
+    opt = adamw(constant_schedule(2e-3), weight_decay=0.0)
+
+    def loss_fn(p, batch, rng):
+        return (
+            sl_denoiser_loss(p, dc, batch["x0"], rng, T_MIN, T_MAX,
+                             cond=batch.get("cond")),
+            {},
+        )
+
+    step = jax.jit(make_train_step(loss_fn, opt))
+    opt_state = opt.init(params)
+    for s in range(spec["steps"]):
+        b = data.batch_at(s)
+        batch = {"x0": b[0], "cond": b[1]} if isinstance(b, tuple) else {"x0": b}
+        params, opt_state, m = step(params, opt_state, batch, jax.random.PRNGKey(s))
+    ckpt.save(cdir, spec["steps"], params)
+    return params, dc, data
+
+
+def bench_schedule(K: int) -> Schedule:
+    return sl_geometric(K=K, t_min=T_MIN, t_max=T_MAX)
+
+
+def final_x(samples: jax.Array) -> np.ndarray:
+    """y_T -> x estimate (Law(y_T / T) -> mu as T grows)."""
+    return np.asarray(samples) / T_MAX
+
+
+def run_asd(params, dc, sched, theta, B, key, cond=None, eager=False):
+    model_fn_f = lambda c: make_sl_model_fn(params, dc, c)
+    if cond is not None:
+        fn = lambda y, k, c: __import__("repro.core.asd", fromlist=["asd_sample"]).asd_sample(
+            model_fn_f(c), sched, y, k, theta, eager, "counter", False)
+        keys = jax.random.split(key, B)
+        y0 = jnp.zeros((B, dc.seq_len, dc.d_data))
+        return jax.jit(jax.vmap(fn))(y0, keys, cond)
+    y0 = jnp.zeros((B, dc.seq_len, dc.d_data))
+    return jax.jit(
+        lambda y, k: asd_sample_batched(
+            model_fn_f(None), sched, y, k, theta, eager, "counter", False)
+    )(y0, key)
+
+
+def run_sequential(params, dc, sched, B, key, cond=None):
+    def one(y, k, c=None):
+        return sequential_sample(make_sl_model_fn(params, dc, c), sched, y, k)[0]
+
+    y0 = jnp.zeros((B, dc.seq_len, dc.d_data))
+    keys = jax.random.split(key, B)
+    if cond is not None:
+        return jax.jit(jax.vmap(one))(y0, keys, cond)
+    return jax.jit(jax.vmap(lambda y, k: one(y, k)))(y0, keys)
+
+
+def timed(fn, *args, repeats=1):
+    out = jax.block_until_ready(fn(*args))  # compile + first run
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = jax.block_until_ready(fn(*args))
+    return out, (time.perf_counter() - t0) / repeats
+
+
+def speedup_row(kind, K, theta, res, wall_asd, wall_seq, B):
+    depth = float(np.mean(np.asarray(res.rounds) + np.asarray(res.head_calls)))
+    evals = int(np.sum(np.asarray(res.model_evals)))
+    return {
+        "name": f"{kind}_theta{theta}",
+        "K": K,
+        "theta": theta,
+        "algorithmic_speedup": K / depth,
+        "wallclock_speedup": wall_seq / wall_asd if wall_asd else 0.0,
+        "parallel_depth": depth,
+        "accept_rate": float(np.mean(np.asarray(res.accepts) / np.maximum(np.asarray(res.proposals), 1))),
+        "us_per_call": wall_asd * 1e6 / max(evals / B, 1),
+    }

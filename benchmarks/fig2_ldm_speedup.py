@@ -1,0 +1,42 @@
+"""Paper Fig 2: ASD speedup over DDPM on a latent-diffusion model, vs the
+speculation length theta.  K = 1000 denoising steps as in the paper.
+
+Reports the paper's *algorithmic* speedup (K / sequential model-call depth,
+counting a parallel verification round as one call) and wall-clock (CPU
+caveat; see benchmarks/common.py).  ASD-inf is theta = K.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+
+K = 1000
+THETAS = [2, 4, 6, 8, 64]  # theta=64 stands in for ASD-inf (CPU budget)
+B = 4
+
+
+def run(quick: bool = False):
+    params, dc, _ = common.get_trained("ldm")
+    K_ = 200 if quick else K
+    thetas = [4, 8] if quick else THETAS
+    sched = common.bench_schedule(K_)
+    rows = []
+    _, wall_seq = common.timed(
+        lambda: common.run_sequential(params, dc, sched, B, jax.random.PRNGKey(0))
+    )
+    for theta in thetas:
+        res, wall = common.timed(
+            lambda th=theta: common.run_asd(
+                params, dc, sched, th, B, jax.random.PRNGKey(1))
+        )
+        row = common.speedup_row("fig2_ldm", K_, theta, res, wall, wall_seq, B)
+        row["derived"] = row["algorithmic_speedup"]
+        rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,48 @@
+"""Paper Fig 5: diffusion-policy speedup (Robomimic stand-in), K = 100
+denoising steps, batched single-accelerator verification (the paper's robot
+setting).  The paper reports much higher acceptance -> 6-7x algorithmic."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+
+K = 100
+THETAS = [8, 12, 16, 20, 24, K]
+B = 8
+
+
+def run(quick: bool = False):
+    params, dc, data = common.get_trained("policy")
+    thetas = [8, 24] if quick else THETAS
+    sched = common.bench_schedule(K)
+    _, obs = data.batch_at(999)
+    cond = jnp.asarray(obs[:B])
+    rows = []
+    _, wall_seq = common.timed(
+        lambda: common.run_sequential(params, dc, sched, B, jax.random.PRNGKey(0), cond)
+    )
+    for theta in thetas:
+        res, wall = common.timed(
+            lambda th=theta: common.run_asd(
+                params, dc, sched, th, B, jax.random.PRNGKey(1), cond)
+        )
+        row = common.speedup_row("fig5_policy", K, theta, res, wall, wall_seq, B)
+        row["derived"] = row["algorithmic_speedup"]
+        rows.append(row)
+    # beyond-paper: ASD+ eager head at the best theta
+    res, wall = common.timed(
+        lambda: common.run_asd(params, dc, sched, 24, B, jax.random.PRNGKey(1),
+                               cond, eager=True)
+    )
+    row = common.speedup_row("fig5_policy_eager", K, 24, res, wall, wall_seq, B)
+    row["derived"] = row["algorithmic_speedup"]
+    rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,49 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (plus a detailed JSON dump).
+
+Set REPRO_BENCH_QUICK=1 for the reduced sweep (CI/CPU-budget mode).
+"""
+
+import json
+import os
+import sys
+
+from benchmarks import (
+    fig2_ldm_speedup,
+    fig4_pixel_speedup,
+    fig5_robot_speedup,
+    table1_quality,
+    table2_fid_proxy,
+    table3_policy_success,
+)
+
+MODULES = [
+    ("fig2_ldm_speedup", fig2_ldm_speedup),
+    ("fig4_pixel_speedup", fig4_pixel_speedup),
+    ("fig5_robot_speedup", fig5_robot_speedup),
+    ("table1_quality", table1_quality),
+    ("table2_fid_proxy", table2_fid_proxy),
+    ("table3_policy_success", table3_policy_success),
+]
+
+
+def main() -> None:
+    quick = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+    all_rows = []
+    print("name,us_per_call,derived")
+    for mod_name, mod in MODULES:
+        try:
+            rows = mod.run(quick=quick)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"{mod_name},ERROR,{type(e).__name__}:{e}", file=sys.stderr)
+            continue
+        for r in rows:
+            all_rows.append(r)
+            print(f"{r['name']},{r.get('us_per_call', 0.0):.2f},{r['derived']:.4f}")
+    os.makedirs("results", exist_ok=True)
+    with open("results/bench_detail.json", "w") as f:
+        json.dump(all_rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper Table 2 (FID invariance on LSUN Church): Frechet distance between
+the Gaussian moment fits of DDPM samples and ASD samples (pixel stand-in).
+The paper's claim: ASD-theta has the same FID as DDPM for every theta."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import scipy.linalg
+
+from benchmarks import common
+
+K = 200
+THETAS = [4, 8, K]
+B = 64
+
+
+def frechet(x, y):
+    """2-Wasserstein^2 between Gaussian fits (the FID formula)."""
+    mu1, mu2 = x.mean(0), y.mean(0)
+    s1 = np.cov(x, rowvar=False) + 1e-6 * np.eye(x.shape[1])
+    s2 = np.cov(y, rowvar=False) + 1e-6 * np.eye(y.shape[1])
+    covmean = scipy.linalg.sqrtm(s1 @ s2).real
+    return float(((mu1 - mu2) ** 2).sum() + np.trace(s1 + s2 - 2 * covmean))
+
+
+def run(quick: bool = False):
+    params, dc, data = common.get_trained("pixel")
+    thetas = [8] if quick else THETAS
+    B_ = 32 if quick else B
+    sched = common.bench_schedule(K)
+    ref = common.final_x(
+        common.run_sequential(params, dc, sched, B_, jax.random.PRNGKey(0))
+    ).reshape(B_, -1)
+    # also a data reference: FID of DDPM samples vs true data
+    x_data = np.asarray(data.batch_at(777)).reshape(data.batch, -1)[:B_]
+    rows = [{
+        "name": "tab2_fid_ddpm_vs_data",
+        "frechet": frechet(ref, x_data),
+        "us_per_call": 0.0,
+        "derived": frechet(ref, x_data),
+    }]
+    for theta in thetas:
+        res = common.run_asd(params, dc, sched, theta, B_, jax.random.PRNGKey(1))
+        xs = common.final_x(res.sample).reshape(B_, -1)
+        f = frechet(ref, xs)
+        rows.append({
+            "name": f"tab2_fid_theta{theta if theta < K else 'inf'}_vs_ddpm",
+            "frechet": f,
+            "frechet_vs_data": frechet(xs, x_data),
+            "us_per_call": 0.0,
+            "derived": f,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,37 @@
+"""Diffusion policy on a 2-D reach task (paper §6.2 stand-in): train on
+expert demos, then compare DDPM vs ASD-theta action sampling — success rate
+must match while ASD uses far fewer sequential rounds (Fig 5 / Table 3).
+
+    PYTHONPATH=src:. python examples/robot_policy.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.data.pipeline import RobotReach
+
+
+def main():
+    K, n = 100, 64
+    params, dc, data = common.get_trained("policy")
+    sched = common.bench_schedule(K)
+    _, obs = data.batch_at(321)
+    obs = jnp.asarray(obs[:n])
+
+    acts = common.final_x(
+        common.run_sequential(params, dc, sched, n, jax.random.PRNGKey(0), obs))
+    s_ddpm = float(np.mean(np.asarray(RobotReach.success(jnp.asarray(acts), obs))))
+    print(f"DDPM   (K={K} rounds): success {s_ddpm:.2%}")
+
+    for theta in (8, 16, 24):
+        res = common.run_asd(params, dc, sched, theta, n, jax.random.PRNGKey(1), obs)
+        acts = common.final_x(res.sample)
+        s = float(np.mean(np.asarray(RobotReach.success(jnp.asarray(acts), obs))))
+        depth = float(np.mean(np.asarray(res.rounds) + np.asarray(res.head_calls)))
+        print(f"ASD-{theta:<3d} ({depth:5.1f} rounds, {K/depth:4.1f}x): success {s:.2%}")
+
+
+if __name__ == "__main__":
+    main()

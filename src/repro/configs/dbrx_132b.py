@@ -1,0 +1,4 @@
+"""--arch dbrx-132b: exact assigned config (see archs.py for provenance)."""
+from repro.configs.archs import ARCHS
+
+CONFIG = ARCHS["dbrx-132b"]()

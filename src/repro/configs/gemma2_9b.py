@@ -1,0 +1,4 @@
+"""--arch gemma2-9b: exact assigned config (see archs.py for provenance)."""
+from repro.configs.archs import ARCHS
+
+CONFIG = ARCHS["gemma2-9b"]()

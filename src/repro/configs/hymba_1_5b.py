@@ -1,0 +1,4 @@
+"""--arch hymba-1.5b: exact assigned config (see archs.py for provenance)."""
+from repro.configs.archs import ARCHS
+
+CONFIG = ARCHS["hymba-1.5b"]()

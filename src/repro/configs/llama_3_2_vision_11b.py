@@ -1,0 +1,4 @@
+"""--arch llama-3.2-vision-11b: exact assigned config (see archs.py for provenance)."""
+from repro.configs.archs import ARCHS
+
+CONFIG = ARCHS["llama-3.2-vision-11b"]()

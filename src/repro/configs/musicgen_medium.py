@@ -1,0 +1,4 @@
+"""--arch musicgen-medium: exact assigned config (see archs.py for provenance)."""
+from repro.configs.archs import ARCHS
+
+CONFIG = ARCHS["musicgen-medium"]()

@@ -1,0 +1,4 @@
+"""--arch qwen2.5-14b: exact assigned config (see archs.py for provenance)."""
+from repro.configs.archs import ARCHS
+
+CONFIG = ARCHS["qwen2.5-14b"]()

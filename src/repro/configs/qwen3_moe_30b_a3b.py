@@ -1,0 +1,4 @@
+"""--arch qwen3-moe-30b-a3b: exact assigned config (see archs.py for provenance)."""
+from repro.configs.archs import ARCHS
+
+CONFIG = ARCHS["qwen3-moe-30b-a3b"]()

@@ -1,0 +1,90 @@
+"""Config registry: assigned archs + the paper's own models, --arch selection."""
+
+from __future__ import annotations
+
+from repro.configs.archs import ARCHS, SUBQUADRATIC
+from repro.configs.base import (
+    ALL_SHAPES,
+    BlockDesc,
+    InputShape,
+    ModelConfig,
+    reduced,
+)
+from repro.models.diffusion import DenoiserConfig
+
+
+# ------------------------------------------------- the paper's own models
+
+
+def paper_ldm_dit() -> DenoiserConfig:
+    """Latent-diffusion stand-in for StableDiffusion-v2 (paper §6.1, Fig 2):
+    DiT-XL-class transformer over 32x32 latent patch tokens."""
+    backbone = ModelConfig(
+        name="paper-ldm-dit", family="dense", n_layers=28, d_model=1152,
+        n_heads=16, n_kv_heads=16, d_ff=4608, vocab_size=1,
+        pos_embed="none", embed_inputs=False,
+    )
+    return DenoiserConfig(backbone=backbone, seq_len=1024, d_data=16)
+
+
+def paper_pixel_dit() -> DenoiserConfig:
+    """Pixel-space stand-in for the LSUN-Church DDPM (paper §6.1, Fig 4):
+    256x256x3 images as 1024 8x8-patch tokens."""
+    backbone = ModelConfig(
+        name="paper-pixel-dit", family="dense", n_layers=24, d_model=1024,
+        n_heads=16, n_kv_heads=16, d_ff=4096, vocab_size=1,
+        pos_embed="none", embed_inputs=False,
+    )
+    return DenoiserConfig(backbone=backbone, seq_len=1024, d_data=192)
+
+
+def paper_diffusion_policy(action_dim: int = 14) -> DenoiserConfig:
+    """Robomimic-style diffusion policy (paper §6.2): denoises an action
+    sequence of k=16 steps x action_dim (7 single-arm / 14 bi-manual)."""
+    backbone = ModelConfig(
+        name="paper-diffusion-policy", family="dense", n_layers=8, d_model=512,
+        n_heads=8, n_kv_heads=8, d_ff=2048, vocab_size=1,
+        pos_embed="none", embed_inputs=False,
+    )
+    return DenoiserConfig(backbone=backbone, seq_len=16, d_data=action_dim)
+
+
+PAPER_MODELS = {
+    "paper-ldm-dit": paper_ldm_dit,
+    "paper-pixel-dit": paper_pixel_dit,
+    "paper-diffusion-policy": paper_diffusion_policy,
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name in ARCHS:
+        return ARCHS[name]()
+    raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+
+
+def get_denoiser_config(name: str) -> DenoiserConfig:
+    if name in PAPER_MODELS:
+        return PAPER_MODELS[name]()
+    raise KeyError(f"unknown paper model {name!r}; known: {sorted(PAPER_MODELS)}")
+
+
+def shapes_for(name: str) -> list[InputShape]:
+    """The assigned shape cells for an arch, applying the brief's skip rules
+    (long_500k only for sub-quadratic archs; all archs are decoders so
+    decode shapes always run)."""
+    out = []
+    for shape in ALL_SHAPES:
+        if shape.name == "long_500k" and name not in SUBQUADRATIC:
+            continue
+        out.append(shape)
+    return out
+
+
+def all_cells():
+    """Every (arch, shape) dry-run cell, including noted skips."""
+    cells = []
+    for name in ARCHS:
+        for shape in ALL_SHAPES:
+            skipped = shape.name == "long_500k" and name not in SUBQUADRATIC
+            cells.append((name, shape, skipped))
+    return cells

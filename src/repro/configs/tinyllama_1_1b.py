@@ -1,0 +1,4 @@
+"""--arch tinyllama-1.1b: exact assigned config (see archs.py for provenance)."""
+from repro.configs.archs import ARCHS
+
+CONFIG = ARCHS["tinyllama-1.1b"]()

@@ -1,0 +1,4 @@
+"""--arch xlstm-125m: exact assigned config (see archs.py for provenance)."""
+from repro.configs.archs import ARCHS
+
+CONFIG = ARCHS["xlstm-125m"]()

@@ -1,0 +1,4 @@
+"""--arch yi-6b: exact assigned config (see archs.py for provenance)."""
+from repro.configs.archs import ARCHS
+
+CONFIG = ARCHS["yi-6b"]()

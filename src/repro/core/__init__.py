@@ -1,0 +1,49 @@
+"""Core library: the paper's contribution (ASD for DDPMs) in JAX."""
+
+from repro.core.schedules import (
+    Schedule,
+    sl_uniform,
+    sl_geometric,
+    ddpm,
+    ddpm_coeffs,
+    ou_time_of_sl,
+    sl_time_of_ou,
+    sl_of_ddpm_state,
+    ddpm_of_sl_state,
+)
+from repro.core.grs import grs, grs_reject_prob
+from repro.core.verifier import verify, leading_true_count
+from repro.core.sequential import (
+    sequential_sample,
+    sequential_sample_with_noise,
+    init_y0,
+)
+from repro.core.asd import ASDResult, asd_sample, asd_sample_batched, asd_init_y0
+from repro.core.analytic import GMM, default_gmm, sl_mean_fn, ddpm_x0_fn
+
+__all__ = [
+    "Schedule",
+    "sl_uniform",
+    "sl_geometric",
+    "ddpm",
+    "ddpm_coeffs",
+    "ou_time_of_sl",
+    "sl_time_of_ou",
+    "sl_of_ddpm_state",
+    "ddpm_of_sl_state",
+    "grs",
+    "grs_reject_prob",
+    "verify",
+    "leading_true_count",
+    "sequential_sample",
+    "sequential_sample_with_noise",
+    "init_y0",
+    "ASDResult",
+    "asd_sample",
+    "asd_sample_batched",
+    "asd_init_y0",
+    "GMM",
+    "default_gmm",
+    "sl_mean_fn",
+    "ddpm_x0_fn",
+]

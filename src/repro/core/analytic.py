@@ -1,0 +1,116 @@
+"""Analytic mean oracles for Gaussian-mixture targets.
+
+For mu = sum_k w_k N(mu_k, s_k^2 I) every conditional mean the samplers need
+is available in closed form, giving an *exact* model for correctness tests:
+
+  * SL observation model: y = t x* + sqrt(t) xi
+        =>  x* | y is a mixture of Gaussians with component means
+            (mu_k / s_k^2 + y) / (1/s_k^2 + t).
+  * DDPM observation model: x_s = sqrt(abar) x0 + sqrt(1-abar) eps
+        =>  same formula with t_eff = abar / (1 - abar) and y_eff =
+            sqrt(abar) x_s / (1 - abar).
+
+These oracles stand in for the trained network wherever tests need ground
+truth (GRS/ASD exactness, exchangeability, adaptive-complexity trends).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GMM:
+    means: jax.Array  # (ncomp, d)
+    scales: jax.Array  # (ncomp,) isotropic component stds
+    weights: jax.Array  # (ncomp,)
+
+    @property
+    def d(self) -> int:
+        return self.means.shape[-1]
+
+    def sample(self, key, n: int) -> jax.Array:
+        kc, kx = jax.random.split(key)
+        comp = jax.random.categorical(kc, jnp.log(self.weights), shape=(n,))
+        eps = jax.random.normal(kx, (n, self.d))
+        return self.means[comp] + self.scales[comp][:, None] * eps
+
+    def trace_cov(self) -> jax.Array:
+        """Tr(Cov[mu]) — the beta*d of the paper's Thm 4 assumption."""
+        mean = jnp.sum(self.weights[:, None] * self.means, axis=0)
+        second = jnp.sum(
+            self.weights[:, None]
+            * ((self.means - mean) ** 2 + self.scales[:, None] ** 2),
+            axis=0,
+        )
+        return jnp.sum(second)
+
+
+def default_gmm(d: int = 2, ncomp: int = 3, spread: float = 2.0) -> GMM:
+    angles = jnp.arange(ncomp) * (2 * jnp.pi / ncomp)
+    base = jnp.stack([jnp.cos(angles), jnp.sin(angles)], axis=-1) * spread
+    if d > 2:
+        base = jnp.concatenate([base, jnp.zeros((ncomp, d - 2))], axis=-1)
+    else:
+        base = base[:, :d]
+    return GMM(
+        means=base.astype(jnp.float32),
+        scales=jnp.full((ncomp,), 0.5, jnp.float32),
+        weights=jnp.full((ncomp,), 1.0 / ncomp, jnp.float32),
+    )
+
+
+def _posterior_mean(gmm: GMM, y_eff: jax.Array, t_eff: jax.Array) -> jax.Array:
+    """E[x | precision-t_eff Gaussian observation y_eff/t_eff] for GMM prior.
+
+    Observation model: y_eff = t_eff x + sqrt(t_eff) xi, i.e. the likelihood in
+    x is N(x; y_eff / t_eff, I / t_eff).  Supports batched leading axes on
+    y_eff with matching (broadcastable) t_eff.
+    """
+    prec_k = 1.0 / gmm.scales**2  # (ncomp,)
+    # posterior-per-component natural params
+    y_e = y_eff[..., None, :]  # (..., 1, d)
+    t_e = t_eff[..., None, None]  # (..., 1, 1)
+    post_prec = prec_k[:, None] + t_e  # (..., ncomp, 1)
+    post_mean = (gmm.means * prec_k[:, None] + y_e) / post_prec
+
+    # responsibilities: y_eff | k ~ N(t mu_k, (t^2 s_k^2 + t) I)
+    var_k = t_e**2 * gmm.scales[:, None] ** 2 + t_e  # (..., ncomp, 1)
+    var_k = jnp.maximum(var_k, 1e-12)
+    diff = y_e - t_e * gmm.means
+    loglik = -0.5 * jnp.sum(diff**2 / var_k, axis=-1) - 0.5 * gmm.d * jnp.log(
+        var_k[..., 0]
+    )
+    logw = jnp.log(gmm.weights) + loglik
+    r = jax.nn.softmax(logw, axis=-1)  # (..., ncomp)
+    return jnp.sum(r[..., None] * post_mean, axis=-2)
+
+
+def sl_mean_fn(gmm: GMM):
+    """m(t, y) = E[x* | t x* + sqrt(t) xi = y] as a batched model_fn."""
+
+    def model_fn(t, y):
+        t = jnp.maximum(t.astype(jnp.float32), 1e-12)
+        t_b = t.reshape(t.shape + (1,) * (y.ndim - t.ndim - 1))
+        return _posterior_mean(gmm, y.astype(jnp.float32), t_b).astype(y.dtype)
+
+    return model_fn
+
+
+def ddpm_x0_fn(gmm: GMM, abar: jax.Array):
+    """E[x0 | x_s] for the discrete DDPM forward with cumulative alpha
+    ``abar`` (K,), as a batched model_fn over timestep indices."""
+
+    def model_fn(t, y):
+        s = t.astype(jnp.int32)
+        ab = abar[s]  # (m,)
+        ab = ab.reshape(ab.shape + (1,) * (y.ndim - ab.ndim))
+        t_eff = ab / jnp.maximum(1.0 - ab, 1e-12)
+        y_eff = jnp.sqrt(ab) * y / jnp.maximum(1.0 - ab, 1e-12)
+        return _posterior_mean(gmm, y_eff, t_eff[..., 0]).astype(y.dtype)
+
+    return model_fn

@@ -1,0 +1,292 @@
+"""Autospeculative Decoding — paper Algorithm 1, fused on-device.
+
+One `jax.lax.while_loop` per chain; each iteration makes
+
+  1. one model call at the current position a (the *proposal* call, line 6),
+  2. a theta-step elementwise rollout of proposal means/samples using the
+     pre-drawn noises xi (lines 7-9; O(theta d) FLOPs, no model calls),
+  3. ONE batched model call over all theta proposal points (the *parallel
+     verification round*, line 11) — on a TPU mesh this is a (theta*B)-batched
+     forward sharded over the `data` axis (see DESIGN.md §2),
+  4. the Verifier (Alg 2 / GRS Alg 3), a windowed commit of the accepted
+     prefix + the reflected first rejection, and the advance a <- j+1.
+
+The (u_i, xi_i) streams are drawn once, indexed by absolute step, and reused
+across rounds — exactly the filtration structure the correctness proof
+(Lemma 13) relies on.
+
+Beyond-paper option ``eager_head`` ("ASD+"): the parallel round additionally
+evaluates the model at the last proposal point y_hat_b.  Whenever the whole
+window is accepted, that evaluation IS the next round's proposal call, so the
+sequential-depth cost of a fully-accepted round drops from 2 to 1.  At the
+high acceptance rates the paper reports for diffusion policies (6-7x regime)
+this raises the algorithmic speedup bound from K/2R toward K/R.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grs import grs, bcast_right
+from repro.core.schedules import Schedule
+from repro.core.sequential import init_y0
+from repro.core.verifier import leading_true_count
+
+ModelFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ASDResult:
+    sample: jax.Array  # (*event) final sample y_K
+    trajectory: jax.Array  # (K+1, *event) the committed chain
+    rounds: jax.Array  # () int32 — iterations of the outer loop (paper's R)
+    head_calls: jax.Array  # () int32 — sequential proposal calls actually made
+    model_evals: jax.Array  # () int32 — total model evaluations (all slots)
+    accepts: jax.Array  # () int32 — total accepted speculations
+    proposals: jax.Array  # () int32 — total verified slots
+
+    def parallel_depth(self):
+        """Sequential model-call depth: each round costs one parallel
+        verification round plus (if not cached) one proposal call."""
+        return self.rounds + self.head_calls
+
+    def algorithmic_speedup(self, K: int):
+        return K / self.parallel_depth()
+
+    def accept_rate(self):
+        return self.accepts / jnp.maximum(self.proposals, 1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class _State:
+    y: jax.Array  # (K+theta+1, *event) committed chain (padded)
+    a: jax.Array  # () int32 current position
+    v_cache: jax.Array  # (*event) cached g(t_a, y_a) for eager_head
+    v_valid: jax.Array  # () bool
+    rounds: jax.Array
+    head_calls: jax.Array
+    model_evals: jax.Array
+    accepts: jax.Array
+    proposals: jax.Array
+
+
+def asd_sample(
+    model_fn: ModelFn,
+    schedule: Schedule,
+    y0: jax.Array,
+    key: jax.Array,
+    theta: int,
+    eager_head: bool = False,
+    noise_mode: str = "buffer",
+    keep_trajectory: bool = True,
+    grs_impl: str = "core",
+) -> ASDResult:
+    """Run ASD for one chain.  ``theta >= K`` gives ASD-infinity.
+
+    model_fn(t: f32[m], y: f32[m, *event]) -> f32[m, *event] must accept any
+    leading batch size m (it is called with m=1 and m=theta(+1)).
+
+    Beyond-paper memory options (identical law; see EXPERIMENTS.md §Perf):
+      * noise_mode="counter": derive (u_i, xi_i) from a counter-based PRNG
+        fold at absolute step i instead of materializing O(K*d) buffers —
+        the re-speculation determinism the proof needs is preserved because
+        fold_in(key, i) is a pure function of i.
+      * keep_trajectory=False: keep only the (theta+1)-slot live window of
+        the chain instead of the full (K+1)-step trajectory; the
+        ``trajectory`` field then holds the final window.
+    """
+    K = schedule.K
+    theta = int(min(theta, K))
+    sched = schedule.pad(theta + 1)
+    ev_shape = y0.shape
+    ev_ndim = y0.ndim
+
+    k_u, k_xi = jax.random.split(key)
+    # absolute-step randomness, fixed once (lines 1-2); index i drives y_i->y_{i+1}
+    if noise_mode == "buffer":
+        u_buf = jax.random.uniform(k_u, (K + theta + 1,))
+        xi_buf = jax.random.normal(k_xi, (K + theta + 1,) + ev_shape, y0.dtype)
+    else:
+        u_buf = xi_buf = None
+
+    if keep_trajectory:
+        y_buf = jnp.zeros((K + theta + 1,) + ev_shape, y0.dtype)
+        y_buf = y_buf.at[0].set(y0)
+    else:
+        y_buf = jnp.zeros((theta + 1,) + ev_shape, y0.dtype)
+        y_buf = y_buf.at[0].set(y0)
+
+    def window(arr, start, length):
+        return jax.lax.dynamic_slice_in_dim(arr, start, length, axis=0)
+
+    def noise_window(a):
+        if noise_mode == "buffer":
+            return window(u_buf, a, theta), window(xi_buf, a, theta)
+        idx = a + jnp.arange(theta)
+        u_w = jax.vmap(lambda i: jax.random.uniform(jax.random.fold_in(k_u, i), ()))(idx)
+        xi_w = jax.vmap(
+            lambda i: jax.random.normal(jax.random.fold_in(k_xi, i), ev_shape, y0.dtype)
+        )(idx)
+        return u_w, xi_w
+
+    def cond(st: _State):
+        return st.a < K
+
+    def body(st: _State):
+        a = st.a
+        if keep_trajectory:
+            y_a = jax.lax.dynamic_index_in_dim(st.y, a, axis=0, keepdims=False)
+        else:
+            y_a = st.y[0]
+        t_a = sched.t_model[a]
+
+        # --- 1. proposal call (line 6), possibly served from the eager cache
+        if eager_head:
+            v_a = jnp.where(st.v_valid, st.v_cache, _call1(model_fn, t_a, y_a))
+            new_head = jnp.where(st.v_valid, 0, 1)
+        else:
+            v_a = _call1(model_fn, t_a, y_a)
+            new_head = jnp.asarray(1, jnp.int32)
+
+        # --- 2. theta-step proposal rollout (lines 7-9)
+        A_w = window(sched.A, a, theta)
+        B_w = window(sched.B, a, theta)
+        sig_w = window(sched.sigma, a, theta)
+        t_w = window(sched.t_model, a, theta)
+        u_w, xi_w = noise_window(a)
+
+        def roll(y_i, inp):
+            A, B, sg, x = inp
+            m_hat = A * y_i + B * v_a
+            y_next = m_hat + sg * x
+            return y_next, (m_hat, y_next)
+
+        _, (m_hats, y_props) = jax.lax.scan(roll, y_a, (A_w, B_w, sig_w, xi_w))
+        y_prev = jnp.concatenate([y_a[None], y_props[:-1]], axis=0)  # (theta, ev)
+
+        # --- 3. ONE batched parallel round (line 11)
+        if eager_head:
+            pts = jnp.concatenate([y_prev, y_props[-1][None]], axis=0)
+            ts = jnp.concatenate([t_w, sched.t_model[a + theta][None]], axis=0)
+            g_all = model_fn(ts, pts)
+            g_par, g_head = g_all[:-1], g_all[-1]
+        else:
+            g_par = model_fn(t_w, y_prev)
+            g_head = None
+        m_tgt = bcast_right(A_w, ev_ndim + 1) * y_prev + bcast_right(
+            B_w, ev_ndim + 1
+        ) * g_par
+
+        # --- 4. Verifier (Alg 2) + windowed commit
+        if grs_impl == "kernel":
+            from repro.kernels.grs.ops import grs as grs_k
+
+            z, acc = grs_k(u_w, xi_w, m_hats, m_tgt, sig_w, event_ndim=ev_ndim)
+        else:
+            z, acc = grs(u_w, xi_w, m_hats, m_tgt, sig_w, event_ndim=ev_ndim)
+        n_valid = jnp.minimum(theta, K - a)
+        slot = jnp.arange(theta)
+        acc = acc & (slot < n_valid)
+        lead = leading_true_count(acc)
+        rejected = lead < n_valid
+        advance = lead + jnp.where(rejected, 1, 0)
+
+        if keep_trajectory:
+            old = window(st.y, a + 1, theta)
+        else:
+            old = st.y[1:]
+        mask = bcast_right(slot < advance, ev_ndim + 1)
+        committed = jnp.where(mask, z, old)
+        if keep_trajectory:
+            y_new = jax.lax.dynamic_update_slice_in_dim(
+                st.y, committed, a + 1, axis=0
+            )
+        else:
+            # shift the live window so slot 0 becomes position a + advance
+            buf2 = jnp.concatenate(
+                [st.y[:1], committed,
+                 jnp.zeros((theta,) + ev_shape, y0.dtype)], axis=0
+            )
+            y_new = jax.lax.dynamic_slice_in_dim(buf2, advance, theta + 1, axis=0)
+
+        full_accept = jnp.logical_and(~rejected, n_valid == theta)
+        return _State(
+            y=y_new,
+            a=a + advance,
+            v_cache=g_head if eager_head else st.v_cache,
+            v_valid=full_accept if eager_head else jnp.asarray(False),
+            rounds=st.rounds + 1,
+            head_calls=st.head_calls + new_head,
+            model_evals=st.model_evals
+            + new_head
+            + n_valid
+            + (1 if eager_head else 0),
+            accepts=st.accepts + lead,
+            proposals=st.proposals + n_valid,
+        )
+
+    st0 = _State(
+        y=y_buf,
+        a=jnp.asarray(0, jnp.int32),
+        v_cache=jnp.zeros(ev_shape, y0.dtype),
+        v_valid=jnp.asarray(False),
+        rounds=jnp.asarray(0, jnp.int32),
+        head_calls=jnp.asarray(0, jnp.int32),
+        model_evals=jnp.asarray(0, jnp.int32),
+        accepts=jnp.asarray(0, jnp.int32),
+        proposals=jnp.asarray(0, jnp.int32),
+    )
+    st = jax.lax.while_loop(cond, body, st0)
+    if keep_trajectory:
+        traj = st.y[: K + 1]
+        sample = st.y[K]
+    else:
+        traj = st.y  # the final (theta+1) live window
+        sample = st.y[0]  # position a == K on exit
+    return ASDResult(
+        sample=sample,
+        trajectory=traj,
+        rounds=st.rounds,
+        head_calls=st.head_calls,
+        model_evals=st.model_evals,
+        accepts=st.accepts,
+        proposals=st.proposals,
+    )
+
+
+def _call1(model_fn: ModelFn, t, y):
+    return model_fn(t[None], y[None])[0]
+
+
+def asd_sample_batched(
+    model_fn: ModelFn,
+    schedule: Schedule,
+    y0: jax.Array,  # (B, *event)
+    key: jax.Array,
+    theta: int,
+    eager_head: bool = False,
+    noise_mode: str = "buffer",
+    keep_trajectory: bool = True,
+) -> ASDResult:
+    """Independent ASD chains vmapped over a batch.
+
+    Under vmap the per-round batched model call becomes a (B*theta)-point
+    forward — the SPMD form that shards over the mesh `data` axis.  Chains
+    finish at different rounds; the fused loop runs to the slowest chain
+    (standard batched speculative serving semantics).
+    """
+    keys = jax.random.split(key, y0.shape[0])
+    fn = lambda y, k: asd_sample(
+        model_fn, schedule, y, k, theta, eager_head, noise_mode, keep_trajectory
+    )
+    return jax.vmap(fn)(y0, keys)
+
+
+def asd_init_y0(schedule: Schedule, key, event_shape, dtype=jnp.float32):
+    return init_y0(schedule, key, event_shape, dtype)

@@ -1,0 +1,69 @@
+"""Hidden exchangeability of SL/DDPM increments — paper Theorem 1.
+
+Theorem 8 (El Alaoui & Montanari) gives the *exact* simulation of SL:
+    ybar_t = t x* + W_t,   x* ~ mu,  W a standard Brownian motion,
+so equal-step increments are Delta_i = eta x* + (W_{t_{i+1}} - W_{t_i}),
+i.e. conditionally-iid N(eta x*, eta I) given x* — manifestly exchangeable.
+
+These helpers simulate exact SL trajectories / increments for the property
+tests, and provide permutation-invariance statistics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analytic import GMM
+
+
+def simulate_sl_increments(gmm: GMM, key, n_chains: int, m: int, eta: float):
+    """Exact equal-step SL increments Delta_i, shape (n_chains, m, d)."""
+    kx, kw = jax.random.split(key)
+    xstar = gmm.sample(kx, n_chains)  # (n, d)
+    brownian = jax.random.normal(kw, (n_chains, m, gmm.d)) * jnp.sqrt(eta)
+    return eta * xstar[:, None, :] + brownian
+
+
+def simulate_sl_trajectory(gmm: GMM, key, n_chains: int, m: int, eta: float):
+    incs = simulate_sl_increments(gmm, key, n_chains, m, eta)
+    traj = jnp.cumsum(incs, axis=1)
+    return jnp.concatenate([jnp.zeros_like(traj[:, :1]), traj], axis=1)
+
+
+def permutation_statistic(incs: jax.Array, perm) -> dict:
+    """Compare the joint law of increments against its permutation.
+
+    Returns first/second moment and pairwise-product statistics of the
+    original and permuted increment sequences; exchangeability (Thm 1) says
+    every such statistic must agree in distribution.
+    """
+    permuted = incs[:, jnp.asarray(perm), :]
+
+    def stats(x):
+        first = x.mean(axis=0)  # (m, d) per-position mean
+        second = (x**2).mean(axis=0)
+        # cross-position correlation captures joint (not just marginal) law
+        cross = jnp.einsum("nmd,nkd->mk", x, x) / (x.shape[0] * x.shape[2])
+        return first, second, cross
+
+    f0, s0, c0 = stats(incs)
+    f1, s1, c1 = stats(permuted)
+    return dict(
+        mean_gap=jnp.max(jnp.abs(f0 - f1)),
+        second_gap=jnp.max(jnp.abs(s0 - s1)),
+        cross_gap=jnp.max(jnp.abs(c0.mean() - c1.mean())),
+        sum_gap=jnp.max(jnp.abs(incs.sum(1) - permuted.sum(1))),  # exactly 0
+    )
+
+
+def marginal_of_future_increment(gmm: GMM, y_a, t_a, eta):
+    """Thm 1 consequence used by ASD: Law(Delta_j | y_a) is identical for all
+    j >= a.  Closed form given the exact representation: the mixture over the
+    posterior of x* given y_a of N(eta x*, eta I) — i.e. the same proposal the
+    algorithm samples.  Returns (posterior mixture means, common variance)."""
+    from repro.core.analytic import _posterior_mean
+
+    t_arr = jnp.asarray(t_a, jnp.float32)
+    mean = _posterior_mean(gmm, y_a, t_arr)
+    return eta * mean, eta

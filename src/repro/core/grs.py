@@ -1,0 +1,89 @@
+"""Gaussian Rejection Sampler — paper Algorithm 3.
+
+Given a proposal N(m_hat, sigma^2 I) and target N(m, sigma^2 I) that share a
+variance, and the *same* standard normal ``xi`` that generated the proposal
+sample ``y_hat = m_hat + sigma * xi``:
+
+  accept with prob  min(1, N(xi + v/sigma | 0, I) / N(xi | 0, I)),  v = m_hat - m
+    -> return the proposal sample  m_hat + sigma * xi
+  else
+    -> return the *reflected* sample m + sigma * (xi - 2 v <v, xi> / ||v||^2)
+
+Thm 12: the output is exactly N(m, sigma^2 I) and
+P[reject] = TV(N(m_hat, s^2 I), N(m, s^2 I)) = 2 Phi(||v|| / (2 sigma)) - 1.
+
+The reference implementation below is pure jnp; the Pallas TPU kernel lives in
+``repro.kernels.grs`` and is verified against this function.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-20
+
+
+def bcast_right(x: jax.Array, ndim: int) -> jax.Array:
+    """Append trailing singleton dims until ``x.ndim == ndim``."""
+    return x.reshape(x.shape + (1,) * (ndim - x.ndim))
+
+
+def grs(
+    u: jax.Array,
+    xi: jax.Array,
+    m_hat: jax.Array,
+    m: jax.Array,
+    sigma: jax.Array,
+    event_ndim: int = 1,
+):
+    """Vectorized GRS.
+
+    Args:
+      u:      (*batch,) uniforms in [0, 1].
+      xi:     (*batch, *event) the standard normal that built the proposal.
+      m_hat:  (*batch, *event) proposal means.
+      m:      (*batch, *event) target means.
+      sigma:  (*batch,) shared std of proposal and target.
+      event_ndim: number of trailing event axes reduced over.
+
+    Returns:
+      (x, accept): x ~ N(m, sigma^2 I) exactly; accept is the coupling bit.
+      sigma == 0 degenerates to: accept iff m_hat == m, x = m.
+    """
+    batch_ndim = xi.ndim - event_ndim
+    ev_axes = tuple(range(batch_ndim, xi.ndim))
+
+    v = (m_hat - m).astype(jnp.float32)
+    xi32 = xi.astype(jnp.float32)
+    vnorm2 = jnp.sum(v * v, axis=ev_axes)
+    vdotxi = jnp.sum(v * xi32, axis=ev_axes)
+
+    sigma = sigma.astype(jnp.float32)
+    safe_sigma = jnp.where(sigma > 0, sigma, 1.0)
+    # log [ N(xi + v/sigma) / N(xi) ] = -(<v,xi>/sigma + ||v||^2 / (2 sigma^2))
+    log_ratio = -(vdotxi / safe_sigma + vnorm2 / (2.0 * safe_sigma**2))
+    log_u = jnp.log(jnp.maximum(u, _EPS))
+    accept = log_u <= jnp.minimum(log_ratio, 0.0)
+    # sigma == 0: the two deltas either coincide (always accept) or are
+    # disjoint (TV = 1 -> always reject; the "reflected" sample is just m).
+    accept = jnp.where(sigma > 0, accept, vnorm2 <= 0.0)
+
+    # Householder reflection of xi across the hyperplane orthogonal to v.
+    safe_vnorm2 = jnp.where(vnorm2 > 0, vnorm2, 1.0)
+    coef = 2.0 * vdotxi / safe_vnorm2
+    xi_ref = xi32 - bcast_right(coef, xi.ndim) * v
+    xi_ref = jnp.where(bcast_right(vnorm2 > 0, xi.ndim), xi_ref, xi32)
+
+    sig_b = bcast_right(sigma, xi.ndim)
+    acc_b = bcast_right(accept, xi.ndim)
+    x = jnp.where(acc_b, m_hat + sig_b * xi32, m + sig_b * xi_ref)
+    return x.astype(xi.dtype), accept
+
+
+def grs_reject_prob(m_hat, m, sigma, event_ndim: int = 1):
+    """Closed-form P[reject] = TV of the two Gaussians (for tests)."""
+    ev_axes = tuple(range(m.ndim - event_ndim, m.ndim))
+    dist = jnp.sqrt(jnp.sum((m_hat - m) ** 2, axis=ev_axes))
+    z = dist / (2.0 * sigma)
+    return jax.scipy.special.erf(z / jnp.sqrt(2.0))

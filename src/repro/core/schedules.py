@@ -1,0 +1,188 @@
+"""Diffusion step schedules in the unified affine form of the paper (Eq. 5).
+
+Every sampler step in this framework (sequential DDPM, sequential SL, and ASD)
+is an instance of
+
+    y_{i+1} = A_i * y_i + B_i * g(t_i, y_i) + sigma_i * xi_{i+1}
+
+where ``g`` is the model ("mean oracle"):
+
+  * Stochastic Localization (SL):  g = m(t, y) = E[x* | t x* + sqrt(t) xi = y],
+    A_i = 1, B_i = eta_i = t_{i+1} - t_i, sigma_i = sqrt(eta_i).   (paper Eq. 4)
+  * DDPM ancestral sampling (paper Remark 2): the model predicts
+    x0_hat = E[x0 | x_s]; the posterior mean is affine in (x_s, x0_hat):
+    A_i = sqrt(alpha_s) (1-abar_{s-1}) / (1-abar_s),
+    B_i = sqrt(abar_{s-1}) beta_s / (1-abar_s),
+    sigma_i = sqrt(beta_tilde_s),  with s = K - i (denoising order).
+
+The SL <-> DDPM reparametrization (paper Thm 9, Montanari 2023) is provided for
+the equivalence tests: ybar_t = t e^{s(t)} xbar^{<-}_{s(t)}, s(t) = .5 ln(1+1/t).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Affine step schedule (all arrays have length K).
+
+    Step ``i`` (0-based) advances ``y_i -> y_{i+1}``:
+      mean = A[i] * y_i + B[i] * g(t_model[i], y_i);  y_{i+1} = mean + sigma[i] * xi.
+    ``t_model`` is the time/noise-level conditioning handed to the model.
+    """
+
+    t_model: jax.Array  # (K,) model conditioning per step
+    A: jax.Array  # (K,)
+    B: jax.Array  # (K,)
+    sigma: jax.Array  # (K,) std of the noise injected by step i
+    # static metadata
+    kind: str = dataclasses.field(metadata=dict(static=True), default="sl")
+    y0_mode: str = dataclasses.field(metadata=dict(static=True), default="zeros")
+
+    @property
+    def K(self) -> int:
+        return self.t_model.shape[0]
+
+    def pad(self, extra: int) -> "Schedule":
+        """Pad schedule arrays by ``extra`` inert slots (A=1, B=0, sigma=0) so
+        fixed-size speculation windows may run past step K."""
+        def padc(x, c):
+            return jnp.concatenate([x, jnp.full((extra,), c, x.dtype)])
+
+        return Schedule(
+            t_model=padc(self.t_model, self.t_model[-1]),
+            A=padc(self.A, 1.0),
+            B=padc(self.B, 0.0),
+            sigma=padc(self.sigma, 0.0),
+            kind=self.kind,
+            y0_mode=self.y0_mode,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Stochastic localization grids
+# ---------------------------------------------------------------------------
+
+
+def sl_uniform(K: int, t_min: float = 0.0, t_max: float = 20.0) -> Schedule:
+    """Uniform SL grid — the setting of Thm 1 (equal increments => the
+    increments are exchangeable) and of the adaptive-complexity analysis."""
+    t = np.linspace(t_min, t_max, K + 1)
+    eta = np.diff(t)
+    return Schedule(
+        t_model=jnp.asarray(t[:-1], jnp.float32),
+        A=jnp.ones((K,), jnp.float32),
+        B=jnp.asarray(eta, jnp.float32),
+        sigma=jnp.asarray(np.sqrt(eta), jnp.float32),
+        kind="sl",
+        y0_mode="zeros",
+    )
+
+
+def sl_geometric(K: int, t_min: float = 1e-2, t_max: float = 100.0) -> Schedule:
+    """Geometric SL grid — matches the fine-near-the-data-end discretizations
+    used in practice.  Increments are *not* all equal; ASD remains exact
+    (Thm 3 is grid-free), only the exchangeability symmetry is approximate."""
+    t = np.concatenate([[0.0], np.geomspace(t_min, t_max, K)])
+    eta = np.diff(t)
+    return Schedule(
+        t_model=jnp.asarray(t[:-1], jnp.float32),
+        A=jnp.ones((K,), jnp.float32),
+        B=jnp.asarray(eta, jnp.float32),
+        sigma=jnp.asarray(np.sqrt(eta), jnp.float32),
+        kind="sl",
+        y0_mode="zeros",
+    )
+
+
+# ---------------------------------------------------------------------------
+# DDPM (discrete beta schedule) -> affine ancestral form (Remark 2)
+# ---------------------------------------------------------------------------
+
+
+def _betas(K: int, kind: Literal["linear", "cosine"]) -> np.ndarray:
+    if kind == "linear":
+        # Ho et al. 2020 scaled to K steps.
+        return np.linspace(1e-4 * (1000 / K), 0.02 * (1000 / K), K).clip(0, 0.999)
+    if kind == "cosine":
+        s = 0.008
+        steps = np.arange(K + 1, dtype=np.float64) / K
+        abar = np.cos((steps + s) / (1 + s) * np.pi / 2) ** 2
+        betas = 1.0 - abar[1:] / abar[:-1]
+        return betas.clip(0, 0.999)
+    raise ValueError(kind)
+
+
+def ddpm(K: int, beta_schedule: Literal["linear", "cosine"] = "cosine") -> Schedule:
+    """DDPM ancestral sampler as an affine schedule over an x0-predicting model.
+
+    Internal step index i runs in *denoising order*; it maps to diffusion
+    timestep s = K - i (s = K is pure noise, s = 1 the final denoise).
+    ``t_model[i] = s - 1`` (0-based timestep fed to the network).
+    """
+    betas = _betas(K, beta_schedule).astype(np.float64)
+    alphas = 1.0 - betas
+    abar = np.cumprod(alphas)
+    abar_prev = np.concatenate([[1.0], abar[:-1]])
+
+    # index by s-1 = 0..K-1 (ascending diffusion time)
+    A_s = np.sqrt(alphas) * (1.0 - abar_prev) / (1.0 - abar)
+    B_s = np.sqrt(abar_prev) * betas / (1.0 - abar)
+    var_s = betas * (1.0 - abar_prev) / (1.0 - abar)
+
+    # reverse into denoising order: step i uses s = K - i
+    rev = slice(None, None, -1)
+    return Schedule(
+        t_model=jnp.asarray(np.arange(K)[rev].copy(), jnp.float32),
+        A=jnp.asarray(A_s[rev].copy(), jnp.float32),
+        B=jnp.asarray(B_s[rev].copy(), jnp.float32),
+        sigma=jnp.asarray(np.sqrt(var_s[rev].copy()), jnp.float32),
+        kind="ddpm",
+        y0_mode="std_normal",
+    )
+
+
+def ddpm_coeffs(K: int, beta_schedule: str = "cosine"):
+    """(betas, alphas, abar) helper for training-loss code."""
+    betas = _betas(K, beta_schedule)
+    alphas = 1.0 - betas
+    abar = np.cumprod(alphas)
+    return (
+        jnp.asarray(betas, jnp.float32),
+        jnp.asarray(alphas, jnp.float32),
+        jnp.asarray(abar, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# SL <-> OU-DDPM reparametrization (paper Thm 9)
+# ---------------------------------------------------------------------------
+
+
+def ou_time_of_sl(t):
+    """s(t) = .5 ln(1 + 1/t)."""
+    return 0.5 * jnp.log1p(1.0 / t)
+
+
+def sl_time_of_ou(s):
+    """Inverse of ``ou_time_of_sl``: t(s) = 1 / (e^{2s} - 1)."""
+    return 1.0 / jnp.expm1(2.0 * s)
+
+
+def sl_of_ddpm_state(x_rev, s):
+    """ybar_t = t e^{s(t)} xbar^{<-}_{s(t)} with t = t(s)."""
+    t = sl_time_of_ou(s)
+    return t * jnp.exp(s) * x_rev, t
+
+
+def ddpm_of_sl_state(y, t):
+    s = ou_time_of_sl(t)
+    return y / (t * jnp.exp(s)), s

@@ -1,0 +1,51 @@
+"""Verifier — paper Algorithm 2.
+
+Runs GRS on every speculated step in parallel, finds the first rejection, and
+returns exact samples for the accepted prefix plus the reflected (exact)
+sample at the first rejected index.
+
+This standalone function mirrors the paper's notation for testability; the
+ASD driver (repro.core.asd) inlines the same logic inside its while-loop body.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grs import grs
+
+
+def leading_true_count(acc: jax.Array, axis: int = 0) -> jax.Array:
+    """Number of leading True values along ``axis``."""
+    return jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=axis), axis=axis)
+
+
+def verify(u, xi, m_hat, m, sigma, n_valid=None, event_ndim: int = 1):
+    """Parallel verification of a window of speculated steps.
+
+    Args:
+      u:      (theta,) uniforms for slots a+1..a+theta.
+      xi:     (theta, *event) pre-drawn step noises.
+      m_hat:  (theta, *event) proposal means.
+      m:      (theta, *event) target means (evaluated at the proposal points).
+      sigma:  (theta,) per-slot stds.
+      n_valid: number of slots that correspond to real steps (b - a); slots
+        beyond it are masked out.  Defaults to theta.
+
+    Returns:
+      z:       (theta, *event) slot samples — exact target samples for slots
+               < advance (accepted prefix + the reflected first rejection).
+      advance: number of chain steps to advance (slots to commit).
+      accepted: (theta,) accept bits (masked).
+    """
+    theta = u.shape[0]
+    if n_valid is None:
+        n_valid = jnp.asarray(theta, jnp.int32)
+    z, acc = grs(u, xi, m_hat, m, sigma, event_ndim=event_ndim)
+    slot = jnp.arange(theta)
+    acc = acc & (slot < n_valid)
+    lead = leading_true_count(acc)  # last accepted slot count (paper's j - a)
+    rejected = lead < n_valid
+    advance = lead + jnp.where(rejected, 1, 0)
+    return z, advance.astype(jnp.int32), acc

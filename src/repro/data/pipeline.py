@@ -1,0 +1,151 @@
+"""Deterministic synthetic data pipelines.
+
+Every pipeline is a pure function of (seed, step) — the property the
+fault-tolerance story relies on: after restart the loop resumes at the saved
+step and regenerates exactly the batches it would have seen (no data-state
+files, no skew across hosts: each host materializes only its shard).
+
+Pipelines:
+  * markov_lm     — learnable token stream from a random Markov chain
+                    (unigram-Zipf mixture) for the LM train cells / examples
+  * gmm_sequences — (B, L, d) rows drawn from a GMM (diffusion toy target)
+  * blob_images   — structured "images" as patch-token sequences: K Gaussian
+                    bumps with random centers (pixel/latent diffusion stand-in)
+  * robot_reach   — expert action sequences for a 2-D reach task with
+                    observation conditioning (diffusion-policy experiments)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class MarkovLM:
+    vocab: int
+    seq_len: int
+    batch: int
+    seed: int = 0
+    order_states: int = 64
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # sparse-ish random transition matrix over latent states -> tokens
+        self.trans = rng.dirichlet(
+            np.full(self.order_states, 0.1), size=self.order_states
+        ).astype(np.float32)
+        self.emit = rng.dirichlet(
+            np.full(self.vocab, 0.05), size=self.order_states
+        ).astype(np.float32)
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        B, L = self.batch, self.seq_len
+        states = rng.integers(0, self.order_states, size=B)
+        toks = np.empty((B, L + 1), np.int32)
+        for i in range(L + 1):
+            toks[:, i] = [
+                rng.choice(self.vocab, p=self.emit[s]) for s in states
+            ]
+            states = np.array(
+                [rng.choice(self.order_states, p=self.trans[s]) for s in states]
+            )
+        return {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+
+
+@dataclasses.dataclass
+class GMMSequences:
+    """x0 rows: each of L positions drawn iid from a d-dim GMM."""
+
+    seq_len: int
+    d_data: int
+    batch: int
+    seed: int = 0
+    ncomp: int = 4
+    spread: float = 1.5
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.means = (rng.standard_normal((self.ncomp, self.d_data)) * self.spread).astype(np.float32)
+        self.scales = np.full(self.ncomp, 0.3, np.float32)
+
+    def batch_at(self, step: int) -> jnp.ndarray:
+        rng = np.random.default_rng((self.seed, step, 7))
+        comp = rng.integers(0, self.ncomp, size=(self.batch, self.seq_len))
+        eps = rng.standard_normal((self.batch, self.seq_len, self.d_data)).astype(np.float32)
+        x = self.means[comp] + self.scales[comp][..., None] * eps
+        return jnp.asarray(x)
+
+
+@dataclasses.dataclass
+class BlobImages:
+    """Images as (n_patches, d_patch) token grids with 1-3 Gaussian bumps."""
+
+    grid: int = 8  # grid x grid patches
+    patch_dim: int = 16
+    batch: int = 16
+    seed: int = 0
+
+    @property
+    def seq_len(self):
+        return self.grid * self.grid
+
+    def batch_at(self, step: int) -> jnp.ndarray:
+        rng = np.random.default_rng((self.seed, step, 11))
+        B, G, P = self.batch, self.grid, self.patch_dim
+        yy, xx = np.mgrid[0:G, 0:G].astype(np.float32) / G
+        imgs = np.zeros((B, G, G), np.float32)
+        for b in range(B):
+            for _ in range(rng.integers(1, 4)):
+                cx, cy = rng.random(2)
+                s = 0.08 + 0.12 * rng.random()
+                imgs[b] += np.exp(-(((xx - cx) ** 2 + (yy - cy) ** 2) / (2 * s * s)))
+        imgs = imgs / np.maximum(imgs.max(axis=(1, 2), keepdims=True), 1e-6) * 2 - 1
+        # lift each scalar patch value into patch_dim channels w/ fixed proj
+        proj_rng = np.random.default_rng(self.seed)
+        proj = proj_rng.standard_normal((1, P)).astype(np.float32)
+        tokens = imgs.reshape(B, G * G, 1) * proj
+        return jnp.asarray(tokens)
+
+
+@dataclasses.dataclass
+class RobotReach:
+    """Expert demos for a 2-D reach task.
+
+    obs = (start_xy, goal_xy); expert action sequence = K equal steps along
+    the straight line, with small correlated noise.  A trained diffusion
+    policy that samples actions whose cumulative sum lands near the goal
+    "succeeds" — success-rate is the Table-3 proxy metric.
+    """
+
+    horizon: int = 16
+    action_dim: int = 2
+    batch: int = 64
+    seed: int = 0
+    noise: float = 0.05
+
+    def batch_at(self, step: int):
+        rng = np.random.default_rng((self.seed, step, 13))
+        B, K = self.batch, self.horizon
+        start = rng.uniform(-1, 1, size=(B, 2)).astype(np.float32)
+        goal = rng.uniform(-1, 1, size=(B, 2)).astype(np.float32)
+        base = (goal - start)[:, None, :] / K  # (B,1,2)
+        acts = np.repeat(base, K, axis=1)
+        acts += rng.standard_normal(acts.shape).astype(np.float32) * self.noise / K
+        obs = np.concatenate([start, goal], axis=-1)
+        return jnp.asarray(acts), jnp.asarray(obs)
+
+    @staticmethod
+    def success(actions, obs, tol: float = 0.15):
+        """actions: (B, K, 2); obs: (B, 4) -> bool (B,)"""
+        start, goal = obs[:, :2], obs[:, 2:]
+        final = start + actions.sum(axis=1)
+        return jnp.linalg.norm(final - goal, axis=-1) < tol

@@ -1,0 +1,82 @@
+"""Gradient compression for the slow cross-pod links.
+
+At 2+ pods the data-parallel gradient all-reduce crosses the inter-pod
+links; int8 quantize -> psum -> dequantize cuts those bytes 4x vs f32.  The
+implementation uses partial-manual shard_map over the ``pod`` axis only
+(weights are pod-replicated) with per-tensor symmetric scaling; stochastic
+rounding keeps the compressed sync unbiased.
+
+Error characteristics are validated in tests/test_compression.py; the
+collective-byte effect is a §Perf experiment (EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_int8(x, key=None):
+    """Per-tensor symmetric int8 with optional stochastic rounding."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    y = x / scale
+    if key is not None:
+        y = y + jax.random.uniform(key, x.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def qdq(x, key=None):
+    """Quantize-dequantize (the compression error model, single device)."""
+    q, s = quantize_int8(x, key)
+    return dequantize_int8(q, s)
+
+
+def int8_psum_tree(grads, axis_name: str, key=None):
+    """Inside shard_map: int8-compress each leaf, psum over ``axis_name`` in
+    int32, dequantize.  The quantization scale is agreed globally first
+    (pmax of per-shard amax — a scalar collective) so every shard's int8
+    payload shares one scale and the sum is exact in the quantized domain."""
+
+    def one(i, g):
+        g = g.astype(jnp.float32)
+        amax = jax.lax.pmax(jnp.max(jnp.abs(g)), axis_name)
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        y = g / scale
+        if key is not None:
+            k = jax.random.fold_in(key, i)
+            y = y + jax.random.uniform(k, g.shape, minval=-0.5, maxval=0.5)
+        q = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+        acc = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        n = jax.lax.psum(jnp.ones(()), axis_name)
+        return dequantize_int8(acc, scale) / n
+
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    out = [one(i, g) for i, g in enumerate(leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_compressed_pod_allreduce(mesh, key=None):
+    """tree -> tree mean over the pod axis with int8 wire format.
+
+    Partial-manual shard_map: only ``pod`` is manual; `data`/`model` stay
+    automatic so the inner program keeps its pjit shardings.
+    """
+    assert "pod" in mesh.axis_names
+    auto = frozenset(a for a in mesh.axis_names if a != "pod")
+
+    def f(grads):
+        return int8_psum_tree(grads, "pod", key)
+
+    return jax.shard_map(
+        f, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
+        check_vma=False, axis_names={"pod"},
+    )

@@ -1,0 +1,192 @@
+"""Logical-axis -> mesh-axis rules and sharding-tree builders.
+
+Megatron-style tensor parallelism over the mesh `model` axis:
+  column-parallel: wq/wk/wv ("heads"->model), w_gate/w_up ("mlp"->model)
+  row-parallel:    wo, w_down (same axes; XLA inserts the pair's all-reduce)
+  vocab-parallel:  embedding + LM head ("vocab"->model)
+  expert-parallel: MoE expert stacks ("experts"->model)
+Replicated across `pod` (weights) — the pod axis carries data parallelism;
+batch dims shard over ("pod","data").
+
+ZeRO-1: optimizer state additionally shards its largest replicated axis over
+`data` (reduces optimizer memory ~data-fold; gather happens in the update).
+"""
+
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn.param import Boxed, is_boxed, logical_to_pspec
+
+LOGICAL_RULES: dict = {
+    "embed": None,
+    "embed2": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": None,  # raw-KV projections stay replicated (n_kv < model axis)
+    "head_dim": None,
+    "vocab": "model",
+    "experts": "model",
+    "layers": None,  # scan axis
+}
+
+BATCH_AXES = ("pod", "data")
+
+
+def batch_pspec(mesh: Mesh, *trailing) -> P:
+    axes = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+    return P(axes, *trailing)
+
+
+def param_pspecs(boxed_tree, mesh: Mesh | None = None,
+                 rules: Mapping | None = None, min_shard_elems: int = 65536):
+    """Logical axes -> PartitionSpec tree.
+
+    With ``mesh``, specs are *shape-aware*: jax requires sharded dims to
+    divide evenly (heads in {4, 8, 24, 25, 40} don't divide a 16-way model
+    axis), so non-dividing assignments are dropped and, for large tensors
+    left without a model shard, the largest evenly-dividing dim is sharded
+    instead (e.g. hymba's 25-head wq shards d_model row-parallel; the extra
+    all-reduce is the price of odd head counts on a fixed mesh).
+    """
+    rules = rules or LOGICAL_RULES
+
+    def fit(box):
+        if not is_boxed(box):
+            return P()
+        spec = logical_to_pspec(box.logical_axes, rules)
+        if mesh is None:
+            return spec
+        shape = box.shape
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+
+        def axsize(m):
+            return int(np.prod([mesh.shape[a] for a in ((m,) if isinstance(m, str) else m)]))
+
+        used = set()
+        for i, m in enumerate(entries):
+            if m is None:
+                continue
+            if shape[i] % axsize(m) != 0 or any(
+                a in used for a in ((m,) if isinstance(m, str) else m)
+            ):
+                entries[i] = None
+            else:
+                used.update((m,) if isinstance(m, str) else m)
+        total = int(np.prod(shape)) if shape else 0
+        if (
+            "model" in mesh.axis_names
+            and "model" not in used
+            and total >= min_shard_elems
+        ):
+            size = mesh.shape["model"]
+            cands = [
+                i
+                for i, (ax, dim) in enumerate(zip(box.logical_axes, shape))
+                if entries[i] is None and ax != "layers"
+                and dim % size == 0 and dim >= size
+            ]
+            if cands:
+                best = max(cands, key=lambda i: shape[i])
+                entries[best] = "model"
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    return jax.tree_util.tree_map(fit, boxed_tree, is_leaf=is_boxed)
+
+
+def shardings_from_pspecs(mesh: Mesh, pspec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def zero1_pspec(spec: P, shape, mesh: Mesh) -> P:
+    """Add `data` sharding on the first large axis a param leaves replicated.
+
+    This is ZeRO-1 for the AdamW mu/nu tensors: each data-parallel rank owns a
+    slice of optimizer state.  Falls back to the original spec when no axis
+    divides evenly.
+    """
+    if "data" not in mesh.axis_names:
+        return spec
+    dsize = mesh.shape["data"]
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % dsize == 0 and dim >= dsize:
+            entries[i] = "data"
+            return P(*entries)
+    return spec
+
+
+def fsdp_pspecs(boxed_tree, mesh: Mesh, min_shard_elems: int = 65536):
+    """ZeRO-3/FSDP layout: every large param shards its largest evenly-
+    dividing dim over the flattened ("data","model") axis pair (the whole
+    mesh acts as one DP world; XLA all-gathers weights at use and
+    reduce-scatters grads).  Collective volume is O(params), independent of
+    tokens — the right regime when TP activation all-reduces dominate
+    (see EXPERIMENTS.md §Perf, dbrx-132b train_4k)."""
+    axes = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    world = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def fit(box):
+        if not is_boxed(box):
+            return P()
+        shape = box.shape
+        if int(np.prod(shape)) < min_shard_elems:
+            return P()
+        cands = [
+            i for i, (ax, dim) in enumerate(zip(box.logical_axes, shape))
+            if ax != "layers" and dim % world == 0 and dim >= world
+        ]
+        if not cands:
+            # fall back to model-axis-only sharding
+            m = mesh.shape["model"]
+            cands = [
+                i for i, (ax, dim) in enumerate(zip(box.logical_axes, shape))
+                if ax != "layers" and dim % m == 0 and dim >= m
+            ]
+            if not cands:
+                return P()
+            best = max(cands, key=lambda i: shape[i])
+            entries = [None] * len(shape)
+            entries[best] = "model"
+            return P(*entries)
+        best = max(cands, key=lambda i: shape[i])
+        entries = [None] * len(shape)
+        entries[best] = axes
+        return P(*entries)
+
+    return jax.tree_util.tree_map(fit, boxed_tree, is_leaf=is_boxed)
+
+
+def replicated_pspecs(boxed_tree):
+    """DP-serve layout: weights fully replicated (small denoisers)."""
+    return jax.tree_util.tree_map(
+        lambda b: P(), boxed_tree, is_leaf=is_boxed
+    )
+
+
+def opt_state_pspecs(param_pspec_tree, param_shapes, mesh: Mesh, zero1: bool = True):
+    """mu/nu mirror params (optionally ZeRO-1 sharded); step is replicated."""
+
+    def one(spec, shape):
+        return zero1_pspec(spec, shape.shape, mesh) if zero1 else spec
+
+    mu = jax.tree_util.tree_map(
+        one, param_pspec_tree, param_shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return {"mu": mu, "nu": mu, "step": P()}
+
+
+def abstract_params(init_fn, key):
+    """Shape-only init (no allocation): eval_shape through the boxed tree."""
+    return jax.eval_shape(init_fn, key)

@@ -1,0 +1,42 @@
+"""Public wrapper: (B, L, H, hd) layout, padding, interpret fallback."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_mha(q, k, v, *, causal: bool = True, window: int = 0,
+              softcap: float = 0.0, block_q: int = 128, block_k: int = 128,
+              interpret: bool | None = None):
+    """q: (B, Lq, H, hd); k, v: (B, Skv, H, hd) (KV already head-repeated).
+    Returns (B, Lq, H, hd)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Lq, H, hd = q.shape
+    Skv = k.shape[1]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Lq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Skv, hd)
+
+    bq = min(block_q, Lq)
+    bk = min(block_k, Skv)
+    pad_q = (-Lq) % bq
+    pad_k = (-Skv) % bk
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+    o = flash_attention(
+        qf, kf, vf, causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_k=bk, true_seq_k=Skv, interpret=interpret,
+    )
+    o = o[:, :Lq].reshape(B, H, Lq, hd).transpose(0, 2, 1, 3)
+    return o

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0):
+    """q: (BH, Lq, dh); k, v: (BH, Skv, dh)."""
+    s = jnp.einsum("blk,bsk->bls", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / (q.shape[-1] ** 0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    Lq, Skv = q.shape[1], k.shape[1]
+    qi = jnp.arange(Lq)[:, None]
+    ki = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Lq, Skv), bool)
+    if causal:
+        mask &= ki <= qi
+    if window:
+        mask &= (qi - ki) < window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bls,bsk->blk", p, v.astype(jnp.float32)).astype(q.dtype)

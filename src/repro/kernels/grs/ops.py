@@ -1,0 +1,54 @@
+"""Jit'd public wrapper for the GRS kernel: arbitrary event shapes, padding
+to the TPU lane boundary, interpret-mode fallback on CPU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.grs.kernel import ROW_BLK, grs_pallas
+
+LANE = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def grs(u, xi, m_hat, m, sigma, event_ndim: int = 1, interpret: bool | None = None):
+    """Drop-in replacement for repro.core.grs.grs backed by the Pallas kernel.
+
+    Batch dims are collapsed to rows, event dims to a lane-padded feature
+    axis.  Padding columns are zeros in v and xi, so the reductions — and
+    therefore the accept decision and the reflection — are unchanged.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    import math
+
+    batch_shape = xi.shape[: xi.ndim - event_ndim]
+    event_shape = xi.shape[xi.ndim - event_ndim:]
+    R = math.prod(batch_shape) if batch_shape else 1
+    D = math.prod(event_shape) if event_shape else 1
+
+    xi2 = xi.reshape(R, D)
+    mh2 = m_hat.reshape(R, D)
+    m2 = m.reshape(R, D)
+    u2 = u.reshape(R)
+    s2 = jnp.broadcast_to(sigma, batch_shape).reshape(R)
+
+    pad_d = (-D) % LANE
+    pad_r = (-R) % ROW_BLK
+    if pad_d:
+        zcols = lambda a: jnp.pad(a, ((0, 0), (0, pad_d)))
+        xi2, mh2, m2 = zcols(xi2), zcols(mh2), zcols(m2)
+    if pad_r:
+        zrows = lambda a: jnp.pad(a, ((0, pad_r), (0, 0)))
+        xi2, mh2, m2 = zrows(xi2), zrows(mh2), zrows(m2)
+        u2 = jnp.pad(u2, (0, pad_r))
+        s2 = jnp.pad(s2, (0, pad_r), constant_values=1.0)
+
+    z, acc = grs_pallas(u2, s2, xi2, mh2, m2, interpret=interpret)
+    z = z[:R, :D].reshape(batch_shape + event_shape)
+    acc = acc[:R].reshape(batch_shape).astype(bool)
+    return z, acc

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the GRS kernel — delegates to the core reference
+implementation (repro.core.grs), which Thm-12 statistical tests validate."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.grs import grs as core_grs
+
+
+def grs_ref(u, sigma, xi, m_hat, m):
+    """Same (R, D) layout as the kernel."""
+    z, acc = core_grs(u, xi, m_hat, m, sigma, event_ndim=1)
+    return z, acc.astype(jnp.int32)

@@ -1,0 +1,31 @@
+"""Public wrapper with padding + interpret fallback."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import ssm_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def linear_scan(a, b, block_t: int = 256, block_d: int = 512,
+                interpret: bool | None = None):
+    """a, b: (B, L, D) arbitrary sizes; returns the full state trajectory."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, L, D = a.shape
+    bt = min(block_t, L)
+    bd = min(block_d, D)
+    pad_t = (-L) % bt
+    pad_d = (-D) % bd
+    if pad_t or pad_d:
+        # a=1, b=0 padding keeps the carry intact through padded steps
+        a = jnp.pad(a, ((0, 0), (0, pad_t), (0, pad_d)), constant_values=1.0)
+        a = a.at[:, :, D:].set(0.0) if pad_d else a
+        b = jnp.pad(b, ((0, 0), (0, pad_t), (0, pad_d)))
+    h = ssm_scan(a, b, block_t=bt, block_d=bd, interpret=interpret)
+    return h[:, :L, :D]

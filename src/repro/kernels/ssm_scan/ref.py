@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: associative scan over the same recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(a, b):
+    """a, b: (B, L, D) -> h with h_t = a_t h_{t-1} + b_t, h_{-1} = 0."""
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=1
+    )
+    return h.astype(a.dtype)

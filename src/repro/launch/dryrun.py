@@ -1,0 +1,466 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Only the dry-run forces 512 host devices; tests/benches see the real 1.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and extract the roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --cells all
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi  --cells tinyllama-1.1b:train_4k
+
+Per-cell results (memory analysis, cost analysis, collective bytes, roofline
+terms) are dumped to results/dryrun/<mesh>/<arch>__<shape>.json; existing
+results are skipped so the sweep is resumable.  EXPERIMENTS.md §Dry-run and
+§Roofline are generated from these files by repro.analysis.report.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline as rl
+from repro.analysis import analytic as an
+from repro.configs.base import ALL_SHAPES, InputShape, ModelConfig
+from repro.configs.registry import (
+    ARCHS, PAPER_MODELS, get_config, get_denoiser_config, all_cells,
+)
+from repro.core.asd import asd_sample_batched
+from repro.core.schedules import ddpm as ddpm_schedule
+from repro.distributed.sharding import (
+    LOGICAL_RULES, batch_pspec, fsdp_pspecs, opt_state_pspecs, param_pspecs,
+    replicated_pspecs, shardings_from_pspecs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm as lm_lib
+from repro.models.diffusion import denoiser_init, make_ddpm_model_fn
+from repro.nn.param import unbox, logical_axes_tree
+from repro.training.optimizer import adamw, cosine_schedule
+from repro.training.train_step import make_train_step
+
+# accumulation factor for the train cells (keeps per-device activation
+# memory of one microbatch within HBM; see EXPERIMENTS.md §Perf)
+TRAIN_ACCUM = 8
+
+
+def _sds(shape, dtype, sharding):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _maybe_batch_spec(mesh, batch: int, *trailing):
+    """Shard the batch dim over (pod, data) when divisible, else replicate."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if batch % max(n, 1) == 0 and batch >= n:
+        return P(axes, *trailing)
+    return P(None, *trailing)
+
+
+def _abstract_params(cfg: ModelConfig, mesh, profile: str = "tp"):
+    boxed = jax.eval_shape(lambda k: lm_lib.lm_init(k, cfg), jax.random.PRNGKey(0))
+    if profile == "fsdp":
+        specs = fsdp_pspecs(boxed, mesh)
+    elif profile == "dp":
+        specs = replicated_pspecs(boxed)
+    else:
+        specs = param_pspecs(boxed, mesh)
+    shardings = shardings_from_pspecs(mesh, specs)
+    abstract = jax.tree_util.tree_map(
+        lambda b: jax.ShapeDtypeStruct(b.shape, b.dtype),
+        unbox(boxed),
+    )
+    abstract = jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract, shardings,
+    )
+    return abstract, specs, shardings
+
+
+def _param_counts(cfg: ModelConfig, abstract) -> tuple[int, int]:
+    """(total, active) parameter counts; active discounts unrouted experts."""
+    total = active = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(abstract)
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "moe" in key and "router" not in key and cfg.n_experts:
+            active += n * cfg.top_k // cfg.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def _batch_specs(cfg: ModelConfig, shape: InputShape, mesh, profile: str = "tp",
+                 accum: int | None = None):
+    """Abstract train batch, microbatched: leaves (accum, micro, ...)."""
+    B, L = shape.global_batch, shape.seq_len
+    accum = accum if accum is not None else (TRAIN_ACCUM if B % TRAIN_ACCUM == 0 else 1)
+    micro = B // accum
+    if profile == "fsdp":
+        axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        mspec = P(axes) if micro % n == 0 and micro >= n else _maybe_batch_spec(mesh, micro)
+    else:
+        mspec = _maybe_batch_spec(mesh, micro)
+
+    def tok_sds(trailing=(), dtype=jnp.int32):
+        if accum == 1:  # no microbatch axis — train_step runs unsplit
+            return _sds((micro, L) + trailing, dtype,
+                        NamedSharding(mesh, P(*mspec)))
+        spec = P(*((None,) + tuple(mspec)))  # (accum axis replicated, micro sharded)
+        return _sds((accum, micro, L) + trailing, dtype, NamedSharding(mesh, spec))
+
+    batch = {}
+    if cfg.embed_inputs:
+        batch["tokens"] = tok_sds()
+    else:
+        batch["tokens"] = tok_sds((cfg.d_model,), jnp.bfloat16)
+    batch["labels"] = tok_sds()
+    if cfg.family == "vlm":
+        lead = (micro,) if accum == 1 else (accum, micro)
+        vspec = P(*mspec) if accum == 1 else P(*((None,) + tuple(mspec)))
+        batch["vision"] = _sds(
+            lead + (cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16,
+            NamedSharding(mesh, vspec),
+        )
+    return batch, accum
+
+
+def _cache_specs(params_abstract, cfg: ModelConfig, batch: int, max_len: int, mesh):
+    caches = jax.eval_shape(
+        lambda: lm_lib.lm_cache_init(
+            jax.tree_util.tree_map(lambda a: jnp.zeros(a.shape, a.dtype), params_abstract),
+            cfg, batch, max_len,
+        )
+    )
+
+    def spec_for(leaf):
+        # leaves are (n_repeats, B, ...) stacked over the scanned layer axis
+        bspec = _maybe_batch_spec(mesh, batch)
+        trailing = (None,) * (leaf.ndim - 2)
+        return P(*((None,) + tuple(bspec) + trailing))
+
+    specs = jax.tree_util.tree_map(spec_for, caches)
+    return jax.tree_util.tree_map(
+        lambda l, s: _sds(l.shape, l.dtype, NamedSharding(mesh, s)), caches, specs
+    )
+
+
+# --------------------------------------------------------------- cell builders
+
+
+def build_train_cell(cfg: ModelConfig, shape: InputShape, mesh,
+                     profile: str = "tp", accum: int | None = None):
+    params_abs, pspecs, _ = _abstract_params(cfg, mesh, profile)
+    opt = adamw(cosine_schedule(3e-4, 2000, 100_000))
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    opt_specs = opt_state_pspecs(
+        pspecs, params_abs, mesh, zero1=profile != "fsdp"
+    )
+    opt_abs = jax.tree_util.tree_map(
+        lambda a, s: _sds(a.shape, a.dtype, NamedSharding(mesh, s)),
+        opt_abs,
+        {"mu": opt_specs["mu"], "nu": opt_specs["nu"], "step": opt_specs["step"]},
+    )
+    batch_abs, accum = _batch_specs(cfg, shape, mesh, profile, accum)
+    impl = "chunked" if shape.seq_len > 8192 else "naive"
+    sp_shard = None
+    if profile == "sp":
+        bspec = _maybe_batch_spec(mesh, shape.global_batch // accum)
+        ent = tuple(bspec) or (None,)
+        sp_shard = NamedSharding(mesh, P(ent[0], "model"))
+
+    def loss_fn(params, batch, rng):
+        return lm_lib.lm_loss(params, batch, cfg, impl=impl, chunk=2048,
+                              sp=sp_shard)
+
+    step_fn = make_train_step(loss_fn, opt, accum=accum, pre_split=True)
+    rng_abs = _sds((2,), jnp.uint32, NamedSharding(mesh, P()))
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    return jitted, (params_abs, opt_abs, batch_abs, rng_abs)
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: InputShape, mesh,
+                       profile: str = "tp"):
+    params_abs, _, _ = _abstract_params(cfg, mesh, profile)
+    B, L = shape.global_batch, shape.seq_len
+    caches_abs = _cache_specs(params_abs, cfg, B, L, mesh)
+    bspec = _maybe_batch_spec(mesh, B)
+    if cfg.embed_inputs:
+        toks = _sds((B, L), jnp.int32, NamedSharding(mesh, bspec))
+    else:
+        toks = _sds((B, L, cfg.d_model), jnp.bfloat16,
+                    NamedSharding(mesh, P(*(tuple(bspec) + (None, None)))))
+    extras = {}
+    if cfg.family == "vlm":
+        extras["vision"] = _sds(
+            (B, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16,
+            NamedSharding(mesh, P(*(tuple(bspec) + (None, None)))),
+        )
+
+    sp_shard = None
+    if profile == "sp":
+        ent = tuple(bspec) or (None,)
+        sp_shard = NamedSharding(mesh, P(ent[0], "model"))
+
+    def prefill(params, tokens, caches, vision=None):
+        return lm_lib.lm_prefill(params, tokens, caches, cfg, vision=vision,
+                                 impl="chunked", chunk=2048, sp=sp_shard)
+
+    jitted = jax.jit(prefill, donate_argnums=(2,))
+    args = (params_abs, toks, caches_abs)
+    if extras:
+        return jitted, args + (extras["vision"],)
+    return jitted, args
+
+
+def build_decode_cell(cfg: ModelConfig, shape: InputShape, mesh):
+    params_abs, _, _ = _abstract_params(cfg, mesh)
+    B, L = shape.global_batch, shape.seq_len
+    caches_abs = _cache_specs(params_abs, cfg, B, L, mesh)
+    bspec = _maybe_batch_spec(mesh, B)
+    if cfg.embed_inputs:
+        tok = _sds((B,), jnp.int32, NamedSharding(mesh, bspec))
+    else:
+        tok = _sds((B, 1, cfg.d_model), jnp.bfloat16,
+                   NamedSharding(mesh, P(*(tuple(bspec) + (None, None)))))
+    pos = _sds((), jnp.int32, NamedSharding(mesh, P()))
+
+    def serve_step(params, token, caches, pos):
+        return lm_lib.lm_decode_step(params, token, caches, pos, cfg)
+
+    jitted = jax.jit(serve_step, donate_argnums=(2,))
+    return jitted, (params_abs, tok, caches_abs, pos)
+
+
+def build_asd_cell(name: str, mesh, theta: int = 8, K: int = 1000,
+                   n_chains: int = 64, profile: str = "tp",
+                   noise_mode: str = "buffer", keep_trajectory: bool = True):
+    """The paper technique's own dry-run cell: the full fused batched-ASD
+    sampling program (while_loop of speculate->batched-verify->commit)."""
+    dc = get_denoiser_config(name)
+    if name == "paper-diffusion-policy":
+        K, n_chains = 100, max(n_chains, 512)
+    boxed = jax.eval_shape(lambda k: denoiser_init(k, dc), jax.random.PRNGKey(0))
+    if profile == "dp":
+        specs = replicated_pspecs(boxed)
+    else:
+        specs = param_pspecs(boxed, mesh)
+    shardings = shardings_from_pspecs(mesh, specs)
+    params_abs = jax.tree_util.tree_map(
+        lambda b, s: _sds(b.shape, b.dtype, s), unbox(boxed), shardings
+    )
+    sched = ddpm_schedule(K)
+    if profile == "dp":
+        axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        bspec = P(axes) if n_chains % n == 0 else _maybe_batch_spec(mesh, n_chains)
+    else:
+        bspec = _maybe_batch_spec(mesh, n_chains)
+    y0 = _sds((n_chains, dc.seq_len, dc.d_data), jnp.float32,
+              NamedSharding(mesh, P(*(tuple(bspec) + (None, None)))))
+    key = _sds((n_chains, 2), jnp.uint32,
+               NamedSharding(mesh, P(*(tuple(bspec) + (None,)))))
+
+    def sample(params, y0, keys):
+        model_fn = make_ddpm_model_fn(params, dc)
+        res = asd_sample_batched(model_fn, sched, y0, keys[0], theta,
+                                 eager_head=True, noise_mode=noise_mode,
+                                 keep_trajectory=keep_trajectory)
+        return res.sample, res.rounds, res.head_calls
+
+    jitted = jax.jit(sample)
+    return jitted, (params_abs, y0, key), dc, n_chains
+
+
+# --------------------------------------------------------------------- main
+
+
+# hillclimb variants (EXPERIMENTS.md §Perf): name -> build options
+VARIANTS = {
+    "": {},
+    "fsdp": dict(profile="fsdp"),
+    "dp": dict(profile="dp"),
+    "pad48": dict(cfg_replace=dict(n_heads=48)),
+    # Megatron-SP: sequence-sharded residual stream between blocks
+    "sp": dict(profile="sp"),
+    "pad48sp": dict(cfg_replace=dict(n_heads=48), profile="sp"),
+    "dp256": dict(profile="dp", n_chains=256),
+    "memopt": dict(noise_mode="counter", keep_trajectory=False),
+    "dp256memopt": dict(profile="dp", n_chains=256, noise_mode="counter",
+                        keep_trajectory=False),
+    "accum2": dict(accum=2),
+    "accum32": dict(accum=32),
+    # FSDP re-gathers weights per microbatch; at accum=1 the gather happens
+    # once per pass and traffic is O(params), not O(tokens*d)
+    "fsdpa1": dict(profile="fsdp", accum=1),
+}
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, out_dir: str,
+             variant: str = ""):
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{variant}" if variant else ""
+    out_path = os.path.join(out_dir, f"{arch}__{shape_name}{suffix}.json")
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            prev = json.load(f)
+        if prev.get("status") == "ok":
+            print(f"[skip] {arch} x {shape_name}{suffix} ({mesh_name}) done")
+            return prev
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "variant": variant, "status": "error", "ts": time.time()}
+    t0 = time.time()
+    opts = dict(VARIANTS[variant])
+    cfg_replace = opts.pop("cfg_replace", None)
+    try:
+        if arch in PAPER_MODELS:
+            n_chains = opts.pop("n_chains", 64)
+            jitted, args, dc, n_chains = build_asd_cell(
+                arch, mesh, n_chains=n_chains, **opts)
+            cfg = dc.backbone
+            shape_tokens = n_chains * dc.seq_len
+            kind = "serve"
+        else:
+            cfg = get_config(arch)
+            if cfg_replace:
+                cfg = dataclasses.replace(cfg, **cfg_replace)
+            shape = next(s for s in ALL_SHAPES if s.name == shape_name)
+            if shape.kind == "train":
+                jitted, args = build_train_cell(cfg, shape, mesh, **opts)
+            elif shape.kind == "prefill":
+                jitted, args = build_prefill_cell(cfg, shape, mesh, **opts)
+            else:
+                jitted, args = build_decode_cell(cfg, shape, mesh)
+            shape_tokens = (
+                shape.global_batch * shape.seq_len
+                if shape.kind != "decode" else shape.global_batch
+            )
+            kind = "train" if shape.kind == "train" else "serve"
+
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        hlo = rl.analyze(compiled)  # HLO-sourced (collectives trip-scaled)
+        mem = rl.memory_stats(compiled)
+        n_abs = args[0]
+        total_p, active_p = _param_counts(cfg, n_abs)
+        n_chips = int(mesh.devices.size)
+
+        if arch in PAPER_MODELS:
+            # one verification round of the ASD loop: 1+theta denoiser fwds
+            nch = shape_tokens // dc.seq_len
+            fwd = an.model_fwd_flops(cfg, dc.seq_len)
+            cost = an.CellCost(
+                flops=nch * 9 * fwd,
+                hbm_bytes=total_p * 2 * 2 + nch * 9 * dc.seq_len * cfg.n_layers * cfg.d_model * 2 * 2,
+                model_flops=2.0 * total_p * nch * 9 * dc.seq_len,
+                notes=f"one ASD round (theta=8 +1 head), {nch} chains",
+            )
+        else:
+            cost = an.analyze_cell(
+                cfg, shape, total_p,
+                accum=opts.get("accum") or TRAIN_ACCUM, remat=cfg.remat)
+        t_compute = cost.flops / n_chips / rl.PEAK_FLOPS_BF16
+        t_memory = cost.hbm_bytes / n_chips / rl.HBM_BW
+        t_coll = hlo.t_collective  # per-chip, trip-scaled
+        terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        bound = max(terms.values())
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            devices=n_chips,
+            params_total=total_p,
+            params_active=active_p,
+            tokens=shape_tokens,
+            analytic=cost.as_dict(),
+            model_flops=cost.model_flops,
+            useful_flops_ratio=(cost.model_flops / cost.flops) if cost.flops else None,
+            roofline={
+                "t_compute_s": t_compute,
+                "t_memory_s": t_memory,
+                "t_collective_s": t_coll,
+                "dominant": dominant,
+                "bound_s": bound,
+                "roofline_fraction": t_compute / bound if bound else None,
+            },
+            hlo=hlo.as_dict(),
+            memory=mem,
+        )
+        print(
+            f"[ok] {arch} x {shape_name} ({mesh_name}) "
+            f"compile={t_compile:.1f}s dominant={dominant} "
+            f"t=({t_compute:.2e},{t_memory:.2e},{t_coll:.2e})s "
+            f"frac={t_compute/bound if bound else 0:.2f} "
+            f"temp={mem.get('temp_bytes', 0)/2**30:.2f}GiB"
+        )
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=20)
+        print(f"[FAIL] {arch} x {shape_name} ({mesh_name}): {rec['error']}")
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--cells", default="all",
+                    help='"all", "paper", or comma list of arch:shape')
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    out_dir = os.path.join(args.out, args.mesh)
+
+    todo = []
+    if args.cells in ("all", "paper"):
+        if args.cells == "all":
+            for arch, shape, skipped in all_cells():
+                if skipped:
+                    path = os.path.join(out_dir, f"{arch}__{shape.name}.json")
+                    os.makedirs(out_dir, exist_ok=True)
+                    if not os.path.exists(path):
+                        with open(path, "w") as f:
+                            json.dump({
+                                "arch": arch, "shape": shape.name,
+                                "mesh": args.mesh, "status": "skipped",
+                                "reason": "long_500k requires sub-quadratic "
+                                          "attention (DESIGN.md §Arch-applicability)",
+                            }, f, indent=1)
+                    continue
+                todo.append((arch, shape.name))
+        for pm in PAPER_MODELS:
+            todo.append((pm, "asd"))
+    else:
+        for cell in args.cells.split(","):
+            parts = cell.split(":")
+            arch, shape = parts[0], parts[1]
+            variant = parts[2] if len(parts) > 2 else ""
+            todo.append((arch, shape, variant))
+
+    n_ok = 0
+    for item in todo:
+        arch, shape = item[0], item[1]
+        variant = item[2] if len(item) > 2 else ""
+        rec = run_cell(arch, shape, mesh, args.mesh, out_dir, variant)
+        n_ok += rec.get("status") == "ok"
+    print(f"done: {n_ok}/{len(todo)} cells ok -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production meshes.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Under the dry-run's forced 512 host devices the
+single-pod mesh uses the first 256; on real hardware the counts match the
+slice exactly.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "the dry-run launcher must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import"
+        )
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    assert len(devices) >= n, (len(devices), n)
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)

@@ -1,0 +1,173 @@
+"""Group-scan decoder: the composable backbone shared by all 13 configs.
+
+The layer stack is expressed as ``n_repeats`` iterations of a *layer group*
+(cfg.group) — the smallest repeating unit:
+
+  dense / moe / audio : (attn,)                      x L
+  gemma2              : (attn[window], attn[full])   x L/2
+  xlstm               : (mlstm, slstm)               x L/2
+  hymba               : (hymba,)                     x L  (+3 global layers)
+  llama-3.2-vision    : (attn x4, xattn)             x L/5
+
+Parameters of each group member are stacked over repeats and the stack is a
+single ``lax.scan`` — HLO size is O(group), independent of depth, which keeps
+the 80-cell dry-run compile-bound feasible and mirrors MaxText practice.
+Per-repeat layer variation (hymba's 3 global-attention layers) rides along as
+scanned window arrays.  ``jax.checkpoint`` wraps the group body when
+cfg.remat (activation recomputation for the train cells).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockDesc, ModelConfig
+from repro.models.blocks import BLOCKS
+from repro.nn.param import stack_layers, split_keys
+
+
+def _window_array(cfg: ModelConfig, desc: BlockDesc):
+    if desc.window_per_repeat is not None:
+        arr = np.asarray(desc.window_per_repeat, np.int32)
+        assert arr.shape == (cfg.n_repeats,), (arr.shape, cfg.n_repeats)
+        return jnp.asarray(arr)
+    return jnp.full((cfg.n_repeats,), desc.window, jnp.int32)
+
+
+def decoder_init(key, cfg: ModelConfig):
+    """Returns {"g0": stacked-params, "g1": ...} — one entry per group member."""
+    params = {}
+    for gi, desc in enumerate(cfg.group):
+        init_fn = BLOCKS[desc.kind][0]
+        per_layer = [
+            init_fn(jax.random.fold_in(key, gi * 10_000 + r), cfg, desc)
+            for r in range(cfg.n_repeats)
+        ]
+        params[f"g{gi}"] = stack_layers(per_layer)
+    return params
+
+
+def _group_fwd(cfg: ModelConfig, ctx):
+    """Builds the per-repeat body fn: (x, (slices, windows)) -> (x, aux)."""
+
+    sp = ctx.get("sp")  # NamedSharding for sequence-parallel residuals
+
+    def body(x, slices_windows):
+        slices, windows = slices_windows
+        aux_sum = jnp.zeros((), jnp.float32)
+        for gi, desc in enumerate(cfg.group):
+            fwd = BLOCKS[desc.kind][1]
+            x, aux = fwd(slices[f"g{gi}"], x, cfg, desc, ctx, windows[gi])
+            if sp is not None:
+                # Megatron-SP: keep the residual stream sequence-sharded over
+                # the model axis between blocks; XLA turns the block-boundary
+                # all-reduces into reduce-scatter + all-gather (half traffic)
+                x = jax.lax.with_sharding_constraint(x, sp)
+            if "moe_aux_loss" in aux:
+                aux_sum = aux_sum + aux["moe_aux_loss"]
+        return x, aux_sum
+
+    return body
+
+
+def decoder_fwd(params, x, cfg: ModelConfig, ctx):
+    """x: (B, L, d_model) -> (B, L, d_model), summed moe aux loss."""
+    windows = jnp.stack([_window_array(cfg, d) for d in cfg.group])  # (G, R)
+    body = _group_fwd(cfg, ctx)
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.dots_saveable)
+
+    if cfg.scan_layers:
+        def scan_body(x, xs):
+            return body(x, xs)
+
+        x, aux = jax.lax.scan(scan_body, x, (params, windows.T))
+        return x, aux.sum()
+    aux_total = jnp.zeros((), jnp.float32)
+    for r in range(cfg.n_repeats):
+        slices = jax.tree_util.tree_map(lambda p: p[r], params)
+        x, aux = body(x, (slices, windows[:, r]))
+        aux_total = aux_total + aux
+    return x, aux_total
+
+
+# ------------------------------------------------------------------ caches
+
+
+def decoder_cache_init(params, cfg: ModelConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16):
+    caches = {}
+    for gi, desc in enumerate(cfg.group):
+        cache_fn = BLOCKS[desc.kind][2]
+        one = lambda r: cache_fn(
+            jax.tree_util.tree_map(lambda p: p[r], params[f"g{gi}"]),
+            cfg, desc, batch, max_len, dtype,
+        )
+        per = [one(r) for r in range(cfg.n_repeats)]
+        caches[f"g{gi}"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *per
+        )
+    return caches
+
+
+def decoder_prefill(params, x, caches, cfg: ModelConfig, ctx):
+    """Full-sequence forward that fills all caches."""
+    windows = jnp.stack([_window_array(cfg, d) for d in cfg.group])  # (G,R)
+
+    sp = ctx.get("sp")
+
+    def body(x, xs):
+        slices, cache_slices, wins = xs
+        new_caches = {}
+        for gi, desc in enumerate(cfg.group):
+            prefill = BLOCKS[desc.kind][3]
+            x, new_c, _ = prefill(
+                slices[f"g{gi}"], x, cache_slices[f"g{gi}"], cfg, desc, ctx, wins[gi]
+            )
+            if sp is not None:
+                x = jax.lax.with_sharding_constraint(x, sp)
+            new_caches[f"g{gi}"] = new_c
+        return x, new_caches
+
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body, x, (params, caches, windows.T))
+        return x, new_caches
+    outs = []
+    for r in range(cfg.n_repeats):
+        slices = jax.tree_util.tree_map(lambda p: p[r], params)
+        cs = jax.tree_util.tree_map(lambda c: c[r], caches)
+        x, nc = body(x, (slices, cs, windows[:, r]))
+        outs.append(nc)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+    return x, stacked
+
+
+def decoder_step(params, x1, caches, pos, cfg: ModelConfig):
+    """Single-token decode through the whole stack."""
+    windows = jnp.stack([_window_array(cfg, d) for d in cfg.group])
+
+    def body(x, xs):
+        slices, cache_slices, wins = xs
+        new_caches = {}
+        for gi, desc in enumerate(cfg.group):
+            step = BLOCKS[desc.kind][4]
+            x, new_c = step(
+                slices[f"g{gi}"], x, cache_slices[f"g{gi}"], pos, cfg, desc, wins[gi]
+            )
+            new_caches[f"g{gi}"] = new_c
+        return x, new_caches
+
+    if cfg.scan_layers:
+        x1, new_caches = jax.lax.scan(body, x1, (params, caches, windows.T))
+        return x1, new_caches
+    outs = []
+    for r in range(cfg.n_repeats):
+        slices = jax.tree_util.tree_map(lambda p: p[r], params)
+        cs = jax.tree_util.tree_map(lambda c: c[r], caches)
+        x1, nc = body(x1, (slices, cs, windows[:, r]))
+        outs.append(nc)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+    return x1, stacked

@@ -1,0 +1,137 @@
+"""Diffusion denoiser head: any backbone as a DDPM mean oracle.
+
+``DenoiserConfig`` wraps a backbone ``ModelConfig`` (run *non-causally*) with
+a continuous data space (seq_len x d_data).  The model predicts
+x0_hat = E[x0 | y_t] — exactly the ``g``/``m`` oracle ASD consumes (paper
+Remark 2 / Eq. 4).  This is the DiT-style stand-in for the paper's UNet
+denoisers and the diffusion-policy action denoiser (DESIGN.md §4, §9.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.decoder import decoder_init, decoder_fwd
+from repro.nn.layers import rmsnorm_init, rmsnorm_apply, sinusoidal_embed
+from repro.nn.param import param, zeros_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DenoiserConfig:
+    backbone: ModelConfig
+    seq_len: int  # number of data tokens (action steps / latent patches)
+    d_data: int  # channels per token
+    d_cond: int = 0  # conditioning vector dim (diffusion-policy observations)
+    time_log: bool = False  # log-transform t before embedding (SL time)
+    time_dim: int = 256
+
+
+def denoiser_init(key, dc: DenoiserConfig):
+    cfg = dc.backbone
+    ks = jax.random.split(key, 7)
+    p = {
+        "in_proj": param(ks[0], (dc.d_data, cfg.d_model), (None, "embed")),
+        "t_mlp1": param(ks[1], (dc.time_dim, cfg.d_model), (None, "embed")),
+        "t_mlp2": param(ks[2], (cfg.d_model, cfg.d_model), ("embed", "embed2")),
+        "decoder": decoder_init(ks[3], cfg),
+        "final_norm": rmsnorm_init(ks[4], cfg.d_model),
+        "out_proj": param(ks[5], (cfg.d_model, dc.d_data), ("embed", None), zeros_init()),
+    }
+    if dc.d_cond:
+        p["cond_proj"] = param(ks[6], (dc.d_cond, cfg.d_model), (None, "embed"))
+    return p
+
+
+def denoiser_fwd(params, t, y, dc: DenoiserConfig, cond=None, impl: str = "naive",
+                 chunk: int = 1024):
+    """t: (B,) noise level / step; y: (B, L, d_data) -> x0_hat (B, L, d_data).
+    cond: optional (B, d_cond) observation vector (diffusion policy)."""
+    cfg = dc.backbone
+    cdt = jnp.dtype(cfg.compute_dtype)
+    tf = t.astype(jnp.float32)
+    if dc.time_log:
+        tf = jnp.log1p(jnp.maximum(tf, 0.0))
+    temb = sinusoidal_embed(tf * 100.0, dc.time_dim)
+    temb = jnp.tanh(temb @ params["t_mlp1"].astype(jnp.float32))
+    temb = temb @ params["t_mlp2"].astype(jnp.float32)  # (B, d_model)
+
+    x = y.astype(cdt) @ params["in_proj"].astype(cdt)
+    x = x + sinusoidal_embed(jnp.arange(dc.seq_len), cfg.d_model).astype(cdt)
+    x = x + temb[:, None, :].astype(cdt)
+    if cond is not None:
+        cemb = cond.astype(cdt) @ params["cond_proj"].astype(cdt)
+        x = x + cemb[..., None, :]
+    ctx = dict(causal=False, positions=jnp.arange(dc.seq_len), vision=None,
+               impl=impl, chunk=chunk)
+    x, _ = decoder_fwd(params["decoder"], x, cfg, ctx)
+    x = rmsnorm_apply(params["final_norm"], x)
+    return (x @ params["out_proj"].astype(cdt)).astype(jnp.float32)
+
+
+def _bcast_cond(cond, m):
+    return None if cond is None else jnp.broadcast_to(cond, (m,) + cond.shape[-1:])
+
+
+def make_sl_model_fn(params, dc: DenoiserConfig, cond=None):
+    """ASD/sequential-sampler oracle for the *SL* parametrization.
+
+    The network is trained on standardized inputs x_in = y / sqrt(t^2 + t)
+    (unit-ish variance for unit-variance data); returns E[x0 | y_t].
+    ``cond``: optional (d_cond,) per-chain conditioning (vmap adds batch).
+    """
+
+    def model_fn(t, y):
+        t32 = jnp.maximum(t.astype(jnp.float32), 1e-6)
+        scale = jnp.sqrt(t32**2 + t32)
+        y_in = y / scale.reshape(t.shape + (1,) * (y.ndim - t.ndim))
+        return denoiser_fwd(params, t32, y_in, dc, cond=_bcast_cond(cond, y.shape[0]))
+
+    return model_fn
+
+
+def make_ddpm_model_fn(params, dc: DenoiserConfig, cond=None):
+    """x0-predicting oracle in the DDPM parametrization (t = step index)."""
+
+    def model_fn(t, y):
+        return denoiser_fwd(
+            params, t.astype(jnp.float32), y, dc, cond=_bcast_cond(cond, y.shape[0])
+        )
+
+    return model_fn
+
+
+def ddpm_denoiser_loss(params, dc: DenoiserConfig, x0, key, abar, cond=None):
+    """Standard DDPM x0-prediction loss.  x0: (B, L, d_data); abar: (K,)."""
+    B = x0.shape[0]
+    K = abar.shape[0]
+    kt, kn = jax.random.split(key)
+    s = jax.random.randint(kt, (B,), 0, K)
+    ab = abar[s][:, None, None]
+    eps = jax.random.normal(kn, x0.shape)
+    y = jnp.sqrt(ab) * x0 + jnp.sqrt(1.0 - ab) * eps
+    pred = denoiser_fwd(params, s.astype(jnp.float32), y, dc, cond=cond)
+    return jnp.mean((pred - x0) ** 2)
+
+
+def sl_denoiser_loss(params, dc: DenoiserConfig, x0, key, t_min=1e-2,
+                     t_max=100.0, cond=None):
+    """SL-parametrized x0-prediction loss with standardized inputs.
+
+    y_t = t x0 + sqrt(t) xi; the net sees y_t / sqrt(t^2+t) and log1p(t).
+    t is sampled log-uniformly over the grid range.
+    """
+    B = x0.shape[0]
+    kt, kn = jax.random.split(key)
+    logt = jax.random.uniform(
+        kt, (B,), minval=jnp.log(t_min), maxval=jnp.log(t_max)
+    )
+    t = jnp.exp(logt)
+    xi = jax.random.normal(kn, x0.shape)
+    y = t[:, None, None] * x0 + jnp.sqrt(t)[:, None, None] * xi
+    scale = jnp.sqrt(t**2 + t)[:, None, None]
+    pred = denoiser_fwd(params, t, y / scale, dc, cond=cond)
+    return jnp.mean((pred - x0) ** 2)

@@ -1,0 +1,286 @@
+"""Attention: GQA + RoPE + sliding window + logit softcap + KV cache.
+
+Design choices (see DESIGN.md §5):
+  * K/V are repeated to the full head count right after projection and the
+    head axis is sharded over the mesh ``model`` axis everywhere (train,
+    prefill, decode).  This keeps one sharding rule for every arch in the zoo
+    (n_kv in {4,5,8,24} never divides a 16-way model axis).
+  * Two softmax implementations: "naive" (materializes (L,S) scores; fine for
+    smoke tests and short seqs) and "chunked" (online-softmax scan over KV
+    blocks, O(L*block) memory — the pure-jnp reference of the Pallas flash
+    kernel, used for the 32k prefill cells).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.layers import apply_rope, softcap as apply_softcap
+from repro.nn.param import param, zeros_init, lecun_normal
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- params
+
+
+def attn_init(key, cfg: ModelConfig, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": param(ks[0], (d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": param(ks[1], (d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": param(ks[2], (d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": param(ks[3], (h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = param(ks[4], (h, hd), ("heads", "head_dim"), zeros_init())
+        p["bk"] = param(ks[5], (kv, hd), ("kv_heads", "head_dim"), zeros_init())
+        p["bv"] = param(ks[6], (kv, hd), ("kv_heads", "head_dim"), zeros_init())
+    if cross:
+        # tanh gate on the cross-attn residual (llama-3.2-vision style)
+        p["gate"] = param(ks[7], (), (), zeros_init())
+    return p
+
+
+def _project_qkv(params, xq, xkv, cfg: ModelConfig, q_positions, kv_positions,
+                 repeat_kv: bool = True):
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    cdt = xq.dtype
+    q = jnp.einsum("bld,dhk->blhk", xq, params["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, params["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, params["wv"].astype(cdt))
+    if "bq" in params:
+        q = q + params["bq"].astype(cdt)
+        k = k + params["bk"].astype(cdt)
+        v = v + params["bv"].astype(cdt)
+    if cfg.pos_embed == "rope" and q_positions is not None:
+        q = apply_rope(q, q_positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    # repeat KV to full heads (GQA) — head axis shards over `model`.
+    # Decode caches keep the raw n_kv heads (repeat_kv=False): the 32k/500k
+    # caches are the HBM budget; grouped attention happens at step time.
+    reps = h // kv
+    if repeat_kv and reps > 1:
+        k = jnp.repeat(k, reps, axis=2)
+        v = jnp.repeat(v, reps, axis=2)
+    return q, k, v
+
+
+# ------------------------------------------------------------------ masks
+
+
+def attn_mask(q_pos, kv_pos, causal: bool, window):
+    """bool (Lq, Skv): True = attend.  ``window`` may be a traced scalar
+    (per-layer windows scanned over the layer stack); <= 0 means full."""
+    qp = q_pos[:, None]
+    kp = kv_pos[None, :]
+    m = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        m &= kp <= qp
+    w = jnp.asarray(window, jnp.int32)
+    m &= (w <= 0) | ((qp - kp) < w)
+    return m
+
+
+# ----------------------------------------------------------------- softmax
+
+
+def attn_core_naive(q, k, v, mask, cap: float):
+    """q: (B,L,H,hd); k,v: (B,S,H,hd); mask: (L,S) or None."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("blhk,bshk->bhls", q, k) / jnp.sqrt(hd).astype(q.dtype)
+    scores = apply_softcap(scores, cap)
+    if mask is not None:
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhls,bshk->blhk", probs, v)
+
+
+def attn_core_chunked(q, k, v, mask, cap: float, chunk: int = 1024):
+    """Online-softmax over KV chunks (flash-attention recurrence in jnp).
+
+    Memory O(L * chunk) instead of O(L * S).  Exact same math as naive.
+    """
+    B, L, H, hd = q.shape
+    S = k.shape[1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if mask is None:
+            mask = jnp.ones((L, S), bool)
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    S_p = S + pad
+    n_chunks = S_p // chunk
+    kc = k.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    if mask is not None:
+        mc = mask.reshape(L, n_chunks, chunk).transpose(1, 0, 2)
+    scale = 1.0 / jnp.sqrt(hd)
+
+    def step(carry, inp):
+        m_run, l_run, acc = carry
+        if mask is not None:
+            k_i, v_i, msk = inp
+        else:
+            (k_i, v_i), msk = inp, None
+        s = jnp.einsum("blhk,bshk->bhls", q, k_i).astype(jnp.float32) * scale
+        s = apply_softcap(s, cap)
+        if msk is not None:
+            s = jnp.where(msk[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhls,bshk->bhlk", p, v_i.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, H, L), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, L), jnp.float32)
+    acc0 = jnp.zeros((B, H, L, hd), jnp.float32)
+    xs = (kc, vc, mc) if mask is not None else (kc, vc)
+    (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, acc0), xs)
+    out = acc / jnp.maximum(l_f[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,L,H,hd)
+
+
+# ------------------------------------------------------------- public API
+
+
+def attn_fwd(
+    params,
+    x,
+    cfg: ModelConfig,
+    *,
+    window: int = 0,
+    causal: bool = True,
+    positions=None,
+    kv_x=None,
+    kv_positions=None,
+    impl: str = "naive",
+    chunk: int = 1024,
+):
+    """Full-sequence attention (self by default, cross when kv_x given)."""
+    B, L, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(L)
+    xkv = kv_x if kv_x is not None else x
+    if kv_positions is None:
+        kv_positions = (
+            jnp.arange(xkv.shape[1]) if kv_x is not None else positions
+        )
+    q, k, v = _project_qkv(params, x, xkv, cfg, positions, kv_positions)
+    # Pallas flash path (TPU kernel; interpret-mode on CPU).  Requires a
+    # static window (hymba's per-layer scanned windows fall back to chunked).
+    if impl == "flash" and isinstance(window, int):
+        from repro.kernels.flash_attention.ops import flash_mha
+
+        o = flash_mha(
+            q, k, v, causal=causal and kv_x is None, window=window,
+            softcap=cfg.attn_softcap,
+        )
+    else:
+        if kv_x is not None:
+            mask = None  # cross-attn attends everywhere
+        elif causal or not isinstance(window, int) or window > 0:
+            mask = attn_mask(positions, kv_positions, causal, window)
+        else:
+            mask = None
+        if impl == "flash":
+            impl = "chunked"
+        core = attn_core_chunked if impl == "chunked" else attn_core_naive
+        o = (
+            core(q, k, v, mask, cfg.attn_softcap, chunk)
+            if impl == "chunked"
+            else core(q, k, v, mask, cfg.attn_softcap)
+        )
+    out = jnp.einsum("blhk,hkd->bld", o, params["wo"].astype(x.dtype))
+    if "gate" in params:
+        out = jnp.tanh(params["gate"]).astype(x.dtype) * out
+    return out
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+def attn_prefill(params, x, cache, cfg: ModelConfig, *, window=0, positions=None,
+                 impl="chunked", chunk=1024):
+    """Causal forward that also fills the KV cache (positions 0..L-1).
+    The cache stores raw n_kv heads; in-flight compute uses repeated heads."""
+    B, L, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(L)
+    q, k_raw, v_raw = _project_qkv(
+        params, x, x, cfg, positions, positions, repeat_kv=False
+    )
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_raw.astype(cache["k"].dtype), 0, axis=1
+        ),
+        "v": jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_raw.astype(cache["v"].dtype), 0, axis=1
+        ),
+    }
+    reps = cfg.n_heads // cfg.n_kv_heads
+    k = jnp.repeat(k_raw, reps, axis=2) if reps > 1 else k_raw
+    v = jnp.repeat(v_raw, reps, axis=2) if reps > 1 else v_raw
+    mask = attn_mask(positions, positions, True, window)
+    core = attn_core_chunked if impl == "chunked" else attn_core_naive
+    o = (
+        core(q, k, v, mask, cfg.attn_softcap, chunk)
+        if impl == "chunked"
+        else core(q, k, v, mask, cfg.attn_softcap)
+    )
+    out = jnp.einsum("blhk,hkd->bld", o, params["wo"].astype(x.dtype))
+    if "gate" in params:
+        out = jnp.tanh(params["gate"]).astype(x.dtype) * out
+    return out, cache
+
+
+def attn_step(params, x1, cache, pos, cfg: ModelConfig, *, window: int = 0):
+    """Single-token decode with grouped-query attention against the raw
+    n_kv-head cache.  x1: (B, 1, d); pos: () int32 current position."""
+    B = x1.shape[0]
+    S = cache["k"].shape[1]
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    G = cfg.n_heads // kv
+    pos_q = jnp.full((1,), pos, jnp.int32)
+    q, k, v = _project_qkv(params, x1, x1, cfg, pos_q, pos_q, repeat_kv=False)
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), pos, axis=1
+        ),
+        "v": jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), pos, axis=1
+        ),
+    }
+    kv_pos = jnp.arange(S)
+    valid = kv_pos <= pos
+    w = jnp.asarray(window, jnp.int32)
+    valid &= (w <= 0) | ((pos - kv_pos) < w)
+    kf = cache["k"].astype(q.dtype)
+    vf = cache["v"].astype(q.dtype)
+    qg = q[:, 0].reshape(B, kv, G, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, kf) / jnp.sqrt(hd).astype(q.dtype)
+    scores = apply_softcap(scores, cfg.attn_softcap)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgs,bskh->bkgh", probs, vf).reshape(B, 1, kv * G, hd)
+    out = jnp.einsum("blhk,hkd->bld", o, params["wo"].astype(x1.dtype))
+    if "gate" in params:
+        out = jnp.tanh(params["gate"]).astype(x1.dtype) * out
+    return out, cache

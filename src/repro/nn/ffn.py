@@ -1,0 +1,33 @@
+"""Dense SwiGLU FFN (LLaMA-family default)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import param
+
+
+def ffn_init(key, d_model: int, d_ff: int, kind: str = "swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "gelu":
+        return {
+            "w_up": param(k2, (d_model, d_ff), ("embed", "mlp")),
+            "w_down": param(k3, (d_ff, d_model), ("mlp", "embed")),
+        }
+    return {
+        "w_gate": param(k1, (d_model, d_ff), ("embed", "mlp")),
+        "w_up": param(k2, (d_model, d_ff), ("embed", "mlp")),
+        "w_down": param(k3, (d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def ffn_apply(params, x):
+    cdt = x.dtype
+    u = x @ params["w_up"].astype(cdt)
+    if "w_gate" in params:
+        g = x @ params["w_gate"].astype(cdt)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(cdt) * u
+    else:
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(cdt)
+    return h @ params["w_down"].astype(cdt)

@@ -1,0 +1,128 @@
+"""Basic layers: norms, projections, embeddings, rotary/sinusoidal positions.
+
+Functional style: ``*_init(key, ...) -> boxed params``, ``*_apply(params, x)``.
+Logical sharding axes used here (mapped to mesh axes in
+repro/distributed/sharding.py):
+
+  "embed"   - d_model dim            -> replicated (activations shard batch)
+  "mlp"     - FFN hidden dim         -> model
+  "heads"   - attention heads        -> model
+  "kv_heads"- KV heads               -> model
+  "head_dim"- per-head dim           -> replicated
+  "vocab"   - vocabulary             -> model (vocab-parallel embed/head)
+  "experts" - MoE expert dim         -> model (expert parallel)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.param import Boxed, param, normal_init, zeros_init, ones_init, lecun_normal
+
+
+# -------------------------------------------------------------------- norms
+
+
+def rmsnorm_init(key, dim: int, axes=("embed",)):
+    # (1 + scale) parametrization, zero-init (gemma-style)
+    return {"scale": param(key, (dim,), axes, zeros_init())}
+
+
+def rmsnorm_apply(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+def layernorm_init(key, dim: int, axes=("embed",)):
+    k1, k2 = jax.random.split(key)
+    return {
+        "scale": param(k1, (dim,), axes, ones_init()),
+        "bias": param(k2, (dim,), axes, zeros_init()),
+    }
+
+
+def layernorm_apply(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+# -------------------------------------------------------------- projections
+
+
+def dense_init(key, in_dim, out_dim, axes=("embed", "mlp"), bias=False, init=None):
+    kw, kb = jax.random.split(key)
+    p = {"w": param(kw, (in_dim, out_dim), axes, init or lecun_normal())}
+    if bias:
+        p["b"] = param(kb, (out_dim,), (axes[-1],), zeros_init())
+    return p
+
+
+def dense_apply(params, x):
+    """Apply a dense projection (params are unboxed arrays)."""
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# ------------------------------------------------------------- embeddings
+
+
+def embedding_init(key, vocab: int, dim: int):
+    return {"table": param(key, (vocab, dim), ("vocab", "embed"), normal_init(0.02))}
+
+
+def embedding_apply(params, ids, compute_dtype=jnp.bfloat16):
+    return jnp.take(params["table"].astype(compute_dtype), ids, axis=0)
+
+
+def unembed_apply(params, x):
+    """Logits from a (vocab, dim) table — vocab-parallel matmul."""
+    return x @ params["table"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------- positions
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., L, n_heads, head_dim); positions: (..., L) int."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., L, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embed(positions, dim: int, max_period: float = 1e4):
+    """Classic transformer absolute positions / diffusion time embedding.
+    positions: (...,) float or int -> (..., dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-np.log(max_period) * jnp.arange(half) / half)
+    args = positions[..., None].astype(jnp.float32) * freqs
+    emb = jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+    if dim % 2:
+        emb = jnp.pad(emb, [(0, 0)] * (emb.ndim - 1) + [(0, 1)])
+    return emb
+
+
+def softcap(x, cap: float):
+    """Gemma-2 style logit soft-capping (cap is a static python float)."""
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

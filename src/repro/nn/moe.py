@@ -1,0 +1,84 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with per-expert
+capacity (GShard-with-dropping semantics), TPU-native dispatch.
+
+Dispatch is the capacity-gather formulation: per expert, gather its top-C
+assigned tokens (no (N, E, C) one-hot blow-up), run a batched-over-experts
+SwiGLU, scatter-add back weighted by the (renormalized) router probs.  The
+`experts` param axis shards over the mesh `model` axis -> expert parallelism;
+XLA inserts the token all-to-all at the gather/scatter boundaries.
+
+Covers dbrx (E=16 top-4) and qwen3-moe (E=128 top-8 fine-grained d_ff=768).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.param import param, normal_init
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": param(k1, (d, E), ("embed", None), normal_init(0.02)),
+        "w_gate": param(k2, (E, d, ff), ("experts", "embed", "mlp")),
+        "w_up": param(k3, (E, d, ff), ("experts", "embed", "mlp")),
+        "w_down": param(k4, (E, ff, d), ("experts", "mlp", "embed")),
+    }
+
+
+def moe_apply(params, x, cfg: ModelConfig, capacity: int | None = None):
+    """x: (B, L, d) -> (B, L, d), aux dict with load-balancing loss.
+
+    Capacity C defaults to ceil(top_k * tokens * cf / E) per batch *row* so
+    the dispatch stays local to the data-parallel shard.
+    """
+    B, L, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    cdt = x.dtype
+
+    logits = (x @ params["router"].astype(cdt)).astype(jnp.float32)  # (B,L,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, k)  # (B,L,k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # sparse (B,L,E) weight matrix of the selected experts
+    sel = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)  # (B,L,k,E)
+    weights = jnp.einsum("blk,blke->ble", top_p, sel)  # (B,L,E)
+
+    if capacity is None:
+        capacity = int(max(1, -(-k * L * cfg.capacity_factor // E)))
+    capacity = min(capacity, L)
+
+    # per (batch row, expert): pick its top-C tokens by routing weight
+    w_t = weights.transpose(0, 2, 1)  # (B,E,L)
+    gate_vals, token_idx = jax.lax.top_k(w_t, capacity)  # (B,E,C)
+    keep = gate_vals > 0.0
+
+    xg = jnp.take_along_axis(
+        x[:, None], token_idx[..., None], axis=2
+    )  # (B,E,C,d)
+    xg = xg * keep[..., None].astype(cdt)
+
+    wg = params["w_gate"].astype(cdt)
+    wu = params["w_up"].astype(cdt)
+    wd = params["w_down"].astype(cdt)
+    g = jnp.einsum("becd,edf->becf", xg, wg)
+    u = jnp.einsum("becd,edf->becf", xg, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(cdt) * u
+    y_e = jnp.einsum("becf,efd->becd", h, wd)  # (B,E,C,d)
+    y_e = y_e * (gate_vals * keep)[..., None].astype(cdt)
+
+    # scatter-add expert outputs back to token positions
+    out = jnp.zeros((B, L, d), cdt)
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None, None], token_idx.shape)
+    out = out.at[bidx, token_idx].add(y_e)
+
+    # Switch-style load-balancing auxiliary loss
+    frac_tokens = jnp.mean(sel.sum(2), axis=(0, 1))  # (E,) fraction routed
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux_loss = E * jnp.sum(frac_tokens * frac_probs) / k
+    return out, {"moe_aux_loss": aux_loss}

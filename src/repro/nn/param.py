@@ -1,0 +1,206 @@
+"""Minimal pure-JAX parameter system with logical sharding axes.
+
+No flax in the container, so this provides the three things a distributed
+framework needs from a module system:
+
+  * ``Boxed`` leaves: an array + a tuple of *logical* axis names
+    (e.g. ``("embed", "mlp")``).  Registered as a pytree node so boxed trees
+    flow through ``jax.tree_util`` transparently.
+  * ``unbox`` / ``logical_axes_tree``: split a boxed tree into the raw param
+    tree (used by ``apply`` fns and the optimizer) and a parallel tree of
+    logical axes (used to derive ``PartitionSpec`` trees).
+  * ``logical_to_pspec``: logical axes -> mesh ``PartitionSpec`` via a rules
+    mapping, MaxText-style.
+
+Conventions
+-----------
+``init`` functions return trees of ``Boxed``.  Everything downstream of init
+(apply fns, optimizer, checkpointing) sees plain ``jnp.ndarray`` leaves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Axes = tuple[Any, ...]  # entries: str | None
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Boxed:
+    """An array annotated with logical sharding axis names."""
+
+    value: jax.Array
+    logical_axes: Axes
+
+    def tree_flatten(self):
+        return (self.value,), self.logical_axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    @property
+    def shape(self):
+        return self.value.shape
+
+    @property
+    def dtype(self):
+        return self.value.dtype
+
+
+def is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def unbox(tree):
+    """Strip Boxed wrappers, returning the raw param tree."""
+    return jax.tree_util.tree_map(
+        lambda x: x.value if is_boxed(x) else x, tree, is_leaf=is_boxed
+    )
+
+
+def logical_axes_tree(tree):
+    """Same structure as ``unbox(tree)`` with logical-axes tuples as leaves."""
+    return jax.tree_util.tree_map(
+        lambda x: x.logical_axes if is_boxed(x) else None, tree, is_leaf=is_boxed
+    )
+
+
+def logical_to_pspec(axes: Axes | None, rules: Mapping[str, Any]) -> P:
+    """Map a tuple of logical axes to a PartitionSpec using ``rules``.
+
+    ``rules`` maps logical axis name -> mesh axis name (str), tuple of mesh
+    axes, or None (replicated).  Unknown logical names are replicated.
+    """
+    if axes is None:
+        return P()
+    out = []
+    used: set = set()
+    for ax in axes:
+        mesh_ax = rules.get(ax) if ax is not None else None
+        # A mesh axis may appear at most once in a PartitionSpec.
+        if mesh_ax is not None:
+            flat = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+            if any(m in used for m in flat):
+                mesh_ax = None
+            else:
+                used.update(flat)
+        out.append(mesh_ax)
+    # Trim trailing Nones for tidiness.
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def pspec_tree(tree, rules: Mapping[str, Any]):
+    """Boxed tree (or logical-axes tree) -> tree of PartitionSpec."""
+    def one(x):
+        if is_boxed(x):
+            return logical_to_pspec(x.logical_axes, rules)
+        if x is None or isinstance(x, tuple):
+            return logical_to_pspec(x, rules)
+        return P()
+
+    return jax.tree_util.tree_map(
+        one, tree, is_leaf=lambda x: is_boxed(x) or isinstance(x, tuple) or x is None
+    )
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def _fan(shape: Sequence[int], in_axis: int, out_axis: int):
+    receptive = 1
+    for i, s in enumerate(shape):
+        if i not in (in_axis % len(shape), out_axis % len(shape)):
+            receptive *= s
+    return shape[in_axis] * receptive, shape[out_axis] * receptive
+
+
+def normal_init(stddev: float = 0.02):
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+    return init
+
+
+def lecun_normal(in_axis: int = -2, out_axis: int = -1):
+    def init(key, shape, dtype):
+        fan_in, _ = _fan(shape, in_axis, out_axis)
+        return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+    return init
+
+
+def zeros_init():
+    def init(key, shape, dtype):
+        return jnp.zeros(shape, dtype)
+
+    return init
+
+
+def ones_init():
+    def init(key, shape, dtype):
+        return jnp.ones(shape, dtype)
+
+    return init
+
+
+def param(
+    key,
+    shape: Sequence[int],
+    axes: Axes,
+    init: Callable | None = None,
+    dtype=jnp.float32,
+) -> Boxed:
+    """Create a Boxed parameter."""
+    assert len(axes) == len(shape), (axes, shape)
+    init = init or lecun_normal()
+    return Boxed(init(key, tuple(shape), dtype), tuple(axes))
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def stack_layers(per_layer: list):
+    """Stack a list of identically-structured (boxed) param trees along a new
+    leading ``layers`` axis.  Used for scan-over-layers."""
+
+    def stack(*leaves):
+        if is_boxed(leaves[0]):
+            vals = jnp.stack([l.value for l in leaves])
+            return Boxed(vals, ("layers",) + leaves[0].logical_axes)
+        return jnp.stack(leaves)
+
+    return jax.tree_util.tree_map(stack, *per_layer, is_leaf=is_boxed)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(unbox(tree))
+    return sum(int(x.size) for x in leaves)
+
+
+def tree_bytes(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(unbox(tree))
+    return sum(int(x.size) * x.dtype.itemsize for x in leaves)
+
+
+def cast_floating(tree, dtype):
+    """Cast floating-point leaves to ``dtype`` (mixed-precision compute cast)."""
+
+    def one(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(one, tree)

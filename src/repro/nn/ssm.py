@@ -1,0 +1,514 @@
+"""Recurrent sequence mixers: Mamba (selective SSM), mLSTM and sLSTM (xLSTM).
+
+Three execution paths per mixer, mirroring attention:
+  * full-sequence parallel form (training / prefill):
+      - mamba: associative scan over the diagonal SSM recurrence
+      - mLSTM: stabilized quadratic parallel form (decay-masked QK^T)
+      - sLSTM: true sequential lax.scan (recurrent h_{t-1} mixing is
+        irreducibly sequential; this is the xLSTM paper's own structure)
+  * single-step recurrent form (decode; O(1) state) — this is what makes the
+    long_500k cell tractable for the ssm/hybrid archs.
+
+All recurrences run in float32 regardless of compute dtype.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.param import param, normal_init, zeros_init, ones_init, lecun_normal
+from repro.nn.layers import rmsnorm_init, rmsnorm_apply
+
+NEG_INF = -1e30
+
+
+# ===================================================================== mamba
+
+
+def mamba_init(key, cfg: ModelConfig, d_in: int | None = None):
+    d = cfg.d_model
+    din = d_in or cfg.d_inner
+    N, ck = cfg.ssm_state, cfg.ssm_conv
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(key, 8)
+    # S4D-real initialization for A
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (din, 1))
+    return {
+        "in_proj": param(ks[0], (d, 2 * din), ("embed", "mlp")),
+        "conv_w": param(ks[1], (ck, din), (None, "mlp"), normal_init(0.1)),
+        "conv_b": param(ks[2], (din,), ("mlp",), zeros_init()),
+        "x_proj": param(ks[3], (din, dt_rank + 2 * N), ("mlp", None)),
+        "dt_proj": param(ks[4], (dt_rank, din), (None, "mlp"), normal_init(0.1)),
+        "dt_bias": param(ks[5], (din,), ("mlp",), zeros_init()),
+        "A_log": param(ks[6], (din, N), ("mlp", None), lambda k, s, dt: jnp.log(A)),
+        "D": param(ks[7], (din,), ("mlp",), ones_init()),
+        "out_proj": param(jax.random.fold_in(key, 9), (din, d), ("mlp", "embed")),
+    }
+
+
+def _mamba_ssm_inputs(params, xz, cfg: ModelConfig):
+    """Shared front half: conv + silu + (dt, B, C) projections."""
+    N = cfg.ssm_state
+    dt_rank = params["dt_proj"].shape[0]
+    x, z = jnp.split(xz, 2, axis=-1)  # (B,L,din) each
+    return x, z, N, dt_rank
+
+
+def _ssm_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def mamba_fwd(params, x_in, cfg: ModelConfig, return_state: bool = False,
+              chunk: int = 1024):
+    """x_in: (B, L, d_model) -> (B, L, d_model) [, final recurrent state].
+
+    Chunked selective scan: within each chunk of length ``chunk`` the diag
+    recurrence runs as an associative scan; the recurrent state is carried
+    across chunks by an outer lax.scan.  Peak memory O(B * chunk * din * N)
+    instead of O(B * L * din * N) — required for the 32k/500k cells and the
+    exact blueprint of the Pallas ssm_scan kernel.
+    """
+    B, L, _ = x_in.shape
+    cdt = x_in.dtype
+    ck = cfg.ssm_conv
+    xz = x_in @ params["in_proj"].astype(cdt)
+    x_raw, z, N, dt_rank = _mamba_ssm_inputs(params, xz, cfg)
+
+    # causal depthwise conv along L
+    xp = jnp.pad(x_raw, ((0, 0), (ck - 1, 0), (0, 0)))
+    conv_w = params["conv_w"].astype(cdt)  # (ck, din)
+    x = sum(xp[:, i : i + L] * conv_w[i] for i in range(ck))
+    x = jax.nn.silu((x + params["conv_b"].astype(cdt)).astype(jnp.float32))
+
+    proj = x.astype(cdt) @ params["x_proj"].astype(cdt)
+    dt, Bm, Cm = jnp.split(
+        proj.astype(jnp.float32), [dt_rank, dt_rank + N], axis=-1
+    )
+    dt = jax.nn.softplus(
+        dt @ params["dt_proj"].astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )  # (B,L,din)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (din,N)
+    din = dt.shape[-1]
+
+    C = min(chunk, L)
+    pad = (-L) % C
+    if pad:
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        x_p = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    else:
+        dt_p, x_p, Bm_p, Cm_p = dt, x, Bm, Cm
+    nC = (L + pad) // C
+
+    def to_chunks(a):
+        return a.reshape(B, nC, C, a.shape[-1]).transpose(1, 0, 2, 3)
+
+    def chunk_step(h_prev, inp):
+        dt_c, x_c, B_c, C_c = inp  # (B, C, ...)
+        decay = jnp.exp(dt_c[..., None] * A)  # (B,C,din,N)
+        drive = (dt_c * x_c)[..., None] * B_c[:, :, None, :]
+        acum, h = jax.lax.associative_scan(_ssm_combine, (decay, drive), axis=1)
+        h = h + acum * h_prev[:, None]
+        y_c = jnp.einsum("bcdn,bcn->bcd", h, C_c)
+        return h[:, -1], y_c
+
+    h0 = jnp.zeros((B, din, N), jnp.float32)
+    h_last, ys = jax.lax.scan(
+        chunk_step, h0, (to_chunks(dt_p), to_chunks(x_p), to_chunks(Bm_p), to_chunks(Cm_p))
+    )
+    y = ys.transpose(1, 0, 2, 3).reshape(B, L + pad, din)[:, :L]
+    y = y + x * params["D"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = (y.astype(cdt)) @ params["out_proj"].astype(cdt)
+    if not return_state:
+        return out
+    # NOTE: with right-padding the padded positions have dt≈softplus(bias),
+    # slightly decaying h; recompute the exact final state from position L-1
+    # by re-running the last partial chunk when padded.
+    if pad:
+        h_last = _exact_final_state(dt, x, Bm, A, B, din, N, C)
+    xr = x_raw.astype(jnp.float32)
+    if L >= ck - 1:
+        conv_state = xr[:, L - (ck - 1):]
+    else:
+        conv_state = jnp.pad(xr, ((0, 0), (ck - 1 - L, 0), (0, 0)))
+    return out, {"conv": conv_state, "ssm": h_last}
+
+
+def _exact_final_state(dt, x, Bm, A, B, din, N, C):
+    """Final SSM state via a full associative scan over the last chunk plus
+    carried prefix — only used when L is not chunk-aligned."""
+    decay = jnp.exp(dt[..., None] * A)
+    drive = (dt * x)[..., None] * Bm[:, :, None, :]
+    acum, h = jax.lax.associative_scan(_ssm_combine, (decay, drive), axis=1)
+    return h[:, -1]
+
+
+def mamba_init_state(params, cfg: ModelConfig, batch: int):
+    din = params["dt_bias"].shape[0]
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, din), jnp.float32),
+        "ssm": jnp.zeros((batch, din, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_step(params, x1, state, cfg: ModelConfig):
+    """x1: (B, 1, d_model); O(1) recurrent update."""
+    cdt = x1.dtype
+    xz = x1 @ params["in_proj"].astype(cdt)
+    x, z, N, dt_rank = _mamba_ssm_inputs(params, xz, cfg)
+    x = x[:, 0].astype(jnp.float32)  # (B,din)
+    z = z[:, 0].astype(jnp.float32)
+
+    hist = jnp.concatenate([state["conv"], x[:, None]], axis=1)  # (B,ck,din)
+    conv_w = params["conv_w"].astype(jnp.float32)
+    xc = jnp.einsum("bkd,kd->bd", hist, conv_w) + params["conv_b"].astype(
+        jnp.float32
+    )
+    xc = jax.nn.silu(xc)
+    new_conv = hist[:, 1:]
+
+    proj = xc @ params["x_proj"].astype(jnp.float32)
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        dt @ params["dt_proj"].astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[..., None] * A)  # (B,din,N)
+    h = decay * state["ssm"] + (dt * xc)[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + xc * params["D"].astype(jnp.float32)
+    y = y * jax.nn.silu(z)
+    out = y.astype(cdt) @ params["out_proj"].astype(cdt)
+    return out[:, None], {"conv": new_conv, "ssm": h}
+
+
+# ===================================================================== mLSTM
+
+
+def mlstm_init(key, cfg: ModelConfig):
+    """xLSTM mLSTM block: up-proj 2x, conv, per-head matrix memory."""
+    d = cfg.d_model
+    din = 2 * d
+    H = cfg.n_heads
+    dh = din // H
+    ks = jax.random.split(key, 10)
+    return {
+        "up_proj": param(ks[0], (d, 2 * din), ("embed", "mlp")),
+        "conv_w": param(ks[1], (cfg.ssm_conv, din), (None, "mlp"), normal_init(0.1)),
+        "conv_b": param(ks[2], (din,), ("mlp",), zeros_init()),
+        "wq": param(ks[3], (din, H, dh), ("mlp", "heads", "head_dim")),
+        "wk": param(ks[4], (din, H, dh), ("mlp", "heads", "head_dim")),
+        "wv": param(ks[5], (din, H, dh), ("mlp", "heads", "head_dim")),
+        "w_i": param(ks[6], (din, H), ("mlp", "heads"), normal_init(0.02)),
+        "w_f": param(
+            ks[7], (din, H), ("mlp", "heads"), normal_init(0.02)
+        ),
+        "b_i": param(jax.random.fold_in(key, 11), (H,), ("heads",), zeros_init()),
+        "b_f": param(
+            jax.random.fold_in(key, 12),
+            (H,),
+            ("heads",),
+            lambda k, s, dt: jnp.full(s, 3.0, dt),  # bias toward remembering
+        ),
+        "out_norm": rmsnorm_init(ks[8], din, ("mlp",)),
+        "down_proj": param(ks[9], (din, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_qkv(params, x_in, cfg: ModelConfig):
+    B, L, _ = x_in.shape
+    cdt = x_in.dtype
+    ck = cfg.ssm_conv
+    H = cfg.n_heads
+    up = x_in @ params["up_proj"].astype(cdt)
+    xm, z = jnp.split(up, 2, axis=-1)  # (B,L,din)
+    xp = jnp.pad(xm, ((0, 0), (ck - 1, 0), (0, 0)))
+    conv_w = params["conv_w"].astype(cdt)
+    xc = sum(xp[:, i : i + L] * conv_w[i] for i in range(ck))
+    xc = jax.nn.silu(
+        (xc + params["conv_b"].astype(cdt)).astype(jnp.float32)
+    ).astype(cdt)
+    q = jnp.einsum("bld,dhk->blhk", xc, params["wq"].astype(cdt))
+    k = jnp.einsum("bld,dhk->blhk", xc, params["wk"].astype(cdt))
+    v = jnp.einsum("bld,dhk->blhk", xm, params["wv"].astype(cdt))
+    i_pre = (
+        jnp.einsum("bld,dh->blh", xm.astype(jnp.float32), params["w_i"].astype(jnp.float32))
+        + params["b_i"]
+    )
+    f_pre = (
+        jnp.einsum("bld,dh->blh", xm.astype(jnp.float32), params["w_f"].astype(jnp.float32))
+        + params["b_f"]
+    )
+    return q, k, v, i_pre, f_pre, z
+
+
+def mlstm_fwd(params, x_in, cfg: ModelConfig, return_state: bool = False,
+              chunk: int = 1024):
+    """Chunkwise-parallel stabilized mLSTM (xLSTM matrix memory).
+
+    Within a chunk: the quadratic decay-masked form (xLSTM paper eq. 21-27).
+    Across chunks: the exact (C, n, m) recurrent state is carried by a
+    lax.scan, so peak memory is O(B * chunk^2 * H) instead of O(B * L^2 * H).
+    Chunk == L reduces to the paper's full parallel form; the step form
+    (mlstm_step) is the chunk == 1 special case.  This is the jnp reference
+    of the Pallas ssm_scan kernel.
+    """
+    B, L, _ = x_in.shape
+    cdt = x_in.dtype
+    H = cfg.n_heads
+    q, k, v, i_pre, f_pre, z = _mlstm_qkv(params, x_in, cfg)
+    dh = q.shape[-1]
+    din = cfg.d_model * 2
+
+    C = min(chunk, L)
+    pad = (-L) % C
+    if pad:
+        padf = lambda a, fill=0.0: jnp.pad(
+            a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
+            constant_values=fill,
+        )
+        # padded steps must be state no-ops: i=-inf (no insert), f=+40 (no decay)
+        q, k, v = padf(q), padf(k), padf(v)
+        i_pre = padf(i_pre, NEG_INF)
+        f_pre = padf(f_pre, 40.0)
+    Lp = L + pad
+    nC = Lp // C
+
+    def to_chunks(a):
+        return a.reshape((B, nC, C) + a.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, a.ndim + 1))
+        )
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    ic, fc = to_chunks(i_pre), to_chunks(f_pre)
+    scale = 1.0 / math.sqrt(dh)
+    causal = jnp.tril(jnp.ones((C, C), bool))
+
+    def chunk_step(carry, inp):
+        C_st, n_st, m_st = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        q_c, k_c, v_c, i_c, f_c = inp
+        q32 = q_c.astype(jnp.float32)
+        k32 = k_c.astype(jnp.float32) * scale
+        v32 = v_c.astype(jnp.float32)
+        logf = jax.nn.log_sigmoid(f_c)  # (B,C,H)
+        Lam = jnp.cumsum(logf, axis=1)  # decay from chunk start to t (incl f_t)
+        # intra-chunk decay matrix D[t,s] = Lam_t - Lam_s + i_s, s <= t
+        Dmat = Lam[:, :, None, :] - Lam[:, None, :, :] + i_c[:, None, :, :]
+        Dmat = jnp.where(causal[None, :, :, None], Dmat, NEG_INF)
+        m_intra = jnp.max(Dmat, axis=2)  # (B,C,H)
+        m_inter = Lam + m_st[:, None, :]  # (B,C,H)
+        m_t = jnp.maximum(m_intra, m_inter)
+
+        Dstab = jnp.exp(Dmat - m_t[:, :, None, :])
+        scores = jnp.einsum("bchk,bshk->bcsh", q32, k32)
+        Ct = scores * Dstab
+        inter_w = jnp.exp(m_inter - m_t)  # (B,C,H)
+        num = jnp.einsum("bcsh,bshv->bchv", Ct, v32)
+        num = num + inter_w[..., None] * jnp.einsum(
+            "bchk,bhkv->bchv", q32, C_st
+        )
+        den_vec = Ct.sum(axis=2)  # (B,C,H)
+        den_vec = den_vec + inter_w * jnp.einsum("bchk,bhk->bch", q32, n_st)
+        den = jnp.maximum(jnp.abs(den_vec), jnp.exp(-m_t))
+        h_c = num / den[..., None]  # (B,C,H,dh)
+
+        # end-of-chunk state (stabilized by m at the last position)
+        m_last = m_t[:, -1]  # (B,H)
+        w_end = jnp.exp(Lam[:, -1:, :] - Lam + i_c - m_last[:, None, :])
+        C_new = jnp.exp(Lam[:, -1] + m_st - m_last)[:, :, None, None] * C_st + \
+            jnp.einsum("bch,bchk,bchv->bhkv", w_end, k32, v32)
+        n_new = jnp.exp(Lam[:, -1] + m_st - m_last)[:, :, None] * n_st + \
+            jnp.einsum("bch,bchk->bhk", w_end, k32)
+        return (C_new, n_new, m_last), h_c
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    (C_f, n_f, m_f), hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, Lp, H, dh)[:, :L]
+
+    h = h.reshape(B, L, din).astype(cdt)
+    h = rmsnorm_apply(params["out_norm"], h) * jax.nn.silu(
+        z.astype(jnp.float32)
+    ).astype(cdt)
+    out = h @ params["down_proj"].astype(cdt)
+    if not return_state:
+        return out
+    ck = cfg.ssm_conv
+    xm = _mlstm_xm(params, x_in)
+    if L >= ck - 1:
+        conv_state = xm[:, L - (ck - 1):].astype(jnp.float32)
+    else:
+        conv_state = jnp.pad(
+            xm.astype(jnp.float32), ((0, 0), (ck - 1 - L, 0), (0, 0))
+        )
+    return out, {"conv": conv_state, "C": C_f, "n": n_f, "m": m_f}
+
+
+def _mlstm_xm(params, x_in):
+    up = x_in @ params["up_proj"].astype(x_in.dtype)
+    xm, _ = jnp.split(up, 2, axis=-1)
+    return xm
+
+
+def mlstm_init_state(params, cfg: ModelConfig, batch: int):
+    H = cfg.n_heads
+    din = 2 * cfg.d_model
+    dh = din // H
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, din), jnp.float32),
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+    }
+
+
+def mlstm_step(params, x1, state, cfg: ModelConfig):
+    """O(1) recurrent mLSTM update.  x1: (B, 1, d_model)."""
+    B = x1.shape[0]
+    cdt = x1.dtype
+    H = cfg.n_heads
+    din = 2 * cfg.d_model
+    dh = din // H
+    ck = cfg.ssm_conv
+
+    up = x1 @ params["up_proj"].astype(cdt)
+    xm, z = jnp.split(up, 2, axis=-1)
+    xm = xm[:, 0].astype(jnp.float32)
+    z = z[:, 0].astype(jnp.float32)
+
+    hist = jnp.concatenate([state["conv"], xm[:, None]], axis=1)
+    conv_w = params["conv_w"].astype(jnp.float32)
+    xc = jnp.einsum("bkd,kd->bd", hist, conv_w) + params["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc)
+
+    q = jnp.einsum("bd,dhk->bhk", xc, params["wq"].astype(jnp.float32))
+    k = jnp.einsum("bd,dhk->bhk", xc, params["wk"].astype(jnp.float32)) / math.sqrt(dh)
+    v = jnp.einsum("bd,dhk->bhk", xm, params["wv"].astype(jnp.float32))
+    i_pre = xm @ params["w_i"].astype(jnp.float32) + params["b_i"]  # (B,H)
+    f_pre = xm @ params["w_f"].astype(jnp.float32) + params["b_f"]
+
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    f_s = jnp.exp(logf + state["m"] - m_new)
+    i_s = jnp.exp(i_pre - m_new)
+    C = f_s[..., None, None] * state["C"] + i_s[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = f_s[..., None] * state["n"] + i_s[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, din)
+
+    h = rmsnorm_apply(params["out_norm"], h.astype(cdt)) * jax.nn.silu(z).astype(cdt)
+    out = h @ params["down_proj"].astype(cdt)
+    return out[:, None], {"conv": hist[:, 1:], "C": C, "n": n, "m": m_new}
+
+
+# ===================================================================== sLSTM
+
+
+def slstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    dff = max(1, int(d * 4 / 3))
+    ks = jax.random.split(key, 8)
+    return {
+        "w_gates": param(ks[0], (d, 4, H, dh), ("embed", None, "heads", "head_dim")),
+        "r_gates": param(
+            ks[1], (4, H, dh, dh), (None, "heads", "head_dim", None), normal_init(0.05)
+        ),
+        "b_gates": param(ks[2], (4, H, dh), (None, "heads", "head_dim"), zeros_init()),
+        "out_norm": rmsnorm_init(ks[3], d, ("embed",)),
+        "up_proj": param(ks[4], (d, dff), ("embed", "mlp")),
+        "gate_proj": param(ks[5], (d, dff), ("embed", "mlp")),
+        "down_proj": param(ks[6], (dff, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_cell(params, wx_t, carry):
+    """One sLSTM step.  wx_t: (B,4,H,dh) pre-activations from the input."""
+    h_prev, c_prev, n_prev, m_prev = carry
+    rg = params["r_gates"].astype(jnp.float32)  # (4,H,dh,dh)
+    rec = jnp.einsum("bhk,ghkv->bghv", h_prev, rg)  # (B,4,H,dh)
+    pre = wx_t + rec + params["b_gates"].astype(jnp.float32)
+    i_pre, f_pre, z_pre, o_pre = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m_prev, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(logf + m_prev - m_new)
+    c = f_s * c_prev + i_s * jnp.tanh(z_pre)
+    n = f_s * n_prev + i_s
+    h = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1e-6)
+    return (h, c, n, m_new)
+
+
+def slstm_fwd(params, x_in, cfg: ModelConfig, return_state: bool = False):
+    B, L, d = x_in.shape
+    cdt = x_in.dtype
+    H = cfg.n_heads
+    dh = d // H
+    wx = jnp.einsum(
+        "bld,dghk->blghk", x_in.astype(jnp.float32), params["w_gates"].astype(jnp.float32)
+    )  # (B,L,4,H,dh)
+
+    def step(carry, wx_t):
+        new = _slstm_cell(params, wx_t, carry)
+        return new, new[0]
+
+    h0 = jnp.zeros((B, H, dh), jnp.float32)
+    c0 = jnp.zeros((B, H, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H, dh), -jnp.inf, jnp.float32)
+    carry, hs = jax.lax.scan(step, (h0, c0, n0, m0), wx.transpose(1, 0, 2, 3, 4))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, L, d).astype(cdt)
+
+    h = rmsnorm_apply(params["out_norm"], h)
+    u = h @ params["up_proj"].astype(cdt)
+    g = h @ params["gate_proj"].astype(cdt)
+    out = (jax.nn.gelu(u.astype(jnp.float32)).astype(cdt) * g) @ params[
+        "down_proj"
+    ].astype(cdt)
+    if not return_state:
+        return out
+    hf, cf, nf, mf = carry
+    return out, {"h": hf, "c": cf, "n": nf, "m": mf}
+
+
+def slstm_init_state(params, cfg: ModelConfig, batch: int):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = lambda: jnp.zeros((batch, H, dh), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(), "m": jnp.full((batch, H, dh), -jnp.inf)}
+
+
+def slstm_step(params, x1, state, cfg: ModelConfig):
+    B = x1.shape[0]
+    cdt = x1.dtype
+    wx = jnp.einsum(
+        "bd,dghk->bghk",
+        x1[:, 0].astype(jnp.float32),
+        params["w_gates"].astype(jnp.float32),
+    )
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    h, c, n, m = _slstm_cell(params, wx, carry)
+    d = cfg.d_model
+    hflat = h.reshape(B, d).astype(cdt)
+    hn = rmsnorm_apply(params["out_norm"], hflat)
+    u = hn @ params["up_proj"].astype(cdt)
+    g = hn @ params["gate_proj"].astype(cdt)
+    out = (jax.nn.gelu(u.astype(jnp.float32)).astype(cdt) * g) @ params[
+        "down_proj"
+    ].astype(cdt)
+    return out[:, None], {"h": h, "c": c, "n": n, "m": m}

@@ -1,0 +1,131 @@
+"""Fault-tolerant training loop.
+
+Wraps a jitted train_step with:
+  * periodic atomic checkpoints (async) + retention,
+  * resume-from-latest on start (params, opt state, data position),
+  * SIGTERM/SIGINT preemption handling: finish the in-flight step, write a
+    final checkpoint, exit cleanly (restartable),
+  * NaN-step accounting (the step itself is skipped inside train_step; the
+    loop rolls back to the last checkpoint after ``max_bad_steps`` in a row),
+  * straggler note: steps are synchronous SPMD programs — per-host stragglers
+    surface as step-time spikes which we log; recovery is restart-based
+    (checkpoint cadence bounds lost work), the standard TPU-pod practice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.checkpoint import manager as ckpt
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    keep: int = 3
+    log_every: int = 10
+    max_bad_steps: int = 10
+
+
+class Preemption:
+    """Latches SIGTERM/SIGINT; the loop checks it once per step."""
+
+    def __init__(self):
+        self.flag = False
+        self._old = {}
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                self._old[sig] = signal.signal(sig, self._handler)
+            except ValueError:  # not main thread (tests)
+                pass
+
+    def _handler(self, signum, frame):
+        self.flag = True
+
+    def restore(self):
+        for sig, h in self._old.items():
+            signal.signal(sig, h)
+
+
+def run(
+    train_step: Callable,
+    params,
+    opt_state,
+    batch_fn: Callable[[int], dict],
+    rng,
+    loop_cfg: LoopConfig,
+    log_fn: Callable[[int, dict], None] | None = None,
+):
+    """Returns (params, opt_state, last_step, history)."""
+    start_step = 0
+    state_tree = {"params": params, "opt": opt_state}
+    if loop_cfg.ckpt_dir:
+        last = ckpt.latest_step(loop_cfg.ckpt_dir)
+        if last is not None:
+            state_tree, manifest = ckpt.restore(loop_cfg.ckpt_dir, last, state_tree)
+            start_step = manifest["step"]
+            params, opt_state = state_tree["params"], state_tree["opt"]
+
+    preempt = Preemption()
+    history = []
+    bad = 0
+    pending_save = None
+    step = start_step
+    try:
+        while step < loop_cfg.total_steps:
+            t0 = time.perf_counter()
+            batch = batch_fn(step)
+            step_rng = jax.random.fold_in(rng, step)
+            params, opt_state, metrics = train_step(params, opt_state, batch, step_rng)
+            metrics = jax.device_get(metrics)
+            dt = time.perf_counter() - t0
+
+            if not bool(metrics.get("finite", True)):
+                bad += 1
+                if bad >= loop_cfg.max_bad_steps and loop_cfg.ckpt_dir:
+                    state_tree, manifest = ckpt.restore(
+                        loop_cfg.ckpt_dir, None, {"params": params, "opt": opt_state}
+                    )
+                    params, opt_state = state_tree["params"], state_tree["opt"]
+                    step = manifest["step"]
+                    bad = 0
+                    continue
+            else:
+                bad = 0
+
+            step += 1
+            if log_fn and step % loop_cfg.log_every == 0:
+                log_fn(step, dict(metrics, step_time=dt))
+            history.append({"step": step, "loss": float(metrics.get("loss", 0)), "time": dt})
+
+            if (
+                loop_cfg.ckpt_dir
+                and step % loop_cfg.ckpt_every == 0
+            ):
+                if pending_save is not None:
+                    pending_save.join()
+                pending_save = ckpt.save_async(
+                    loop_cfg.ckpt_dir, step, {"params": params, "opt": opt_state},
+                    extra={"data_step": step},
+                )
+                ckpt.retain(loop_cfg.ckpt_dir, loop_cfg.keep)
+
+            if preempt.flag:
+                break
+    finally:
+        if pending_save is not None:
+            pending_save.join()
+        if loop_cfg.ckpt_dir and step > start_step:
+            ckpt.save(
+                loop_cfg.ckpt_dir, step, {"params": params, "opt": opt_state},
+                extra={"data_step": step, "preempted": preempt.flag},
+            )
+        preempt.restore()
+    return params, opt_state, step, history

@@ -1,0 +1,80 @@
+"""Train-step factory: grad accumulation, NaN guard, optimizer update.
+
+``make_train_step(loss_fn, optimizer, accum)`` builds the jit-able
+    (params, opt_state, batch, rng) -> (params, opt_state, metrics)
+used by both the single-host examples and the pjit launcher.  The batch's
+leading axis is split into ``accum`` microbatches and gradients are averaged
+with a lax.scan (sequential — peak memory of one microbatch).
+
+The NaN guard skips the update (params/opt state pass through unchanged)
+when non-finite gradients appear — the paired restart logic lives in
+repro/training/loop.py.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import Optimizer
+
+
+def _split_micro(batch, accum: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape((accum, b // accum) + x.shape[1:])
+
+    return jax.tree_util.tree_map(split, batch)
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer, accum: int = 1,
+                    pre_split: bool = False):
+    """loss_fn(params, batch, rng) -> (loss, metrics-dict).
+
+    ``pre_split``: batch leaves already carry the (accum, micro, ...) leading
+    axes (the pjit launcher shards the micro axis, not the accum axis).
+    """
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, rng):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch, rng)
+        else:
+            micro = batch if pre_split else _split_micro(batch, accum)
+            rngs = jax.random.split(rng, accum)
+
+            def body(carry, xs):
+                g_acc, l_acc = carry
+                mb, r = xs
+                (l, m), g = grad_fn(params, mb, r)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss_sum), ms = jax.lax.scan(body, (g0, 0.0), (micro, rngs))
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(), ms)
+
+        finite = jnp.isfinite(loss) & jnp.all(
+            jnp.asarray(
+                [jnp.all(jnp.isfinite(g)) for g in jax.tree_util.tree_leaves(grads)]
+            )
+        )
+        new_params, new_opt, opt_metrics = optimizer.update(grads, opt_state, params)
+        # NaN guard: keep old state on non-finite step
+        sel = lambda a, b: jnp.where(finite, a, b)
+        new_params = jax.tree_util.tree_map(sel, new_params, params)
+        new_opt = jax.tree_util.tree_map(sel, new_opt, opt_state)
+        metrics = dict(metrics, loss=loss, finite=finite, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step

@@ -1,0 +1,104 @@
+"""Per-architecture smoke tests: reduced family-preserving configs, one
+forward + one train step on CPU, asserting shapes and finiteness (the
+assignment's required smoke battery).  Full configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import reduced
+from repro.configs.registry import ARCHS, get_config, shapes_for
+from repro.models.lm import lm_init, lm_loss, lm_fwd
+from repro.nn.param import unbox, count_params
+from repro.training.optimizer import adamw, constant_schedule
+from repro.training.train_step import make_train_step
+
+B, L = 2, 16
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    if cfg.embed_inputs:
+        toks = jax.random.randint(ks[0], (B, L), 0, cfg.vocab_size)
+    else:
+        toks = jax.random.normal(ks[0], (B, L, cfg.d_model))
+    batch = {
+        "tokens": toks,
+        "labels": jax.random.randint(ks[1], (B, L), 0, cfg.vocab_size),
+    }
+    if cfg.family == "vlm":
+        batch["vision"] = jax.random.normal(ks[2], (B, cfg.n_vision_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_forward_shapes_and_finite(name):
+    cfg = reduced(get_config(name))
+    params = unbox(lm_init(jax.random.PRNGKey(0), cfg))
+    assert count_params(params) > 0
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits, aux = lm_fwd(params, batch["tokens"], cfg, vision=batch.get("vision"))
+    assert logits.shape == (B, L, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_one_train_step(name):
+    cfg = reduced(get_config(name))
+    params = unbox(lm_init(jax.random.PRNGKey(0), cfg))
+    opt = adamw(constant_schedule(1e-3))
+    opt_state = opt.init(params)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    def loss_fn(p, b, rng):
+        return lm_loss(p, b, cfg)
+
+    step = jax.jit(make_train_step(loss_fn, opt, accum=1))
+    new_params, new_opt, metrics = step(params, opt_state, batch, jax.random.PRNGKey(2))
+    assert bool(metrics["finite"])
+    assert float(metrics["loss"]) > 0
+    # params actually moved
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), params, new_params
+    )
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_assigned_shape_cells_defined(name):
+    """Every arch has its assigned shape list, applying the skip rules."""
+    shapes = shapes_for(name)
+    names = [s.name for s in shapes]
+    assert "train_4k" in names and "prefill_32k" in names and "decode_32k" in names
+    if name in ("xlstm-125m", "hymba-1.5b"):
+        assert "long_500k" in names
+    else:
+        assert "long_500k" not in names
+
+
+def test_exact_assigned_configs():
+    """The full configs match the assignment table exactly."""
+    table = {
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+    }
+    for name, (nl, d, h, kv, ff, v) in table.items():
+        cfg = get_config(name)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (nl, d, h, kv, ff, v), name
+    assert get_config("dbrx-132b").n_experts == 16 and get_config("dbrx-132b").top_k == 4
+    assert get_config("qwen3-moe-30b-a3b").n_experts == 128
+    assert get_config("qwen3-moe-30b-a3b").top_k == 8
+    assert get_config("hymba-1.5b").ssm_state == 16
+    assert get_config("gemma2-9b").attn_softcap == 50.0
+    assert get_config("qwen2.5-14b").qkv_bias

@@ -1,0 +1,106 @@
+"""ASD is an error-free parallelization (paper Theorem 3): its output law
+equals the sequential chain's, for both SL and DDPM schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.stats
+
+from repro.core import (
+    asd_sample_batched,
+    ddpm,
+    ddpm_x0_fn,
+    default_gmm,
+    ddpm_coeffs,
+    sequential_sample,
+    sl_mean_fn,
+    sl_uniform,
+)
+
+
+def _energy_distance(x, y, rng, n_pairs=20000):
+    """Unbiased-ish energy distance estimate between two sample sets."""
+    idx = rng.integers(0, len(x), size=(n_pairs, 2))
+    idy = rng.integers(0, len(y), size=(n_pairs, 2))
+    dxy = np.linalg.norm(x[idx[:, 0]] - y[idy[:, 0]], axis=1).mean()
+    dxx = np.linalg.norm(x[idx[:, 0]] - x[idx[:, 1]], axis=1).mean()
+    dyy = np.linalg.norm(y[idy[:, 0]] - y[idy[:, 1]], axis=1).mean()
+    return 2 * dxy - dxx - dyy
+
+
+@pytest.mark.parametrize("theta", [4, 64])
+def test_sl_asd_matches_sequential(theta):
+    gmm = default_gmm(d=2)
+    model = sl_mean_fn(gmm)
+    sched = sl_uniform(K=64, t_max=30.0)
+    B = 3000
+    y0 = jnp.zeros((B, 2))
+
+    seq = jax.jit(jax.vmap(lambda y, k: sequential_sample(model, sched, y, k)[0]))
+    ys = np.asarray(seq(y0, jax.random.split(jax.random.PRNGKey(0), B))) / 30.0
+    res = jax.jit(
+        lambda y, k: asd_sample_batched(model, sched, y, k, theta=theta)
+    )(y0, jax.random.PRNGKey(1))
+    ya = np.asarray(res.sample) / 30.0
+
+    np.testing.assert_allclose(ys.mean(0), ya.mean(0), atol=0.12)
+    np.testing.assert_allclose(ys.var(0), ya.var(0), rtol=0.12)
+    ed = _energy_distance(ys, ya, np.random.default_rng(0))
+    # calibration: energy distance of two same-law sets of this size ~ 0.01
+    assert abs(ed) < 0.05, ed
+    # KS on first coordinate
+    assert scipy.stats.ks_2samp(ys[:, 0], ya[:, 0]).pvalue > 1e-3
+
+
+def test_ddpm_asd_matches_sequential():
+    gmm = default_gmm(d=2)
+    K = 48
+    _, _, abar = ddpm_coeffs(K)
+    model = ddpm_x0_fn(gmm, abar)
+    sched = ddpm(K)
+    B = 3000
+    y0 = jax.random.normal(jax.random.PRNGKey(9), (B, 2))
+
+    seq = jax.jit(jax.vmap(lambda y, k: sequential_sample(model, sched, y, k)[0]))
+    ys = np.asarray(seq(y0, jax.random.split(jax.random.PRNGKey(0), B)))
+    res = jax.jit(
+        lambda y, k: asd_sample_batched(model, sched, y, k, theta=8)
+    )(y0, jax.random.PRNGKey(1))
+    ya = np.asarray(res.sample)
+
+    np.testing.assert_allclose(ys.mean(0), ya.mean(0), atol=0.12)
+    np.testing.assert_allclose(ys.var(0), ya.var(0), rtol=0.15)
+    assert scipy.stats.ks_2samp(ys[:, 0], ya[:, 0]).pvalue > 1e-3
+    ed = _energy_distance(ys, ya, np.random.default_rng(1))
+    assert abs(ed) < 0.05, ed
+
+
+def test_eager_head_is_bitwise_identical():
+    """ASD+ (cached head call) is pure compute reuse — identical samples."""
+    gmm = default_gmm(d=2)
+    model = sl_mean_fn(gmm)
+    sched = sl_uniform(K=32, t_max=20.0)
+    B = 64
+    y0 = jnp.zeros((B, 2))
+    r1 = jax.jit(lambda y, k: asd_sample_batched(model, sched, y, k, theta=6))(
+        y0, jax.random.PRNGKey(2))
+    r2 = jax.jit(
+        lambda y, k: asd_sample_batched(model, sched, y, k, theta=6, eager_head=True)
+    )(y0, jax.random.PRNGKey(2))
+    np.testing.assert_allclose(np.asarray(r1.sample), np.asarray(r2.sample), atol=1e-5)
+    assert int(r2.head_calls.sum()) < int(r1.head_calls.sum())
+
+
+def test_asd_terminates_and_counts():
+    gmm = default_gmm(d=2)
+    model = sl_mean_fn(gmm)
+    sched = sl_uniform(K=32, t_max=20.0)
+    res = jax.jit(
+        lambda y, k: asd_sample_batched(model, sched, y, k, theta=8)
+    )(jnp.zeros((16, 2)), jax.random.PRNGKey(3))
+    assert bool(jnp.all(res.rounds <= 32))
+    assert bool(jnp.all(res.rounds >= 1))
+    # every chain commits exactly K steps
+    assert res.trajectory.shape == (16, 33, 2)
+    assert bool(jnp.all(res.accepts <= res.proposals))

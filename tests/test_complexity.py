@@ -1,0 +1,47 @@
+"""Adaptive complexity (paper Theorem 4): parallel rounds scale sublinearly
+and theta trades off per-round work vs number of rounds."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import asd_sample_batched, default_gmm, sl_mean_fn, sl_uniform
+
+
+def _rounds(K, theta, B=48, seed=0, t_max=None):
+    gmm = default_gmm(d=2)
+    model = sl_mean_fn(gmm)
+    sched = sl_uniform(K=K, t_max=t_max or K * 0.4)
+    res = jax.jit(
+        lambda y, k: asd_sample_batched(model, sched, y, k, theta=theta)
+    )(jnp.zeros((B, 2)), jax.random.PRNGKey(seed))
+    return float(res.rounds.mean()), res
+
+
+def test_more_speculation_fewer_rounds():
+    r2, _ = _rounds(64, 2)
+    r8, _ = _rounds(64, 8)
+    r32, _ = _rounds(64, 32)
+    assert r8 < r2
+    assert r32 <= r8 + 1e-6
+
+
+def test_parallel_depth_beats_sequential():
+    """2R (the paper's two model-call layers per round) << K."""
+    _, res = _rounds(128, 16)
+    depth = float(res.parallel_depth().mean())
+    assert depth < 128 * 0.75, depth
+
+
+def test_sublinear_scaling_in_K():
+    """Thm 4: rounds ~ K^{2/3} for fixed eta*K; doubling K should multiply
+    rounds by clearly less than 2 (loose stochastic bound)."""
+    r1, _ = _rounds(64, 8, t_max=25.6)
+    r2, _ = _rounds(128, 11, t_max=25.6)  # theta ~ (K/...)^{1/3} grows mildly
+    assert r2 / r1 < 1.9, (r1, r2)
+
+
+def test_accept_rate_reasonable():
+    _, res = _rounds(64, 8)
+    rate = float(res.accept_rate().mean())
+    assert 0.3 < rate <= 1.0, rate

@@ -1,0 +1,90 @@
+"""Hidden exchangeability (paper Theorem 1) — property-based tests.
+
+Uses the exact SL representation (Thm 8): ybar_t = t x* + W_t, so equal-step
+increments are conditionally-iid N(eta x*, eta I).  Hypothesis draws random
+permutations / grids and the tests check the permutation-invariance of the
+joint law via moment statistics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.stats
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analytic import default_gmm
+from repro.core.exchangeability import (
+    permutation_statistic,
+    simulate_sl_increments,
+)
+
+GMM = default_gmm(d=2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    perm_seed=st.integers(0, 2**16),
+    m=st.integers(3, 8),
+    eta=st.floats(0.05, 1.0),
+)
+def test_increment_law_is_permutation_invariant(perm_seed, m, eta):
+    incs = simulate_sl_increments(GMM, jax.random.PRNGKey(0), 4000, m, eta)
+    perm = np.random.default_rng(perm_seed).permutation(m)
+    stats = permutation_statistic(incs, perm)
+    # the SUM of increments is a deterministic function of the multiset —
+    # exactly invariant under any permutation
+    assert float(stats["sum_gap"]) < 1e-5
+    # per-position first/second moments agree within MC error
+    assert float(stats["mean_gap"]) < 0.15
+    assert float(stats["second_gap"]) < 0.35
+
+
+@settings(max_examples=10, deadline=None)
+@given(i=st.integers(0, 5), j=st.integers(0, 5))
+def test_marginals_of_any_two_increments_match(i, j):
+    """Law(Delta_i) == Law(Delta_j) for equal steps (Thm 1 corollary)."""
+    incs = np.asarray(
+        simulate_sl_increments(GMM, jax.random.PRNGKey(1), 8000, 6, 0.3)
+    )
+    di, dj = incs[:, i, 0], incs[:, j, 0]
+    assert scipy.stats.ks_2samp(di, dj).pvalue > 1e-4
+
+
+def test_unequal_steps_break_exchangeability_of_variance():
+    """Negative control: with unequal eta the increments are NOT
+    exchangeable — their marginal variances differ."""
+    key = jax.random.PRNGKey(2)
+    kx, kw = jax.random.split(key)
+    xstar = GMM.sample(kx, 20000)
+    etas = np.array([0.1, 1.0])
+    w = jax.random.normal(kw, (20000, 2, 2)) * jnp.sqrt(jnp.asarray(etas))[None, :, None]
+    incs = jnp.asarray(etas)[None, :, None] * xstar[:, None, :] + w
+    v0 = float(jnp.var(incs[:, 0, 0]))
+    v1 = float(jnp.var(incs[:, 1, 0]))
+    assert v1 > 3 * v0  # wildly different marginals
+
+
+def test_ddpm_sl_reparametrization_roundtrip():
+    """Thm 9 change of variables is self-consistent."""
+    from repro.core.schedules import ou_time_of_sl, sl_time_of_ou
+
+    t = jnp.geomspace(1e-3, 1e3, 64)
+    s = ou_time_of_sl(t)
+    np.testing.assert_allclose(np.asarray(sl_time_of_ou(s)), np.asarray(t), rtol=1e-4)
+    # s is decreasing in t, positive
+    assert bool(jnp.all(s > 0)) and bool(jnp.all(jnp.diff(s) < 0))
+
+
+def test_sl_marginal_matches_noisy_target():
+    """Law(ybar_t / t) = mu * N(0, I/t) (El Alaoui & Montanari)."""
+    from repro.core.exchangeability import simulate_sl_trajectory
+
+    t_end, m = 8.0, 16
+    traj = simulate_sl_trajectory(GMM, jax.random.PRNGKey(3), 20000, m, t_end / m)
+    y_over_t = np.asarray(traj[:, -1] / t_end)
+    ref = np.asarray(
+        GMM.sample(jax.random.PRNGKey(4), 20000)
+        + jax.random.normal(jax.random.PRNGKey(5), (20000, 2)) / np.sqrt(t_end)
+    )
+    assert scipy.stats.ks_2samp(y_over_t[:, 0], ref[:, 0]).pvalue > 1e-4
+    assert scipy.stats.ks_2samp(y_over_t[:, 1], ref[:, 1]).pvalue > 1e-4

@@ -1,0 +1,91 @@
+"""Gaussian Rejection Sampler — paper Algorithm 3 / Theorem 12."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.stats
+
+from repro.core.grs import grs, grs_reject_prob
+
+
+def _sample_grs(key, n, d, m_hat, m, sigma):
+    ku, kx = jax.random.split(key)
+    u = jax.random.uniform(ku, (n,))
+    xi = jax.random.normal(kx, (n, d))
+    mh = jnp.broadcast_to(m_hat, (n, d))
+    mt = jnp.broadcast_to(m, (n, d))
+    sg = jnp.full((n,), sigma)
+    return grs(u, xi, mh, mt, sg, event_ndim=1)
+
+
+def test_output_is_exactly_target_gaussian():
+    """Thm 12: x ~ N(m, sigma^2 I) regardless of the proposal mean."""
+    n, d = 40000, 3
+    m_hat = jnp.asarray([1.0, -0.5, 0.3])
+    m = jnp.asarray([0.2, 0.1, -0.4])
+    sigma = 0.7
+    x, acc = _sample_grs(jax.random.PRNGKey(0), n, d, m_hat, m, sigma)
+    x = np.asarray(x)
+    np.testing.assert_allclose(x.mean(0), np.asarray(m), atol=4 * sigma / np.sqrt(n) * 3)
+    np.testing.assert_allclose(x.std(0), sigma, rtol=0.03)
+    # KS test on each coordinate (and on a random projection)
+    for j in range(d):
+        z = (x[:, j] - float(m[j])) / sigma
+        p = scipy.stats.kstest(z, "norm").pvalue
+        assert p > 1e-4, (j, p)
+    proj = x @ np.asarray([0.5, -1.0, 2.0])
+    mu_p = float(m @ jnp.asarray([0.5, -1.0, 2.0]))
+    sd_p = sigma * np.linalg.norm([0.5, -1.0, 2.0])
+    assert scipy.stats.kstest((proj - mu_p) / sd_p, "norm").pvalue > 1e-4
+
+
+def test_reject_prob_equals_tv_distance():
+    n, d = 60000, 4
+    m_hat = jnp.zeros(d)
+    for dist in [0.2, 0.8, 2.0]:
+        m = m_hat.at[0].add(dist)
+        sigma = 1.0
+        _, acc = _sample_grs(jax.random.PRNGKey(int(dist * 10)), n, d, m_hat, m, sigma)
+        expected = float(grs_reject_prob(m_hat, m, jnp.asarray(sigma)))
+        measured = 1.0 - float(jnp.mean(acc))
+        assert abs(measured - expected) < 4 * np.sqrt(expected * (1 - expected) / n) + 1e-3, (
+            dist, measured, expected)
+
+
+def test_identical_means_always_accept():
+    x, acc = _sample_grs(jax.random.PRNGKey(1), 1000, 5, jnp.ones(5), jnp.ones(5), 0.5)
+    assert bool(jnp.all(acc))
+
+
+def test_sigma_zero_degenerate():
+    n, d = 100, 3
+    mh = jnp.ones(d)
+    # equal means: accept, x = m
+    x, acc = _sample_grs(jax.random.PRNGKey(2), n, d, mh, mh, 0.0)
+    assert bool(jnp.all(acc)) and bool(jnp.all(x == mh))
+    # different means: reject, x = m exactly
+    m2 = mh.at[0].add(1.0)
+    x, acc = _sample_grs(jax.random.PRNGKey(3), n, d, mh, m2, 0.0)
+    assert not bool(jnp.any(acc))
+    assert bool(jnp.all(x == m2))
+
+
+def test_reflection_preserves_norm():
+    """The rejected branch reflects xi -> same norm (Householder)."""
+    key = jax.random.PRNGKey(4)
+    ku, kx = jax.random.split(key)
+    n, d = 2000, 8
+    u = jax.random.uniform(ku, (n,))
+    xi = jax.random.normal(kx, (n, d))
+    mh = jnp.zeros((n, d))
+    m = jnp.zeros((n, d)).at[:, 0].set(5.0)
+    z, acc = grs(u, xi, mh, m, jnp.ones((n,)), event_ndim=1)
+    rej = ~np.asarray(acc)
+    assert rej.sum() > 100  # TV(N(0,I), N(5e1,I)) is near 1
+    xi_ref = np.asarray(z - m)[rej]
+    np.testing.assert_allclose(
+        np.linalg.norm(xi_ref, axis=1),
+        np.linalg.norm(np.asarray(xi)[rej], axis=1),
+        rtol=1e-5,
+    )

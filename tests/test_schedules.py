@@ -1,0 +1,50 @@
+"""Schedule identities for the affine step family."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedules import ddpm, ddpm_coeffs, sl_geometric, sl_uniform
+
+
+def test_ddpm_posterior_identity():
+    """If the model predicts x0 exactly and y_i = sqrt(abar_s) x0, the
+    posterior mean must be sqrt(abar_{s-1}) x0:  A sqrt(abar_s) + B =
+    sqrt(abar_{s-1})."""
+    K = 50
+    sched = ddpm(K, "cosine")
+    betas, alphas, abar = (np.asarray(x) for x in ddpm_coeffs(K, "cosine"))
+    abar_prev = np.concatenate([[1.0], abar[:-1]])
+    # step i uses s = K - i (1-based diffusion step)
+    s = K - np.arange(K)
+    lhs = np.asarray(sched.A) * np.sqrt(abar[s - 1]) + np.asarray(sched.B)
+    rhs = np.sqrt(abar_prev[s - 1])
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+
+def test_ddpm_terminal_step_deterministic():
+    sched = ddpm(32)
+    assert float(sched.sigma[-1]) == 0.0  # beta_tilde_1 = 0
+    assert float(sched.t_model[-1]) == 0.0  # last model call sees s-1 = 0
+
+
+def test_sl_uniform_grid():
+    sched = sl_uniform(K=16, t_min=0.0, t_max=8.0)
+    assert sched.K == 16
+    np.testing.assert_allclose(np.asarray(sched.B), 0.5, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(sched.sigma) ** 2, np.asarray(sched.B), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(sched.A), 1.0)
+
+
+def test_sl_geometric_monotone():
+    sched = sl_geometric(K=32)
+    t = np.asarray(sched.t_model)
+    assert (np.diff(t) > 0).all()
+    assert (np.asarray(sched.B) > 0).all()
+
+
+def test_pad_is_inert():
+    sched = sl_uniform(K=8, t_max=4.0).pad(3)
+    assert sched.t_model.shape == (11,)
+    np.testing.assert_allclose(np.asarray(sched.A[8:]), 1.0)
+    np.testing.assert_allclose(np.asarray(sched.B[8:]), 0.0)
+    np.testing.assert_allclose(np.asarray(sched.sigma[8:]), 0.0)

@@ -1,0 +1,79 @@
+"""Optimizer / train-step unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.optimizer import adamw, cosine_schedule, constant_schedule, global_norm
+from repro.training.train_step import make_train_step
+
+
+def test_adamw_descends_quadratic():
+    opt = adamw(constant_schedule(0.1), weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_grad_clipping():
+    opt = adamw(constant_schedule(0.1), clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros((3,))}
+    state = opt.init(params)
+    _, _, m = opt.update({"w": jnp.full((3,), 1e6)}, state, params)
+    assert float(m["grad_norm"]) > 1e6 - 1  # reported pre-clip
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100, floor=0.1)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert abs(float(lr(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(lr(jnp.asarray(100))) <= 0.11
+    assert float(lr(jnp.asarray(5))) < float(lr(jnp.asarray(10)))
+
+
+def test_nan_guard_skips_update():
+    opt = adamw(constant_schedule(0.1), weight_decay=0.0)
+
+    def loss_fn(p, batch, rng):
+        # produce NaN loss when batch flag set
+        return jnp.where(batch["bad"], jnp.nan, jnp.sum(p["w"] ** 2)), {}
+
+    step = jax.jit(make_train_step(loss_fn, opt))
+    params = {"w": jnp.ones((2,))}
+    state = opt.init(params)
+    p2, s2, m = step(params, state, {"bad": jnp.asarray(True)}, jax.random.PRNGKey(0))
+    assert not bool(m["finite"])
+    np.testing.assert_array_equal(np.asarray(p2["w"]), np.asarray(params["w"]))
+    p3, s3, m3 = step(params, state, {"bad": jnp.asarray(False)}, jax.random.PRNGKey(0))
+    assert bool(m3["finite"])
+    assert float(jnp.abs(p3["w"] - params["w"]).max()) > 0
+
+
+def test_grad_accumulation_matches_full_batch():
+    opt = adamw(constant_schedule(0.01), weight_decay=0.0)
+
+    def loss_fn(p, batch, rng):
+        pred = batch["x"] @ p["w"]
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    batch = {
+        "x": jax.random.normal(ks[0], (8, 4)),
+        "y": jax.random.normal(ks[1], (8,)),
+    }
+    params = {"w": jax.random.normal(ks[2], (4,))}
+    s1 = opt.init(params)
+    step1 = jax.jit(make_train_step(loss_fn, opt, accum=1))
+    step4 = jax.jit(make_train_step(loss_fn, opt, accum=4))
+    pa, _, ma = step1(params, s1, batch, jax.random.PRNGKey(1))
+    pb, _, mb = step4(params, opt.init(params), batch, jax.random.PRNGKey(1))
+    np.testing.assert_allclose(np.asarray(pa["w"]), np.asarray(pb["w"]), atol=1e-6)
+    np.testing.assert_allclose(float(ma["loss"]), float(mb["loss"]), rtol=1e-5)
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6
