@@ -1,6 +1,8 @@
 """End-to-end inference driver (the paper's kind): train a small DiT
 denoiser on synthetic image latents, then SERVE batched sampling requests
-through the ASD engine, comparing against the sequential-DDPM engine.
+three ways — sequential DDPM, chunked static ASD batching, and the
+continuous-batching ASD engine (slot refill at speculation-round
+boundaries; see repro/serving).
 
     PYTHONPATH=src:. python examples/serve_asd.py [--requests 32] [--theta 8]
 """
@@ -13,7 +15,7 @@ import numpy as np
 
 from benchmarks import common
 from repro.models.diffusion import make_sl_model_fn
-from repro.serving.engine import ASDServingEngine, Request
+from repro.serving.engine import ASDServingEngine, ContinuousASDEngine, Request
 
 
 def main():
@@ -39,13 +41,37 @@ def main():
         dt = time.perf_counter() - t0
         depth = eng.stats.rounds_total + eng.stats.head_calls_total
         print(
-            f"[{mode:4s}] served {len(out)} requests in {dt:.1f}s "
+            f"[{mode:4s} chunked   ] served {len(out)} requests in {dt:.1f}s "
             f"({eng.stats.batches} batches); sequential model-call depth "
             f"per batch = {depth / eng.stats.batches:.0f} (K={args.K})"
         )
         sample = next(iter(out.values()))
         print(f"       sample shape {sample.shape}, "
               f"finite={bool(np.isfinite(sample).all())}")
+
+    ceng = ContinuousASDEngine(
+        model_fn_factory=lambda p, cond: make_sl_model_fn(p, dc),
+        params=params,  # jit argument, not a baked-in closure constant
+        schedule=sched,
+        event_shape=(dc.seq_len, dc.d_data),
+        num_slots=args.batch,
+        theta=args.theta,
+        eager_head=True,
+    )
+    t0 = time.perf_counter()
+    out = ceng.serve([Request(i) for i in range(args.requests)],
+                     key=jax.random.PRNGKey(0))
+    dt = time.perf_counter() - t0
+    s = ceng.stats
+    print(
+        f"[asd  continuous] served {s.retired} requests in {dt:.1f}s "
+        f"({s.rounds_total} fused rounds on {args.batch} slots); accept rate "
+        f"{s.accept_rate():.2f}, mean queue latency "
+        f"{s.mean_queue_latency()*1e3:.0f}ms, {s.throughput():.2f} samples/s"
+    )
+    sample = next(iter(out.values()))
+    print(f"       sample shape {sample.shape}, "
+          f"finite={bool(np.isfinite(sample).all())}")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,17 @@ from repro.core.sequential import (
     sequential_sample_with_noise,
     init_y0,
 )
-from repro.core.asd import ASDResult, asd_sample, asd_sample_batched, asd_init_y0
+from repro.core.asd import (
+    ASDChainState,
+    ASDResult,
+    asd_round,
+    asd_sample,
+    asd_sample_batched,
+    asd_init_y0,
+    chain_done,
+    chain_sample,
+    init_chain_state,
+)
 from repro.core.analytic import GMM, default_gmm, sl_mean_fn, ddpm_x0_fn
 
 __all__ = [
@@ -38,10 +48,15 @@ __all__ = [
     "sequential_sample",
     "sequential_sample_with_noise",
     "init_y0",
+    "ASDChainState",
     "ASDResult",
+    "asd_round",
     "asd_sample",
     "asd_sample_batched",
     "asd_init_y0",
+    "chain_done",
+    "chain_sample",
+    "init_chain_state",
     "GMM",
     "default_gmm",
     "sl_mean_fn",

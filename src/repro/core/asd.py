@@ -21,12 +21,24 @@ window is accepted, that evaluation IS the next round's proposal call, so the
 sequential-depth cost of a fully-accepted round drops from 2 to 1.  At the
 high acceptance rates the paper reports for diffusion policies (6-7x regime)
 this raises the algorithmic speedup bound from K/2R toward K/R.
+
+Resumable-state API (the serving engine's continuous-batching substrate):
+
+    st = init_chain_state(schedule, y0, key, theta, ...)
+    while not chain_done(st, schedule.K):
+        st = asd_round(model_fn, schedule, st, theta, ...)
+
+``asd_round`` performs exactly one speculation round and is the identity on
+finished chains, so a vmapped batch of ``ASDChainState`` slots can be driven
+round-by-round with chains retiring (and their slots refilled) independently
+— ``asd_sample`` itself is just ``init_chain_state`` + ``asd_round`` under a
+``lax.while_loop`` and produces bit-identical trajectories.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -64,8 +76,17 @@ class ASDResult:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
-class _State:
-    y: jax.Array  # (K+theta+1, *event) committed chain (padded)
+class ASDChainState:
+    """Resumable per-chain ASD state (one speculation round at a time).
+
+    ``y`` is the committed chain: the full padded (K+theta+1, *event)
+    trajectory when keep_trajectory, else the live (theta+1, *event) window
+    whose slot 0 is position ``a``.  The noise streams are carried in-state
+    (buffers, or just the two stream keys in counter mode) so a chain can be
+    suspended, shipped across hosts, and resumed without changing its law.
+    """
+
+    y: jax.Array  # committed chain (padded trajectory or live window)
     a: jax.Array  # () int32 current position
     v_cache: jax.Array  # (*event) cached g(t_a, y_a) for eager_head
     v_valid: jax.Array  # () bool
@@ -74,6 +95,222 @@ class _State:
     model_evals: jax.Array
     accepts: jax.Array
     proposals: jax.Array
+    k_u: jax.Array  # uniform-stream key (counter mode)
+    k_xi: jax.Array  # noise-stream key (counter mode)
+    u_buf: Optional[jax.Array]  # (K+theta+1,) or None in counter mode
+    xi_buf: Optional[jax.Array]  # (K+theta+1, *event) or None in counter mode
+
+
+# Backwards-compat alias: the loop state used to be private.
+_State = ASDChainState
+
+
+def _clamp_theta(theta: int, K: int) -> int:
+    return int(min(theta, K))
+
+
+def init_chain_state(
+    schedule: Schedule,
+    y0: jax.Array,
+    key: jax.Array,
+    theta: int,
+    noise_mode: str = "buffer",
+    keep_trajectory: bool = True,
+) -> ASDChainState:
+    """Fresh chain at position 0 with its absolute-step randomness fixed.
+
+    The (u_i, xi_i) streams are drawn once here (lines 1-2 of Alg 1); every
+    subsequent ``asd_round`` re-reads the window starting at the current
+    position, which is what makes re-speculation deterministic (Lemma 13).
+    """
+    K = schedule.K
+    theta = _clamp_theta(theta, K)
+    ev_shape = y0.shape
+
+    k_u, k_xi = jax.random.split(key)
+    if noise_mode == "buffer":
+        u_buf = jax.random.uniform(k_u, (K + theta + 1,))
+        xi_buf = jax.random.normal(k_xi, (K + theta + 1,) + ev_shape, y0.dtype)
+    else:
+        u_buf = xi_buf = None
+
+    if keep_trajectory:
+        y_buf = jnp.zeros((K + theta + 1,) + ev_shape, y0.dtype)
+    else:
+        y_buf = jnp.zeros((theta + 1,) + ev_shape, y0.dtype)
+    y_buf = y_buf.at[0].set(y0)
+
+    zero = jnp.asarray(0, jnp.int32)
+    return ASDChainState(
+        y=y_buf,
+        a=zero,
+        v_cache=jnp.zeros(ev_shape, y0.dtype),
+        v_valid=jnp.asarray(False),
+        rounds=zero,
+        head_calls=zero,
+        model_evals=zero,
+        accepts=zero,
+        proposals=zero,
+        k_u=k_u,
+        k_xi=k_xi,
+        u_buf=u_buf,
+        xi_buf=xi_buf,
+    )
+
+
+def chain_done(st: ASDChainState, K: int) -> jax.Array:
+    return st.a >= K
+
+
+def chain_sample(st: ASDChainState, K: int, keep_trajectory: bool = True) -> jax.Array:
+    """The final sample of a finished chain (either trajectory mode)."""
+    if keep_trajectory:  # padded (K+theta+1) trajectory buffer
+        return st.y[K]
+    return st.y[0]  # live window: slot 0 is position a == K on exit
+
+
+def asd_round(
+    model_fn: ModelFn,
+    schedule: Schedule,
+    st: ASDChainState,
+    theta: int,
+    eager_head: bool = False,
+    noise_mode: str = "buffer",
+    keep_trajectory: bool = True,
+    grs_impl: str = "core",
+) -> ASDChainState:
+    """One speculation round (Alg 1 lines 5-13): propose, roll theta steps,
+    verify in ONE batched model call, commit the accepted prefix.
+
+    Identity on finished chains (a >= K): under vmap a slot whose chain has
+    retired keeps its state (and counters) frozen while its neighbours keep
+    speculating — the property continuous batching relies on.  The static
+    arguments (theta, eager_head, noise_mode, keep_trajectory) must match the
+    ``init_chain_state`` call that produced ``st``.
+    """
+    K = schedule.K
+    theta = _clamp_theta(theta, K)
+    sched = schedule.pad(theta + 1)
+    ev_shape = st.v_cache.shape
+    ev_ndim = st.v_cache.ndim
+    dtype = st.y.dtype
+
+    def window(arr, start, length):
+        return jax.lax.dynamic_slice_in_dim(arr, start, length, axis=0)
+
+    def noise_window(a):
+        if noise_mode == "buffer":
+            return window(st.u_buf, a, theta), window(st.xi_buf, a, theta)
+        idx = a + jnp.arange(theta)
+        u_w = jax.vmap(lambda i: jax.random.uniform(jax.random.fold_in(st.k_u, i), ()))(idx)
+        xi_w = jax.vmap(
+            lambda i: jax.random.normal(jax.random.fold_in(st.k_xi, i), ev_shape, dtype)
+        )(idx)
+        return u_w, xi_w
+
+    a = st.a
+    if keep_trajectory:
+        y_a = jax.lax.dynamic_index_in_dim(st.y, a, axis=0, keepdims=False)
+    else:
+        y_a = st.y[0]
+    t_a = sched.t_model[a]
+
+    # --- 1. proposal call (line 6), possibly served from the eager cache
+    if eager_head:
+        v_a = jnp.where(st.v_valid, st.v_cache, _call1(model_fn, t_a, y_a))
+        new_head = jnp.where(st.v_valid, 0, 1)
+    else:
+        v_a = _call1(model_fn, t_a, y_a)
+        new_head = jnp.asarray(1, jnp.int32)
+
+    # --- 2. theta-step proposal rollout (lines 7-9)
+    A_w = window(sched.A, a, theta)
+    B_w = window(sched.B, a, theta)
+    sig_w = window(sched.sigma, a, theta)
+    t_w = window(sched.t_model, a, theta)
+    u_w, xi_w = noise_window(a)
+
+    def roll(y_i, inp):
+        A, B, sg, x = inp
+        m_hat = A * y_i + B * v_a
+        y_next = m_hat + sg * x
+        return y_next, (m_hat, y_next)
+
+    _, (m_hats, y_props) = jax.lax.scan(roll, y_a, (A_w, B_w, sig_w, xi_w))
+    y_prev = jnp.concatenate([y_a[None], y_props[:-1]], axis=0)  # (theta, ev)
+
+    # --- 3. ONE batched parallel round (line 11)
+    if eager_head:
+        pts = jnp.concatenate([y_prev, y_props[-1][None]], axis=0)
+        ts = jnp.concatenate([t_w, sched.t_model[a + theta][None]], axis=0)
+        g_all = model_fn(ts, pts)
+        g_par, g_head = g_all[:-1], g_all[-1]
+    else:
+        g_par = model_fn(t_w, y_prev)
+        g_head = None
+    m_tgt = bcast_right(A_w, ev_ndim + 1) * y_prev + bcast_right(
+        B_w, ev_ndim + 1
+    ) * g_par
+
+    # --- 4. Verifier (Alg 2) + windowed commit
+    if grs_impl == "kernel":
+        from repro.kernels.grs.ops import grs as grs_k
+
+        z, acc = grs_k(u_w, xi_w, m_hats, m_tgt, sig_w, event_ndim=ev_ndim)
+    else:
+        z, acc = grs(u_w, xi_w, m_hats, m_tgt, sig_w, event_ndim=ev_ndim)
+    n_valid = jnp.minimum(theta, K - a)
+    slot = jnp.arange(theta)
+    acc = acc & (slot < n_valid)
+    lead = leading_true_count(acc)
+    rejected = lead < n_valid
+    advance = lead + jnp.where(rejected, 1, 0)
+
+    if keep_trajectory:
+        old = window(st.y, a + 1, theta)
+    else:
+        old = st.y[1:]
+    mask = bcast_right(slot < advance, ev_ndim + 1)
+    committed = jnp.where(mask, z, old)
+    if keep_trajectory:
+        y_new = jax.lax.dynamic_update_slice_in_dim(
+            st.y, committed, a + 1, axis=0
+        )
+    else:
+        # shift the live window so slot 0 becomes position a + advance
+        buf2 = jnp.concatenate(
+            [st.y[:1], committed,
+             jnp.zeros((theta,) + ev_shape, dtype)], axis=0
+        )
+        y_new = jax.lax.dynamic_slice_in_dim(buf2, advance, theta + 1, axis=0)
+
+    full_accept = jnp.logical_and(~rejected, n_valid == theta)
+    new = ASDChainState(
+        y=y_new,
+        a=a + advance,
+        v_cache=g_head if eager_head else st.v_cache,
+        v_valid=full_accept if eager_head else jnp.asarray(False),
+        rounds=st.rounds + 1,
+        head_calls=st.head_calls + new_head,
+        model_evals=st.model_evals
+        + new_head
+        + n_valid
+        + (1 if eager_head else 0),
+        accepts=st.accepts + lead,
+        proposals=st.proposals + n_valid,
+        k_u=st.k_u,
+        k_xi=st.k_xi,
+        u_buf=st.u_buf,
+        xi_buf=st.xi_buf,
+    )
+    return _where_tree(a < K, new, st)
+
+
+def _where_tree(pred, new, old):
+    """Leaf-wise select; keeps finished chains frozen under vmap."""
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(bcast_right(pred, n.ndim), n, o), new, old
+    )
 
 
 def asd_sample(
@@ -102,155 +339,26 @@ def asd_sample(
         ``trajectory`` field then holds the final window.
     """
     K = schedule.K
-    theta = int(min(theta, K))
-    sched = schedule.pad(theta + 1)
-    ev_shape = y0.shape
-    ev_ndim = y0.ndim
+    theta = _clamp_theta(theta, K)
 
-    k_u, k_xi = jax.random.split(key)
-    # absolute-step randomness, fixed once (lines 1-2); index i drives y_i->y_{i+1}
-    if noise_mode == "buffer":
-        u_buf = jax.random.uniform(k_u, (K + theta + 1,))
-        xi_buf = jax.random.normal(k_xi, (K + theta + 1,) + ev_shape, y0.dtype)
-    else:
-        u_buf = xi_buf = None
+    st0 = init_chain_state(schedule, y0, key, theta, noise_mode, keep_trajectory)
 
-    if keep_trajectory:
-        y_buf = jnp.zeros((K + theta + 1,) + ev_shape, y0.dtype)
-        y_buf = y_buf.at[0].set(y0)
-    else:
-        y_buf = jnp.zeros((theta + 1,) + ev_shape, y0.dtype)
-        y_buf = y_buf.at[0].set(y0)
-
-    def window(arr, start, length):
-        return jax.lax.dynamic_slice_in_dim(arr, start, length, axis=0)
-
-    def noise_window(a):
-        if noise_mode == "buffer":
-            return window(u_buf, a, theta), window(xi_buf, a, theta)
-        idx = a + jnp.arange(theta)
-        u_w = jax.vmap(lambda i: jax.random.uniform(jax.random.fold_in(k_u, i), ()))(idx)
-        xi_w = jax.vmap(
-            lambda i: jax.random.normal(jax.random.fold_in(k_xi, i), ev_shape, y0.dtype)
-        )(idx)
-        return u_w, xi_w
-
-    def cond(st: _State):
+    def cond(st: ASDChainState):
         return st.a < K
 
-    def body(st: _State):
-        a = st.a
-        if keep_trajectory:
-            y_a = jax.lax.dynamic_index_in_dim(st.y, a, axis=0, keepdims=False)
-        else:
-            y_a = st.y[0]
-        t_a = sched.t_model[a]
-
-        # --- 1. proposal call (line 6), possibly served from the eager cache
-        if eager_head:
-            v_a = jnp.where(st.v_valid, st.v_cache, _call1(model_fn, t_a, y_a))
-            new_head = jnp.where(st.v_valid, 0, 1)
-        else:
-            v_a = _call1(model_fn, t_a, y_a)
-            new_head = jnp.asarray(1, jnp.int32)
-
-        # --- 2. theta-step proposal rollout (lines 7-9)
-        A_w = window(sched.A, a, theta)
-        B_w = window(sched.B, a, theta)
-        sig_w = window(sched.sigma, a, theta)
-        t_w = window(sched.t_model, a, theta)
-        u_w, xi_w = noise_window(a)
-
-        def roll(y_i, inp):
-            A, B, sg, x = inp
-            m_hat = A * y_i + B * v_a
-            y_next = m_hat + sg * x
-            return y_next, (m_hat, y_next)
-
-        _, (m_hats, y_props) = jax.lax.scan(roll, y_a, (A_w, B_w, sig_w, xi_w))
-        y_prev = jnp.concatenate([y_a[None], y_props[:-1]], axis=0)  # (theta, ev)
-
-        # --- 3. ONE batched parallel round (line 11)
-        if eager_head:
-            pts = jnp.concatenate([y_prev, y_props[-1][None]], axis=0)
-            ts = jnp.concatenate([t_w, sched.t_model[a + theta][None]], axis=0)
-            g_all = model_fn(ts, pts)
-            g_par, g_head = g_all[:-1], g_all[-1]
-        else:
-            g_par = model_fn(t_w, y_prev)
-            g_head = None
-        m_tgt = bcast_right(A_w, ev_ndim + 1) * y_prev + bcast_right(
-            B_w, ev_ndim + 1
-        ) * g_par
-
-        # --- 4. Verifier (Alg 2) + windowed commit
-        if grs_impl == "kernel":
-            from repro.kernels.grs.ops import grs as grs_k
-
-            z, acc = grs_k(u_w, xi_w, m_hats, m_tgt, sig_w, event_ndim=ev_ndim)
-        else:
-            z, acc = grs(u_w, xi_w, m_hats, m_tgt, sig_w, event_ndim=ev_ndim)
-        n_valid = jnp.minimum(theta, K - a)
-        slot = jnp.arange(theta)
-        acc = acc & (slot < n_valid)
-        lead = leading_true_count(acc)
-        rejected = lead < n_valid
-        advance = lead + jnp.where(rejected, 1, 0)
-
-        if keep_trajectory:
-            old = window(st.y, a + 1, theta)
-        else:
-            old = st.y[1:]
-        mask = bcast_right(slot < advance, ev_ndim + 1)
-        committed = jnp.where(mask, z, old)
-        if keep_trajectory:
-            y_new = jax.lax.dynamic_update_slice_in_dim(
-                st.y, committed, a + 1, axis=0
-            )
-        else:
-            # shift the live window so slot 0 becomes position a + advance
-            buf2 = jnp.concatenate(
-                [st.y[:1], committed,
-                 jnp.zeros((theta,) + ev_shape, y0.dtype)], axis=0
-            )
-            y_new = jax.lax.dynamic_slice_in_dim(buf2, advance, theta + 1, axis=0)
-
-        full_accept = jnp.logical_and(~rejected, n_valid == theta)
-        return _State(
-            y=y_new,
-            a=a + advance,
-            v_cache=g_head if eager_head else st.v_cache,
-            v_valid=full_accept if eager_head else jnp.asarray(False),
-            rounds=st.rounds + 1,
-            head_calls=st.head_calls + new_head,
-            model_evals=st.model_evals
-            + new_head
-            + n_valid
-            + (1 if eager_head else 0),
-            accepts=st.accepts + lead,
-            proposals=st.proposals + n_valid,
+    def body(st: ASDChainState):
+        return asd_round(
+            model_fn, schedule, st, theta, eager_head, noise_mode,
+            keep_trajectory, grs_impl,
         )
 
-    st0 = _State(
-        y=y_buf,
-        a=jnp.asarray(0, jnp.int32),
-        v_cache=jnp.zeros(ev_shape, y0.dtype),
-        v_valid=jnp.asarray(False),
-        rounds=jnp.asarray(0, jnp.int32),
-        head_calls=jnp.asarray(0, jnp.int32),
-        model_evals=jnp.asarray(0, jnp.int32),
-        accepts=jnp.asarray(0, jnp.int32),
-        proposals=jnp.asarray(0, jnp.int32),
-    )
     st = jax.lax.while_loop(cond, body, st0)
     if keep_trajectory:
         traj = st.y[: K + 1]
-        sample = st.y[K]
     else:
         traj = st.y  # the final (theta+1) live window
-        sample = st.y[0]  # position a == K on exit
     return ASDResult(
-        sample=sample,
+        sample=chain_sample(st, K, keep_trajectory),
         trajectory=traj,
         rounds=st.rounds,
         head_calls=st.head_calls,
@@ -279,7 +387,9 @@ def asd_sample_batched(
     Under vmap the per-round batched model call becomes a (B*theta)-point
     forward — the SPMD form that shards over the mesh `data` axis.  Chains
     finish at different rounds; the fused loop runs to the slowest chain
-    (standard batched speculative serving semantics).
+    (standard batched speculative serving semantics).  The continuous-
+    batching engine in ``repro.serving.engine`` avoids that straggler waste
+    by driving ``asd_round`` itself and refilling retired slots.
     """
     keys = jax.random.split(key, y0.shape[0])
     fn = lambda y, k: asd_sample(

@@ -100,6 +100,21 @@ def param_pspecs(boxed_tree, mesh: Mesh | None = None,
     return jax.tree_util.tree_map(fit, boxed_tree, is_leaf=is_boxed)
 
 
+def chain_state_shardings(mesh: Mesh, states=None):
+    """Slot-batch layout for the continuous serving engine: every leaf of a
+    vmapped ``ASDChainState`` (leading axis = slots) shards that axis over
+    the batch axes ("pod","data"); per-slot scalars and trailing event dims
+    stay unsharded.  The (slots x theta)-point verification forward inside
+    ``asd_round`` then runs data-parallel across the mesh.
+
+    With ``states`` returns a matching pytree of shardings; without, the
+    single ``NamedSharding`` (device_put broadcasts it over a pytree)."""
+    sh = NamedSharding(mesh, batch_pspec(mesh))
+    if states is None:
+        return sh
+    return jax.tree_util.tree_map(lambda _: sh, states)
+
+
 def shardings_from_pspecs(mesh: Mesh, pspec_tree):
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s),

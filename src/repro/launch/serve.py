@@ -3,9 +3,20 @@
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
     PYTHONPATH=src python -m repro.launch.serve --mesh 2x4 --chains 8 --theta 8
 
-The batched-ASD program is one jit: chains shard over (pod, data), denoiser
-weights over model — the TPU-native form of the paper's multi-GPU parallel
-verification (DESIGN.md §2).
+Two serving modes:
+
+  --engine fused       one fused batched-ASD program (asd_sample under vmap):
+                       chains shard over (pod, data), denoiser weights over
+                       model — each launch runs to its slowest chain.
+  --engine continuous  the continuous-batching engine: a slot batch of
+                       resumable ``ASDChainState``s sharded over (pod, data)
+                       is driven one speculation round at a time; finished
+                       chains retire at round boundaries and their slots are
+                       refilled from the request queue (repro/serving).
+
+Both are the TPU-native form of the paper's multi-GPU parallel verification
+(DESIGN.md §2): the per-round model call is a (slots*theta)-point forward,
+data-parallel over the mesh.
 """
 
 from __future__ import annotations
@@ -22,20 +33,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.registry import get_denoiser_config
 from repro.core.asd import asd_sample_batched
 from repro.core.schedules import ddpm as ddpm_schedule
-from repro.distributed.sharding import batch_pspec, param_pspecs, shardings_from_pspecs
+from repro.distributed.sharding import (
+    batch_pspec,
+    chain_state_shardings,
+    param_pspecs,
+    shardings_from_pspecs,
+)
 from repro.models.diffusion import denoiser_init, make_ddpm_model_fn
 from repro.nn.param import unbox
+from repro.serving.engine import ContinuousASDEngine, Request
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--model", default="paper-diffusion-policy")
-    ap.add_argument("--mesh", default="2x4")
-    ap.add_argument("--chains", type=int, default=8)
-    ap.add_argument("--theta", type=int, default=8)
-    ap.add_argument("--K", type=int, default=100)
-    args = ap.parse_args()
-
+def _build(args):
     dims = tuple(int(x) for x in args.mesh.split("x"))
     names = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
     mesh = Mesh(np.asarray(jax.devices()[: int(np.prod(dims))]).reshape(dims), names)
@@ -46,7 +55,11 @@ def main():
     params = jax.jit(
         lambda k: unbox(denoiser_init(k, dc)), out_shardings=shardings
     )(jax.random.PRNGKey(0))
+    return mesh, dc, params
 
+
+def run_fused(args):
+    mesh, dc, params = _build(args)
     sched = ddpm_schedule(args.K)
     bshard = NamedSharding(mesh, batch_pspec(mesh))
 
@@ -66,10 +79,71 @@ def main():
     out, rounds, heads = jax.block_until_ready(sample(params, y0, jax.random.PRNGKey(1)))
     dt = time.perf_counter() - t0
     depth = float(np.mean(np.asarray(rounds) + np.asarray(heads)))
-    print(f"sampled {args.chains} chains (K={args.K}) in {dt:.1f}s "
+    print(f"[fused] sampled {args.chains} chains (K={args.K}) in {dt:.1f}s "
           f"(includes compile); sequential depth {depth:.0f} "
           f"=> {args.K / depth:.1f}x algorithmic speedup")
     print(f"output {out.shape}, finite={bool(np.isfinite(np.asarray(out)).all())}")
+
+
+def run_continuous(args):
+    mesh, dc, params = _build(args)
+    sched = ddpm_schedule(args.K)
+    batch_world = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                               if a in ("pod", "data")]))
+    if args.slots:
+        slots = args.slots
+        if slots % batch_world:
+            raise SystemExit(
+                f"--slots {slots} must be a multiple of the mesh batch axes "
+                f"(pod*data = {batch_world}) so the slot batch shards evenly")
+    else:  # derive: ~half the request count, rounded up to shard evenly
+        slots = max(args.chains // 2, batch_world)
+        slots = ((slots + batch_world - 1) // batch_world) * batch_world
+
+    eng = ContinuousASDEngine(
+        model_fn_factory=lambda p, cond: make_ddpm_model_fn(p, dc),
+        params=params,  # jit argument: keeps the mesh sharding of weights
+        schedule=sched,
+        event_shape=(dc.seq_len, dc.d_data),
+        num_slots=slots,
+        theta=args.theta,
+        eager_head=True,
+        noise_mode="counter",
+        keep_trajectory=False,
+        state_sharding=chain_state_shardings(mesh),
+    )
+    reqs = [Request(i, key=jax.random.PRNGKey(1000 + i)) for i in range(args.chains)]
+    t0 = time.perf_counter()
+    out = eng.serve(reqs)
+    dt = time.perf_counter() - t0
+    s = eng.stats
+    print(f"[continuous] served {s.retired} requests on {slots} slots "
+          f"(K={args.K}) in {dt:.1f}s (includes compile): "
+          f"{s.rounds_total} fused rounds, accept rate {s.accept_rate():.2f}, "
+          f"mean queue latency {s.mean_queue_latency()*1e3:.0f}ms, "
+          f"{s.throughput():.2f} samples/s")
+    sample = next(iter(out.values()))
+    print(f"output {sample.shape} per request, "
+          f"finite={bool(np.isfinite(sample).all())}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="paper-diffusion-policy")
+    ap.add_argument("--mesh", default="2x4")
+    ap.add_argument("--engine", default="continuous",
+                    choices=("continuous", "fused"))
+    ap.add_argument("--chains", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="continuous engine slots (default: ~chains/2, "
+                         "rounded up to a multiple of the mesh batch axes)")
+    ap.add_argument("--theta", type=int, default=8)
+    ap.add_argument("--K", type=int, default=100)
+    args = ap.parse_args()
+    if args.engine == "continuous":
+        run_continuous(args)
+    else:
+        run_fused(args)
 
 
 if __name__ == "__main__":

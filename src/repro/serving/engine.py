@@ -1,12 +1,23 @@
-"""ASD serving engine: batched diffusion-sampling requests.
+"""ASD serving engines: batched diffusion-sampling requests.
 
-The end-to-end inference driver of this framework (the paper is an
-inference-acceleration paper).  Requests (optionally conditioned) are pulled
-from a queue, padded into fixed-size batches, and sampled with the fused
-batched-ASD program — one compiled program reused across batches.
+Two engines share one request/metrics substrate:
 
-On a mesh the same engine's sample_fn is pjit'ed with the batch axis sharded
-over ("pod","data"); see repro/launch/serve.py.
+``ASDServingEngine`` — the chunked static baseline.  Requests are padded into
+fixed-size batches and each batch runs the *fused* batched-ASD program
+(``asd_sample`` under vmap) to completion: every batch is paced by its
+slowest chain and padded lanes burn compute.
+
+``ContinuousASDEngine`` — the continuous-batching engine.  It owns a fixed
+set of *slots* holding vmapped ``ASDChainState``s and drives the resumable
+``asd_round`` API itself, one speculation round per iteration over all slots
+at once.  A chain that commits its final step retires *at the next round
+boundary* and its slot is refilled from the queue (FCFS, see
+``repro.serving.scheduler``), so the batch never waits for stragglers.  Each
+round is ONE fused (slots x theta)-point verification forward — on a mesh it
+is pjit-sharded over the `data` axis (see repro/launch/serve.py).
+
+Both engines produce per-request ``RequestMetrics`` and an ``EngineStats``
+aggregate (rounds, head calls, accept rate, queue latency, throughput).
 """
 
 from __future__ import annotations
@@ -19,34 +30,309 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.asd import asd_sample
+from repro.core.asd import (
+    ASDChainState,
+    asd_round,
+    asd_sample,
+    chain_sample,
+    init_chain_state,
+)
 from repro.core.schedules import Schedule
 from repro.core.sequential import sequential_sample, init_y0
-from repro.models.diffusion import DenoiserConfig, denoiser_fwd
+from repro.models.diffusion import DenoiserConfig
+from repro.serving.metrics import EngineStats, RequestMetrics
+from repro.serving.scheduler import SlotScheduler
 
 
 @dataclasses.dataclass
 class Request:
     rid: int
     cond: Optional[np.ndarray] = None  # (d_cond,) or None
+    key: Optional[jax.Array] = None  # per-request PRNG key (else derived)
+    y0: Optional[np.ndarray] = None  # explicit start state (else init_y0)
 
 
-@dataclasses.dataclass
-class EngineStats:
-    requests: int = 0
-    batches: int = 0
-    rounds_total: int = 0
-    head_calls_total: int = 0
-    wall_time: float = 0.0
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
 
-    def parallel_depth_per_sample(self):
-        return (self.rounds_total + self.head_calls_total) / max(self.requests, 1)
+
+class ContinuousASDEngine:
+    """Slot-based continuous-batching ASD server.
+
+    Args:
+      model_fn_factory: ``cond -> model_fn`` (or ``(params, cond) ->
+        model_fn`` when ``params`` is given); ``cond`` is a traced (d_cond,)
+        array when ``d_cond > 0``, else ``None``.
+      schedule: the affine step schedule shared by all requests.
+      event_shape: per-chain sample shape.
+      num_slots: vmapped lanes of the per-round program; on a mesh this is
+        the dimension sharded over `data`.
+      theta: speculation window.
+      params: optional model weight pytree, threaded through the per-round
+        jit as an ARGUMENT.  Closure-captured weights would be baked into
+        the executable as constants — re-processed on every standalone
+        round dispatch (a measurable per-round tax on CPU) and forced
+        replicated on a mesh; passing them as an argument keeps their
+        sharding and makes the round program reuse device buffers.
+      state_sharding: optional sharding pytree (matching ``ASDChainState``
+        leaves with a leading slot axis) applied to the slot batch, e.g. from
+        ``repro.distributed.sharding.chain_state_shardings``.
+    """
+
+    def __init__(
+        self,
+        model_fn_factory: Callable,
+        schedule: Schedule,
+        event_shape: tuple,
+        num_slots: int = 8,
+        theta: int = 8,
+        d_cond: int = 0,
+        eager_head: bool = True,
+        noise_mode: str = "buffer",
+        keep_trajectory: bool = False,
+        grs_impl: str = "core",
+        params=None,
+        state_sharding=None,
+        pipelined: bool = False,
+        seed: int = 0,
+    ):
+        self.schedule = schedule
+        self.event_shape = tuple(event_shape)
+        self.num_slots = num_slots
+        self.theta = int(min(theta, schedule.K))
+        self.d_cond = d_cond
+        self.eager_head = eager_head
+        self.noise_mode = noise_mode
+        self.keep_trajectory = keep_trajectory
+        self.grs_impl = grs_impl
+        self.pipelined = pipelined
+        self.scheduler = SlotScheduler(num_slots)
+        self.stats = EngineStats()
+        self._key = jax.random.PRNGKey(seed)
+        self._results: dict[int, np.ndarray] = {}
+
+        statics = dict(
+            theta=self.theta,
+            eager_head=eager_head,
+            noise_mode=noise_mode,
+            keep_trajectory=keep_trajectory,
+            grs_impl=grs_impl,
+        )
+        self._params = params
+        if params is None:
+            make_fn = lambda p, cond: model_fn_factory(cond)
+        else:
+            make_fn = model_fn_factory  # (params, cond) -> model_fn
+
+        def _round(states, conds, p):
+            def one(st, cond):
+                return asd_round(make_fn(p, cond), schedule, st, **statics)
+
+            if conds is None:
+                return jax.vmap(lambda st: one(st, None))(states)
+            return jax.vmap(one)(states, conds)
+
+        self._round_fn = jax.jit(_round)
+
+        def _admit(states, y0s, keys, idxs):
+            # init + scatter for a whole round's admissions in ONE dispatch
+            new_sts = jax.vmap(
+                lambda y0, k: init_chain_state(
+                    schedule, y0, k, self.theta, noise_mode, keep_trajectory
+                )
+            )(y0s, keys)
+            return jax.tree_util.tree_map(
+                lambda b, n: b.at[idxs].set(n), states, new_sts
+            )
+
+        self._admit_fn = jax.jit(_admit)
+
+        def _peek(states, idxs):
+            # one dispatch + one transfer for a whole retirement wave
+            def one(idx):
+                st = jax.tree_util.tree_map(lambda x: x[idx], states)
+                sample = chain_sample(st, schedule.K, keep_trajectory)
+                return (sample, st.rounds, st.head_calls, st.model_evals,
+                        st.accepts, st.proposals)
+
+            return jax.vmap(one)(idxs)
+
+        self._peek_fn = jax.jit(_peek)
+
+        # All slots start as already-finished dummy chains: frozen under
+        # asd_round until a real request is admitted over them.
+        K = schedule.K
+        self._states = jax.vmap(
+            lambda k: init_chain_state(
+                schedule, jnp.zeros(self.event_shape), k, self.theta,
+                noise_mode, keep_trajectory,
+            )
+        )(jax.random.split(jax.random.PRNGKey(seed), num_slots))
+        self._states = dataclasses.replace(
+            self._states, a=jnp.full((num_slots,), K, jnp.int32)
+        )
+        self._conds = (
+            jnp.zeros((num_slots, d_cond), jnp.float32) if d_cond else None
+        )
+        if state_sharding is not None:
+            self._states = jax.device_put(self._states, state_sharding)
+
+    # -- request lifecycle --------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        self.scheduler.submit(request, time.perf_counter())
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _admit_pending(self) -> None:
+        now = time.perf_counter()
+        placed = self.scheduler.admit(now, self.stats.rounds_total)
+        if not placed:
+            return
+        idxs, y0s, keys = [], [], []
+        conds = np.array(self._conds) if self.d_cond else None
+        for slot, req in placed:
+            key = req.key if req.key is not None else self._next_key()
+            if req.y0 is not None:
+                y0 = jnp.asarray(req.y0, jnp.float32)
+            else:
+                key, k0 = jax.random.split(key)
+                y0 = init_y0(self.schedule, k0, self.event_shape)
+            idxs.append(slot)
+            y0s.append(y0)
+            keys.append(key)
+            if self.d_cond:
+                conds[slot] = 0.0 if req.cond is None else np.asarray(
+                    req.cond, np.float32)
+            self.stats.requests += 1
+        # pad the admission batch to a power of two (duplicate scatter of the
+        # same record is a no-op) so the jitted program has O(log S) variants
+        n = len(idxs)
+        width = 1
+        while width < n:
+            width *= 2
+        while len(idxs) < width:
+            idxs.append(idxs[0])
+            y0s.append(y0s[0])
+            keys.append(keys[0])
+        self._states = self._admit_fn(
+            self._states, jnp.stack(y0s), jnp.stack(keys),
+            jnp.asarray(idxs, jnp.int32),
+        )
+        if self.d_cond:
+            self._conds = jnp.asarray(conds)
+
+    def _retire_finished(self, states=None, snapshot_rounds=None) -> None:
+        # ``states`` may be an older snapshot than self._states: a finished
+        # chain's state is frozen by asd_round, so peeking the snapshot
+        # yields identical values while the device crunches newer rounds.
+        # ``snapshot_rounds`` is the engine round count the snapshot
+        # reflects: slots admitted at or after it hold a new chain NOT yet
+        # present in the snapshot (whose lane still shows the previous,
+        # finished occupant) and must not be retired against it.
+        states = self._states if states is None else states
+        if snapshot_rounds is None:
+            snapshot_rounds = self.stats.rounds_total
+        a = np.asarray(states.a)
+        now = time.perf_counter()
+        K = self.schedule.K
+        finished = [
+            slot for slot in self.scheduler.active_slots()
+            if self.scheduler.slot_info(slot).admit_round < snapshot_rounds
+            and a[slot] >= K
+        ]
+        if not finished:
+            return
+        # pad the wave to a power of two (duplicate peeks are free) so the
+        # jitted gather has O(log S) compile variants, like admissions
+        idxs = list(finished)
+        width = 1
+        while width < len(idxs):
+            width *= 2
+        idxs += [idxs[0]] * (width - len(idxs))
+        samples, rounds, heads, evals, accepts, proposals = jax.device_get(
+            self._peek_fn(states, jnp.asarray(idxs, jnp.int32)))
+        for i, slot in enumerate(finished):
+            info = self.scheduler.retire(slot)
+            self._results[info.request.rid] = np.asarray(samples[i])
+            self.stats.observe(RequestMetrics(
+                rid=info.request.rid,
+                queue_latency=info.admit_time - info.submit_time,
+                service_time=now - info.admit_time,
+                rounds=int(rounds[i]),
+                head_calls=int(heads[i]),
+                model_evals=int(evals[i]),
+                accepts=int(accepts[i]),
+                proposals=int(proposals[i]),
+            ))
+
+    def step(self) -> bool:
+        """Admit, run ONE fused speculation round over all slots, retire.
+
+        Returns True while there is still work queued or in flight.
+        """
+        if not self.scheduler.has_work():
+            return False
+        self._admit_pending()
+        self._states = self._round_fn(self._states, self._conds, self._params)
+        self.stats.rounds_total += 1
+        self._retire_finished()
+        return self.scheduler.has_work()
+
+    def serve(self, requests: list[Request], key=None) -> dict[int, np.ndarray]:
+        """Submit everything, drive rounds until drained, return {rid: sample}.
+
+        With ``pipelined=True`` the loop dispatches round N+1 before round
+        N's results are read back, so host-side bookkeeping (polling,
+        retiring, metrics) overlaps the device's speculation round instead
+        of serializing with it.  Retirement then lags one round — a freed
+        slot admits its next request one round later — which trades a bit of
+        queue latency (and ~1 extra round per wave) for keeping an
+        accelerator saturated; on a host-only CPU backend the overlap buys
+        nothing and the synchronous loop is the default.
+        """
+        if key is not None:
+            self._key = key
+        t0 = time.perf_counter()
+        for r in requests:
+            self.submit(r)
+        if self.pipelined:
+            prev = None
+            while self.scheduler.has_work():
+                self._admit_pending()
+                nxt = self._round_fn(self._states, self._conds, self._params)
+                self.stats.rounds_total += 1
+                if prev is not None:
+                    # overlaps the round in flight; prev is one round old
+                    self._retire_finished(prev, self.stats.rounds_total - 1)
+                self._states = prev = nxt
+        else:
+            while self.step():
+                pass
+        jax.block_until_ready(self._states.a)
+        self.stats.wall_time += time.perf_counter() - t0
+        out, self._results = self._results, {}
+        return out
+
+    def chain_state(self, slot: int) -> ASDChainState:
+        """Debug view of one slot's resumable state."""
+        return jax.tree_util.tree_map(lambda x: x[slot], self._states)
+
+
+# ---------------------------------------------------------------------------
+# Chunked static baseline
+# ---------------------------------------------------------------------------
 
 
 class ASDServingEngine:
-    """Batched exact-sampling server.
+    """Batched exact-sampling server (chunked static batching baseline).
 
     mode: "asd" (speculative, parallel) or "ddpm" (sequential baseline).
+    Every chunk is padded to ``batch_size`` and fused to run until its
+    slowest chain finishes — the waste the continuous engine removes.
     """
 
     def __init__(
@@ -102,13 +388,15 @@ class ASDServingEngine:
         samples = jax.device_get(samples)
         self.stats.requests += n
         self.stats.batches += 1
+        # the fused batch runs to its slowest chain: batch depth is the max
         self.stats.rounds_total += int(np.max(np.asarray(rounds)))
         self.stats.head_calls_total += int(np.max(np.asarray(heads)))
+        self.stats.retired += n
         self.stats.wall_time += time.perf_counter() - t0
         return {r.rid: samples[i] for i, r in enumerate(requests)}
 
     def serve(self, requests: list[Request], key) -> dict[int, np.ndarray]:
-        """Simple continuous serving: chunk the queue into batches."""
+        """Chunked static serving: pad the queue into fixed batches."""
         out = {}
         for i in range(0, len(requests), self.batch_size):
             chunk = requests[i : i + self.batch_size]

@@ -1,0 +1,91 @@
+"""Per-request and engine-level serving metrics.
+
+``RequestMetrics`` is emitted once per retired chain; the per-chain speculation
+counters (rounds, head calls, accepts, proposals) come straight off the
+``ASDChainState`` — they are exact because ``asd_round`` freezes a finished
+chain's counters while its slot waits to be retired.
+
+``EngineStats`` aggregates across requests and keeps the engine-level counters
+(fused rounds driven, wall time) that the throughput benchmark and the
+system tests read.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    rid: int
+    queue_latency: float  # submit -> admit (s)
+    service_time: float  # admit -> retire (s)
+    rounds: int  # speculation rounds this chain ran
+    head_calls: int  # sequential proposal calls actually made
+    model_evals: int  # total model evaluations (all speculation slots)
+    accepts: int
+    proposals: int
+
+    @property
+    def accept_rate(self) -> float:
+        return self.accepts / max(self.proposals, 1)
+
+    @property
+    def parallel_depth(self) -> int:
+        """Sequential model-call depth this chain experienced."""
+        return self.rounds + self.head_calls
+
+    @property
+    def latency(self) -> float:
+        return self.queue_latency + self.service_time
+
+
+@dataclasses.dataclass
+class EngineStats:
+    requests: int = 0  # admitted into the engine
+    retired: int = 0  # completed and returned
+    batches: int = 0  # chunked engine: batches launched
+    rounds_total: int = 0  # fused engine rounds driven (all slots at once)
+    head_calls_total: int = 0
+    model_evals_total: int = 0
+    accepts_total: int = 0
+    proposals_total: int = 0
+    queue_latency_total: float = 0.0
+    wall_time: float = 0.0
+    per_request: List[RequestMetrics] = dataclasses.field(default_factory=list)
+
+    def observe(self, rm: RequestMetrics) -> None:
+        self.retired += 1
+        self.head_calls_total += rm.head_calls
+        self.model_evals_total += rm.model_evals
+        self.accepts_total += rm.accepts
+        self.proposals_total += rm.proposals
+        self.queue_latency_total += rm.queue_latency
+        self.per_request.append(rm)
+
+    def parallel_depth_per_sample(self) -> float:
+        return (self.rounds_total + self.head_calls_total) / max(self.requests, 1)
+
+    def accept_rate(self) -> float:
+        return self.accepts_total / max(self.proposals_total, 1)
+
+    def mean_queue_latency(self) -> float:
+        return self.queue_latency_total / max(self.retired, 1)
+
+    def throughput(self) -> float:
+        """Completed samples per second of engine wall time."""
+        return self.retired / self.wall_time if self.wall_time > 0 else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "requests": self.requests,
+            "retired": self.retired,
+            "rounds_total": self.rounds_total,
+            "head_calls_total": self.head_calls_total,
+            "model_evals_total": self.model_evals_total,
+            "accept_rate": self.accept_rate(),
+            "mean_queue_latency_s": self.mean_queue_latency(),
+            "wall_time_s": self.wall_time,
+            "throughput_rps": self.throughput(),
+        }

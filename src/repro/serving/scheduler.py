@@ -1,0 +1,96 @@
+"""Slot scheduler for continuous-batching ASD serving.
+
+The engine owns a fixed number of *slots* — lanes of the vmapped per-round
+speculation program.  The scheduler is the host-side bookkeeping around them:
+
+  submitted --> queued --FCFS admit--> active (slot i) --chain done--> retired
+                                          ^                               |
+                                          +------- slot i freed ----------+
+
+Admission happens at round boundaries only (the device program is SPMD over
+slots, so a slot can only change occupants between rounds).  A chain that
+accepts its full speculation window retires early and frees its slot for the
+next queued request instead of blocking the batch until the slowest chain
+finishes — the standard continuous-batching move from LLM serving, applied to
+diffusion chains.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class SlotInfo:
+    """Host-side record of the request occupying a slot."""
+
+    request: Any
+    submit_time: float
+    admit_time: float
+    admit_round: int  # engine round counter at admission
+
+
+class SlotScheduler:
+    """FCFS admission of requests into a fixed set of engine slots."""
+
+    def __init__(self, num_slots: int):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.num_slots = num_slots
+        self._queue: deque = deque()  # (request, submit_time)
+        self._slots: List[Optional[SlotInfo]] = [None] * num_slots
+        self.submitted = 0
+        self.admitted = 0
+        self.retired = 0
+
+    # -- queue side ---------------------------------------------------------
+
+    def submit(self, request, now: float) -> None:
+        self._queue.append((request, now))
+        self.submitted += 1
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    # -- slot side ----------------------------------------------------------
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is not None]
+
+    def slot_info(self, slot: int) -> Optional[SlotInfo]:
+        return self._slots[slot]
+
+    def admit(self, now: float, round_idx: int) -> List[Tuple[int, Any]]:
+        """Fill free slots from the queue (FCFS).  Returns [(slot, request)]."""
+        placed = []
+        for slot in self.free_slots():
+            if not self._queue:
+                break
+            request, submit_time = self._queue.popleft()
+            self._slots[slot] = SlotInfo(
+                request=request,
+                submit_time=submit_time,
+                admit_time=now,
+                admit_round=round_idx,
+            )
+            self.admitted += 1
+            placed.append((slot, request))
+        return placed
+
+    def retire(self, slot: int) -> SlotInfo:
+        """Free a slot whose chain has finished; returns its record."""
+        info = self._slots[slot]
+        if info is None:
+            raise ValueError(f"retire of empty slot {slot}")
+        self._slots[slot] = None
+        self.retired += 1
+        return info
+
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(s is not None for s in self._slots)

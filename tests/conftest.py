@@ -1,0 +1,50 @@
+"""Shared tier-1 fixtures: tiny analytic models and schedules (K <= 16,
+d <= 8) so sampler/engine tests compile in seconds.  Session-scoped — the
+underlying jax arrays are immutable, sharing them across tests is safe."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import default_gmm, ddpm, sl_mean_fn, sl_uniform
+
+
+@pytest.fixture(scope="session")
+def gmm2():
+    return default_gmm(d=2)
+
+
+@pytest.fixture(scope="session")
+def gmm8():
+    return default_gmm(d=8)
+
+
+@pytest.fixture(scope="session")
+def sl_model2(gmm2):
+    """Analytic SL mean oracle E[x* | y_t] for the d=2 GMM."""
+    return sl_mean_fn(gmm2)
+
+
+@pytest.fixture(scope="session")
+def sched_tiny():
+    """Uniform SL grid, K=16 — the default tiny sampler schedule."""
+    return sl_uniform(K=16, t_max=8.0)
+
+
+@pytest.fixture(scope="session")
+def sched_tiny_ddpm():
+    return ddpm(K=12)
+
+
+@pytest.fixture(scope="session")
+def zeros2():
+    return jnp.zeros((2,), jnp.float32)
+
+
+@pytest.fixture()
+def keys():
+    """Fresh key-splitting helper: keys(n) -> n distinct PRNG keys."""
+    def make(n, seed=0):
+        return jax.random.split(jax.random.PRNGKey(seed), n)
+
+    return make

@@ -32,7 +32,16 @@ def _batch(cfg, key):
     return batch
 
 
-@pytest.mark.parametrize("name", sorted(ARCHS))
+# fast lane keeps one dense + one moe forward; the rest of the zoo rides the
+# slow lane
+_FAST_FWD = {"tinyllama-1.1b", "qwen3-moe-30b-a3b"}
+
+
+@pytest.mark.parametrize(
+    "name",
+    [pytest.param(n) if n in _FAST_FWD
+     else pytest.param(n, marks=pytest.mark.slow) for n in sorted(ARCHS)],
+)
 def test_forward_shapes_and_finite(name):
     cfg = reduced(get_config(name))
     params = unbox(lm_init(jax.random.PRNGKey(0), cfg))
@@ -44,7 +53,16 @@ def test_forward_shapes_and_finite(name):
     assert bool(jnp.isfinite(aux))
 
 
-@pytest.mark.parametrize("name", sorted(ARCHS))
+# fast lane keeps one representative train step; the rest of the zoo rides
+# the slow lane (forward smoke coverage for most archs stays fast below)
+_FAST_TRAIN = {"tinyllama-1.1b"}
+
+
+@pytest.mark.parametrize(
+    "name",
+    [pytest.param(n) if n in _FAST_TRAIN
+     else pytest.param(n, marks=pytest.mark.slow) for n in sorted(ARCHS)],
+)
 def test_one_train_step(name):
     cfg = reduced(get_config(name))
     params = unbox(lm_init(jax.random.PRNGKey(0), cfg))

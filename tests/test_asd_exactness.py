@@ -29,7 +29,9 @@ def _energy_distance(x, y, rng, n_pairs=20000):
     return 2 * dxy - dxx - dyy
 
 
-@pytest.mark.parametrize("theta", [4, 64])
+@pytest.mark.parametrize(
+    "theta", [4, pytest.param(64, marks=pytest.mark.slow)]
+)
 def test_sl_asd_matches_sequential(theta):
     gmm = default_gmm(d=2)
     model = sl_mean_fn(gmm)

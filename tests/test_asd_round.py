@@ -1,0 +1,104 @@
+"""Resumable ASD API (init_chain_state / asd_round): driving rounds manually
+from host code reproduces the fused ``asd_sample`` while_loop bit-for-bit —
+trajectory AND counters — across eager_head and noise_mode variants.  This is
+the contract the continuous-batching serving engine is built on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    asd_sample,
+    chain_done,
+    chain_sample,
+    init_chain_state,
+    asd_round,
+)
+
+K = 16
+
+
+def _drive_rounds(model, sched, y0, key, theta, eager_head, noise_mode,
+                  keep_trajectory=True, max_rounds=200):
+    st = init_chain_state(sched, y0, key, theta, noise_mode, keep_trajectory)
+    round_fn = jax.jit(lambda s: asd_round(
+        model, sched, s, theta, eager_head, noise_mode, keep_trajectory))
+    n = 0
+    while not bool(chain_done(st, sched.K)):
+        st = round_fn(st)
+        n += 1
+        assert n <= max_rounds, "asd_round failed to make progress"
+    return st
+
+
+@pytest.mark.parametrize("eager_head", [False, True])
+@pytest.mark.parametrize("noise_mode", ["buffer", "counter"])
+def test_manual_rounds_match_asd_sample_bitwise(
+    sl_model2, sched_tiny, zeros2, eager_head, noise_mode
+):
+    theta = 5
+    key = jax.random.PRNGKey(17)
+    ref = jax.jit(lambda: asd_sample(
+        sl_model2, sched_tiny, zeros2, key, theta, eager_head, noise_mode))()
+    st = _drive_rounds(sl_model2, sched_tiny, zeros2, key, theta,
+                       eager_head, noise_mode)
+    np.testing.assert_array_equal(
+        np.asarray(st.y[: sched_tiny.K + 1]), np.asarray(ref.trajectory))
+    np.testing.assert_array_equal(
+        np.asarray(chain_sample(st, sched_tiny.K)), np.asarray(ref.sample))
+    for field in ("rounds", "head_calls", "model_evals", "accepts", "proposals"):
+        assert int(getattr(st, field)) == int(getattr(ref, field)), field
+
+
+@pytest.mark.parametrize(
+    "noise_mode", ["buffer", pytest.param("counter", marks=pytest.mark.slow)]
+)
+def test_manual_rounds_window_mode(sl_model2, sched_tiny, zeros2, noise_mode):
+    """keep_trajectory=False: the live window's slot 0 lands on y_K."""
+    theta = 4
+    key = jax.random.PRNGKey(3)
+    ref = jax.jit(lambda: asd_sample(
+        sl_model2, sched_tiny, zeros2, key, theta, noise_mode=noise_mode,
+        keep_trajectory=False))()
+    st = _drive_rounds(sl_model2, sched_tiny, zeros2, key, theta,
+                       eager_head=False, noise_mode=noise_mode,
+                       keep_trajectory=False)
+    np.testing.assert_array_equal(
+        np.asarray(chain_sample(st, sched_tiny.K, keep_trajectory=False)),
+        np.asarray(ref.sample))
+    assert int(st.rounds) == int(ref.rounds)
+
+
+def test_round_is_identity_on_finished_chain(sl_model2, sched_tiny, zeros2):
+    """A finished chain is frozen: extra rounds change nothing, counters
+    included — the property slot-retirement relies on."""
+    theta = 5
+    st = _drive_rounds(sl_model2, sched_tiny, zeros2, jax.random.PRNGKey(5),
+                       theta, eager_head=True, noise_mode="buffer")
+    again = jax.jit(lambda s: asd_round(
+        sl_model2, sched_tiny, s, theta, True, "buffer", True))(st)
+    for leaf, leaf2 in zip(jax.tree_util.tree_leaves(st),
+                           jax.tree_util.tree_leaves(again)):
+        np.testing.assert_array_equal(np.asarray(leaf), np.asarray(leaf2))
+
+
+@pytest.mark.slow
+def test_ddpm_schedule_round_equivalence(sched_tiny_ddpm, gmm2):
+    """Same bitwise contract on a DDPM (ancestral) schedule with the
+    analytic x0 oracle."""
+    from repro.core import ddpm_coeffs, ddpm_x0_fn
+
+    _, _, abar = ddpm_coeffs(sched_tiny_ddpm.K)
+    model = ddpm_x0_fn(gmm2, abar)
+    key = jax.random.PRNGKey(11)
+    y0 = jax.random.normal(jax.random.PRNGKey(12), (2,))
+    theta = 4
+    ref = jax.jit(lambda: asd_sample(
+        model, sched_tiny_ddpm, y0, key, theta, eager_head=True))()
+    st = _drive_rounds(model, sched_tiny_ddpm, y0, key, theta,
+                       eager_head=True, noise_mode="buffer")
+    np.testing.assert_array_equal(
+        np.asarray(chain_sample(st, sched_tiny_ddpm.K)), np.asarray(ref.sample))
+    assert int(st.rounds) == int(ref.rounds)
+    assert int(st.head_calls) == int(ref.head_calls)

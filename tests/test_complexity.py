@@ -4,6 +4,7 @@ and theta trades off per-round work vs number of rounds."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import asd_sample_batched, default_gmm, sl_mean_fn, sl_uniform
 
@@ -18,6 +19,7 @@ def _rounds(K, theta, B=48, seed=0, t_max=None):
     return float(res.rounds.mean()), res
 
 
+@pytest.mark.slow
 def test_more_speculation_fewer_rounds():
     r2, _ = _rounds(64, 2)
     r8, _ = _rounds(64, 8)
@@ -33,6 +35,7 @@ def test_parallel_depth_beats_sequential():
     assert depth < 128 * 0.75, depth
 
 
+@pytest.mark.slow
 def test_sublinear_scaling_in_K():
     """Thm 4: rounds ~ K^{2/3} for fixed eta*K; doubling K should multiply
     rounds by clearly less than 2 (loose stochastic bound)."""

@@ -3,14 +3,18 @@
 Uses the exact SL representation (Thm 8): ybar_t = t x* + W_t, so equal-step
 increments are conditionally-iid N(eta x*, eta I).  Hypothesis draws random
 permutations / grids and the tests check the permutation-invariance of the
-joint law via moment statistics.
+joint law via moment statistics.  ``hypothesis`` is optional: without it the
+property sweeps are skipped (via importorskip) and small deterministic
+pinned-parameter fallbacks keep the invariants covered in tier-1.
 """
+
+import importlib.util
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 import scipy.stats
-from hypothesis import given, settings, strategies as st
 
 from repro.core.analytic import default_gmm
 from repro.core.exchangeability import (
@@ -18,16 +22,12 @@ from repro.core.exchangeability import (
     simulate_sl_increments,
 )
 
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
 GMM = default_gmm(d=2)
 
 
-@settings(max_examples=15, deadline=None)
-@given(
-    perm_seed=st.integers(0, 2**16),
-    m=st.integers(3, 8),
-    eta=st.floats(0.05, 1.0),
-)
-def test_increment_law_is_permutation_invariant(perm_seed, m, eta):
+def _check_permutation_invariance(perm_seed, m, eta):
     incs = simulate_sl_increments(GMM, jax.random.PRNGKey(0), 4000, m, eta)
     perm = np.random.default_rng(perm_seed).permutation(m)
     stats = permutation_statistic(incs, perm)
@@ -39,15 +39,57 @@ def test_increment_law_is_permutation_invariant(perm_seed, m, eta):
     assert float(stats["second_gap"]) < 0.35
 
 
-@settings(max_examples=10, deadline=None)
-@given(i=st.integers(0, 5), j=st.integers(0, 5))
-def test_marginals_of_any_two_increments_match(i, j):
+def _check_two_increment_marginals(i, j):
     """Law(Delta_i) == Law(Delta_j) for equal steps (Thm 1 corollary)."""
     incs = np.asarray(
         simulate_sl_increments(GMM, jax.random.PRNGKey(1), 8000, 6, 0.3)
     )
     di, dj = incs[:, i, 0], incs[:, j, 0]
     assert scipy.stats.ks_2samp(di, dj).pvalue > 1e-4
+
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        perm_seed=st.integers(0, 2**16),
+        m=st.integers(3, 8),
+        eta=st.floats(0.05, 1.0),
+    )
+    def test_increment_law_is_permutation_invariant(perm_seed, m, eta):
+        _check_permutation_invariance(perm_seed, m, eta)
+
+    @settings(max_examples=10, deadline=None)
+    @given(i=st.integers(0, 5), j=st.integers(0, 5))
+    def test_marginals_of_any_two_increments_match(i, j):
+        _check_two_increment_marginals(i, j)
+
+else:
+
+    def test_property_sweeps_need_hypothesis():
+        pytest.importorskip(
+            "hypothesis",
+            reason="random property sweeps skipped; deterministic "
+            "fallbacks below still run",
+        )
+
+
+# deterministic fallback cases (always run; the only coverage of these
+# invariants when hypothesis is unavailable)
+@pytest.mark.parametrize(
+    "perm_seed,m,eta",
+    [(3, 4, 0.3), pytest.param(11, 7, 0.9, marks=pytest.mark.slow)],
+)
+def test_increment_permutation_invariance_pinned(perm_seed, m, eta):
+    _check_permutation_invariance(perm_seed, m, eta)
+
+
+@pytest.mark.parametrize(
+    "i,j", [(0, 5), pytest.param(2, 3, marks=pytest.mark.slow)]
+)
+def test_two_increment_marginals_pinned(i, j):
+    _check_two_increment_marginals(i, j)
 
 
 def test_unequal_steps_break_exchangeability_of_variance():

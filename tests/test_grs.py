@@ -40,6 +40,7 @@ def test_output_is_exactly_target_gaussian():
     assert scipy.stats.kstest((proj - mu_p) / sd_p, "norm").pvalue > 1e-4
 
 
+@pytest.mark.slow
 def test_reject_prob_equals_tv_distance():
     n, d = 60000, 4
     m_hat = jnp.zeros(d)

@@ -13,7 +13,10 @@ from repro.models.lm import lm_fwd, lm_init
 from repro.nn.param import unbox
 
 
-@pytest.mark.parametrize("name", ["tinyllama-1.1b", "gemma2-9b"])
+@pytest.mark.parametrize(
+    "name",
+    ["tinyllama-1.1b", pytest.param("gemma2-9b", marks=pytest.mark.slow)],
+)
 def test_model_forward_flash_matches_naive(name):
     cfg = reduced(get_config(name))
     params = unbox(lm_init(jax.random.PRNGKey(0), cfg))

@@ -15,8 +15,19 @@ from repro.kernels.ssm_scan.ref import ssm_scan_ref
 
 # ----------------------------------------------------------------- GRS
 
-@pytest.mark.parametrize("B,D", [(4, 8), (16, 128), (3, 300), (8, 1024), (1, 5)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+_slow = pytest.mark.slow
+
+# fast lane keeps one small + one large fp32 case; the full (B,D) x dtype
+# sweep rides the slow lane
+@pytest.mark.parametrize(
+    "B,D",
+    [(4, 8), (1, 5),
+     pytest.param(16, 128, marks=_slow), pytest.param(3, 300, marks=_slow),
+     pytest.param(8, 1024, marks=_slow)],
+)
+@pytest.mark.parametrize(
+    "dtype", [jnp.float32, pytest.param(jnp.bfloat16, marks=_slow)]
+)
 def test_grs_kernel_matches_oracle(B, D, dtype):
     ks = jax.random.split(jax.random.PRNGKey(B * 1000 + D), 5)
     u = jax.random.uniform(ks[0], (B,))
@@ -56,13 +67,15 @@ def test_grs_kernel_multidim_event():
     "L,S,window,cap,causal",
     [
         (64, 64, 0, 0.0, True),
-        (100, 100, 0, 0.0, True),  # padded
+        pytest.param(100, 100, 0, 0.0, True, marks=_slow),  # padded
         (64, 64, 24, 0.0, True),  # sliding window
         (64, 64, 0, 50.0, True),  # softcap
         (32, 96, 0, 0.0, False),  # cross attention
     ],
 )
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "dtype", [jnp.float32, pytest.param(jnp.bfloat16, marks=_slow)]
+)
 def test_flash_attention_matches_oracle(L, S, window, cap, causal, dtype):
     B, H, hd = 2, 2, 32
     ks = jax.random.split(jax.random.PRNGKey(L * S + window), 3)
@@ -100,6 +113,7 @@ def test_flash_matches_model_attention_core():
 
 # ------------------------------------------------------------- ssm scan
 
+@pytest.mark.slow
 @pytest.mark.parametrize("B,L,D,bt,bd", [
     (2, 32, 64, 8, 32), (1, 100, 70, 16, 64), (2, 257, 130, 64, 128),
 ])
@@ -113,6 +127,7 @@ def test_ssm_scan_matches_oracle(B, L, D, bt, bd, dtype):
     np.testing.assert_allclose(np.asarray(h), np.asarray(r), atol=2e-5, rtol=2e-5)
 
 
+@pytest.mark.slow
 def test_ssm_scan_matches_mamba_inner():
     """The kernel computes the same recurrence the mamba mixer scans."""
     B, L, DN = 2, 40, 96

@@ -1,11 +1,16 @@
 """Model-stack unit tests: chunked == full forms, decode == forward, MoE
-dispatch invariants, hypothesis property checks on layers."""
+dispatch invariants, hypothesis property checks on layers.  ``hypothesis``
+is optional: without it the property sweeps are skipped (importorskip) and
+deterministic pinned cases below keep the layer invariants covered."""
+
+import importlib.util
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
 
 from repro.configs.base import reduced
 from repro.configs.registry import get_config
@@ -25,10 +30,15 @@ from repro.nn.param import unbox
 B, L, P = 2, 12, 6
 
 
+# fast lane keeps the MoE representative (the most intricate decode path);
+# dense/ssm/vlm variants ride the slow lane — their forward/train smoke
+# coverage stays in tier-1 via test_archs_smoke
 @pytest.mark.parametrize(
     "name",
-    ["tinyllama-1.1b", "gemma2-9b", "qwen2.5-14b", "hymba-1.5b", "xlstm-125m",
-     "llama-3.2-vision-11b", "musicgen-medium", "qwen3-moe-30b-a3b"],
+    ["qwen3-moe-30b-a3b"]
+    + [pytest.param(n, marks=pytest.mark.slow)
+       for n in ("tinyllama-1.1b", "gemma2-9b", "qwen2.5-14b", "hymba-1.5b",
+                 "xlstm-125m", "llama-3.2-vision-11b", "musicgen-medium")],
 )
 def test_decode_matches_forward(name):
     cfg = reduced(get_config(name))
@@ -65,7 +75,11 @@ def test_chunked_attention_equals_naive():
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
 
 
-@pytest.mark.parametrize("chunk", [4, 8, 24])
+@pytest.mark.parametrize(
+    "chunk",
+    [pytest.param(4, marks=pytest.mark.slow), 8,
+     pytest.param(24, marks=pytest.mark.slow)],
+)
 def test_mamba_chunked_equals_full(chunk):
     cfg = reduced(get_config("hymba-1.5b"))
     p = unbox(ssm.mamba_init(jax.random.PRNGKey(0), cfg))
@@ -75,6 +89,7 @@ def test_mamba_chunked_equals_full(chunk):
     np.testing.assert_allclose(np.asarray(full), np.asarray(out), atol=2e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("chunk", [5, 8, 24])
 def test_mlstm_chunked_equals_full_and_step(chunk):
     cfg = reduced(get_config("xlstm-125m"))
@@ -115,9 +130,7 @@ def test_moe_dispatch_invariants():
     np.testing.assert_allclose(np.asarray(out_big), np.asarray(dense), atol=2e-4)
 
 
-@settings(max_examples=20, deadline=None)
-@given(d=st.sampled_from([8, 16, 64]), seed=st.integers(0, 100))
-def test_rmsnorm_properties(d, seed):
+def _check_rmsnorm_properties(d, seed):
     p = unbox(rmsnorm_init(jax.random.PRNGKey(0), d))
     x = jax.random.normal(jax.random.PRNGKey(seed), (3, d)) * 10
     y = rmsnorm_apply(p, x)
@@ -129,9 +142,7 @@ def test_rmsnorm_properties(d, seed):
     np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-4)
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 1000))
-def test_rope_preserves_norm_and_relativity(seed):
+def _check_rope_norm_and_relativity(seed):
     ks = jax.random.split(jax.random.PRNGKey(seed), 2)
     q = jax.random.normal(ks[0], (1, 8, 2, 16))
     k = jax.random.normal(ks[1], (1, 8, 2, 16))
@@ -147,3 +158,37 @@ def test_rope_preserves_norm_and_relativity(seed):
     k2 = apply_rope(k, pos + 5, 1e4)
     qk2 = jnp.einsum("blhd,bshd->bhls", q2, k2)
     np.testing.assert_allclose(np.asarray(qk), np.asarray(qk2), atol=1e-3)
+
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(d=st.sampled_from([8, 16, 64]), seed=st.integers(0, 100))
+    def test_rmsnorm_properties(d, seed):
+        _check_rmsnorm_properties(d, seed)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_rope_preserves_norm_and_relativity(seed):
+        _check_rope_norm_and_relativity(seed)
+
+else:
+
+    def test_property_sweeps_need_hypothesis():
+        pytest.importorskip(
+            "hypothesis",
+            reason="random property sweeps skipped; deterministic "
+            "fallbacks below still run",
+        )
+
+
+# deterministic fallback cases (always run)
+@pytest.mark.parametrize("d,seed", [(8, 3), (64, 42)])
+def test_rmsnorm_properties_pinned(d, seed):
+    _check_rmsnorm_properties(d, seed)
+
+
+@pytest.mark.parametrize("seed", [0, 123])
+def test_rope_norm_and_relativity_pinned(seed):
+    _check_rope_norm_and_relativity(seed)

@@ -1,0 +1,192 @@
+"""Continuous-batching ASD serving engine: exactness (per-chain output is
+bit-identical to the fused single-chain sampler for the same keys), slot
+retire/refill under mixed finish times, and metrics accounting.
+
+Compiled programs are shared module-wide: references come from ONE vmapped
+asd_sample, and every test engine clones the warm engine's jitted
+round/admit/peek programs (same statics => same executables)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import asd_sample
+from repro.serving.engine import ContinuousASDEngine, Request
+from repro.serving.metrics import EngineStats, RequestMetrics
+from repro.serving.scheduler import SlotScheduler
+
+THETA = 5
+N_REFS = 13
+
+
+@pytest.fixture(scope="module")
+def refs(sl_model2, sched_tiny, zeros2):
+    """Standalone asd_sample results for request keys 100..100+N_REFS."""
+    keys = jnp.stack([jax.random.PRNGKey(100 + i) for i in range(N_REFS)])
+    fn = jax.jit(jax.vmap(lambda k: asd_sample(
+        sl_model2, sched_tiny, zeros2, k, THETA, eager_head=True)))
+    return fn(keys)
+
+
+@pytest.fixture(scope="module")
+def warm_engine(sl_model2, sched_tiny):
+    eng = ContinuousASDEngine(
+        lambda cond: sl_model2, sched_tiny, (2,), num_slots=4, theta=THETA,
+        eager_head=True, keep_trajectory=True,
+    )
+    eng.serve(_requests(2, seed0=10**6))
+    return eng
+
+
+def _engine(warm, sl_model2, sched_tiny, num_slots=4):
+    eng = ContinuousASDEngine(
+        lambda cond: sl_model2, sched_tiny, (2,), num_slots=num_slots,
+        theta=THETA, eager_head=True, keep_trajectory=True,
+    )
+    if num_slots == warm.num_slots:  # same shapes => reuse compiled programs
+        eng._round_fn = warm._round_fn
+        eng._admit_fn = warm._admit_fn
+        eng._peek_fn = warm._peek_fn
+    return eng
+
+
+def _requests(n, seed0=100):
+    return [
+        Request(i, key=jax.random.PRNGKey(seed0 + i),
+                y0=np.zeros((2,), np.float32))
+        for i in range(n)
+    ]
+
+
+@pytest.mark.parametrize("pipelined", [False, True])
+def test_engine_output_matches_asd_sample_bitwise(
+    warm_engine, refs, sl_model2, sched_tiny, pipelined
+):
+    """More requests than slots: every committed sample equals the
+    standalone asd_sample for that request's key, bit for bit."""
+    n = 9
+    eng = _engine(warm_engine, sl_model2, sched_tiny)
+    eng.pipelined = pipelined
+    out = eng.serve(_requests(n))
+    assert sorted(out) == list(range(n))
+    for i in range(n):
+        np.testing.assert_array_equal(out[i], np.asarray(refs.sample[i]))
+
+
+def test_engine_matches_sequential_law(warm_engine, sl_model2, sched_tiny, zeros2):
+    """The committed chains ARE exact DDPM chains (Thm 3): engine moments
+    match the sequential sampler's across a moderate batch."""
+    from repro.core import sequential_sample
+
+    n = 48
+    eng = _engine(warm_engine, sl_model2, sched_tiny)
+    out = eng.serve(_requests(n))
+    ya = np.stack([out[i] for i in range(n)])
+    seq = jax.jit(jax.vmap(
+        lambda k: sequential_sample(sl_model2, sched_tiny, zeros2, k)[0]))
+    ys = np.asarray(seq(jax.random.split(jax.random.PRNGKey(9), 256)))
+    np.testing.assert_allclose(
+        ya.mean(0), ys.mean(0), atol=4 * ys.std(0).max() / np.sqrt(n))
+    assert ya.std(0).max() < 3 * ys.std(0).max()
+
+
+def test_slot_retire_and_refill_mixed_finish(warm_engine, sl_model2, sched_tiny):
+    """Chains finish at different rounds; freed slots must be refilled and
+    every slot reused when requests >> slots."""
+    n, slots = 13, 4
+    eng = _engine(warm_engine, sl_model2, sched_tiny, num_slots=slots)
+    for r in _requests(n):
+        eng.submit(r)
+    assert eng.scheduler.queue_depth == n
+    seen_slots = set()
+    while eng.step():
+        for s in eng.scheduler.active_slots():
+            seen_slots.add(s)
+    assert eng.scheduler.retired == n
+    assert not eng.scheduler.has_work()
+    assert seen_slots == set(range(slots))  # every slot hosted work
+    assert len(eng._results) == n
+    # mixed finish times: not all chains took the same number of rounds
+    per_rounds = {m.rid: m.rounds for m in eng.stats.per_request}
+    assert len(set(per_rounds.values())) > 1
+    # engine rounds < sum of per-chain rounds (slots overlapped work)
+    assert eng.stats.rounds_total < sum(per_rounds.values())
+
+
+def test_engine_stats_accounting(warm_engine, refs, sl_model2, sched_tiny):
+    n = 11
+    eng = _engine(warm_engine, sl_model2, sched_tiny)
+    out = eng.serve(_requests(n))
+    s = eng.stats
+    assert len(out) == n
+    # requests admitted == retired == scheduler bookkeeping
+    assert s.requests == s.retired == n
+    assert eng.scheduler.submitted == eng.scheduler.admitted == n
+    assert eng.scheduler.retired == n
+    # per-chain counters equal the standalone sampler's (exact metrics)
+    for m in s.per_request:
+        assert m.rounds == int(refs.rounds[m.rid])
+        assert m.head_calls == int(refs.head_calls[m.rid])
+        assert m.accepts == int(refs.accepts[m.rid])
+        assert m.proposals == int(refs.proposals[m.rid])
+        assert 0.0 <= m.accept_rate <= 1.0
+        assert m.queue_latency >= 0.0 and m.service_time >= 0.0
+    assert s.head_calls_total == sum(m.head_calls for m in s.per_request)
+    assert s.accepts_total <= s.proposals_total
+    assert s.wall_time > 0 and s.throughput() > 0
+    summary = s.summary()
+    assert summary["requests"] == summary["retired"] == n
+
+
+def test_rounds_monotone_under_step(warm_engine, sl_model2, sched_tiny):
+    eng = _engine(warm_engine, sl_model2, sched_tiny)
+    for r in _requests(6):
+        eng.submit(r)
+    prev = eng.stats.rounds_total
+    while eng.step():
+        assert eng.stats.rounds_total == prev + 1  # one fused round per step
+        prev = eng.stats.rounds_total
+        # in-flight + finished never exceeds slot count
+        assert len(eng.scheduler.active_slots()) <= eng.num_slots
+
+
+def test_scheduler_unit():
+    sched = SlotScheduler(2)
+    sched.submit("a", now=0.0)
+    sched.submit("b", now=1.0)
+    sched.submit("c", now=2.0)
+    placed = sched.admit(now=3.0, round_idx=0)
+    assert [(s, r) for s, r in placed] == [(0, "a"), (1, "b")]
+    assert sched.queue_depth == 1 and not sched.free_slots()
+    info = sched.retire(0)
+    assert info.request == "a" and info.admit_time == 3.0
+    with pytest.raises(ValueError):
+        sched.retire(0)  # already freed
+    placed = sched.admit(now=4.0, round_idx=5)
+    assert placed == [(0, "c")]
+    assert sched.slot_info(0).admit_round == 5
+    assert sched.has_work()
+    sched.retire(0)
+    sched.retire(1)
+    assert not sched.has_work()
+    assert sched.submitted == 3 and sched.admitted == 3 and sched.retired == 3
+
+
+def test_metrics_unit():
+    stats = EngineStats()
+    stats.requests = 2
+    stats.rounds_total = 7
+    stats.observe(RequestMetrics(rid=0, queue_latency=0.5, service_time=1.0,
+                                 rounds=4, head_calls=2, model_evals=20,
+                                 accepts=15, proposals=20))
+    stats.observe(RequestMetrics(rid=1, queue_latency=1.5, service_time=2.0,
+                                 rounds=6, head_calls=3, model_evals=30,
+                                 accepts=10, proposals=25))
+    assert stats.retired == 2
+    assert stats.accept_rate() == pytest.approx(25 / 45)
+    assert stats.mean_queue_latency() == pytest.approx(1.0)
+    assert stats.per_request[0].parallel_depth == 6
+    assert stats.per_request[0].latency == pytest.approx(1.5)
+    stats.wall_time = 4.0
+    assert stats.throughput() == pytest.approx(0.5)

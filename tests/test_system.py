@@ -72,6 +72,7 @@ def test_asd_serving_faster_and_same_law(trained):
     np.testing.assert_allclose(xa.std(0), xd.std(0), atol=0.6)
 
 
+@pytest.mark.slow
 def test_trained_denoiser_approximates_posterior_mean(trained):
     """The learned g is close to the analytic E[x0 | y_t] of its data GMM."""
     from repro.core.analytic import GMM, sl_mean_fn
