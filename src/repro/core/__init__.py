@@ -29,6 +29,14 @@ from repro.core.asd import (
     chain_sample,
     init_chain_state,
 )
+from repro.core.controller import (
+    AIMDTheta,
+    AcceptRateTheta,
+    CONTROLLERS,
+    StaticTheta,
+    ThetaController,
+    make_controller,
+)
 from repro.core.analytic import GMM, default_gmm, sl_mean_fn, ddpm_x0_fn
 
 __all__ = [
@@ -57,6 +65,12 @@ __all__ = [
     "chain_done",
     "chain_sample",
     "init_chain_state",
+    "ThetaController",
+    "StaticTheta",
+    "AIMDTheta",
+    "AcceptRateTheta",
+    "CONTROLLERS",
+    "make_controller",
     "GMM",
     "default_gmm",
     "sl_mean_fn",

@@ -43,12 +43,17 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.controller import StaticTheta, ThetaController
 from repro.core.grs import grs, bcast_right
 from repro.core.schedules import Schedule
 from repro.core.sequential import init_y0
 from repro.core.verifier import leading_true_count
 
 ModelFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+# the default controller: a constant full-width window, bit-identical to the
+# pre-controller sampler (see repro.core.controller for adaptive ones)
+_STATIC = StaticTheta()
 
 
 @jax.tree_util.register_dataclass
@@ -84,6 +89,11 @@ class ASDChainState:
     whose slot 0 is position ``a``.  The noise streams are carried in-state
     (buffers, or just the two stream keys in counter mode) so a chain can be
     suspended, shipped across hosts, and resumed without changing its law.
+
+    ``theta_live`` is the chain's CURRENT speculation window (<= the static
+    theta_max that shapes the buffers); ``ctrl`` is the ThetaController state
+    that updates it each round.  Both are plain pytree leaves, so adaptive
+    windows vmap/shard exactly like the rest of the state.
     """
 
     y: jax.Array  # committed chain (padded trajectory or live window)
@@ -95,6 +105,8 @@ class ASDChainState:
     model_evals: jax.Array
     accepts: jax.Array
     proposals: jax.Array
+    theta_live: jax.Array  # () int32 current speculation window (<= theta_max)
+    ctrl: jax.Array  # ThetaController state vector
     k_u: jax.Array  # uniform-stream key (counter mode)
     k_xi: jax.Array  # noise-stream key (counter mode)
     u_buf: Optional[jax.Array]  # (K+theta+1,) or None in counter mode
@@ -116,16 +128,20 @@ def init_chain_state(
     theta: int,
     noise_mode: str = "buffer",
     keep_trajectory: bool = True,
+    controller: ThetaController = _STATIC,
 ) -> ASDChainState:
     """Fresh chain at position 0 with its absolute-step randomness fixed.
 
     The (u_i, xi_i) streams are drawn once here (lines 1-2 of Alg 1); every
     subsequent ``asd_round`` re-reads the window starting at the current
     position, which is what makes re-speculation deterministic (Lemma 13).
+    ``theta`` is the static cap theta_max: it shapes the buffers, while the
+    ``controller`` decides how much of the window each round actually uses.
     """
     K = schedule.K
     theta = _clamp_theta(theta, K)
     ev_shape = y0.shape
+    ctrl0, theta_live0 = controller.init(theta)
 
     k_u, k_xi = jax.random.split(key)
     if noise_mode == "buffer":
@@ -151,6 +167,8 @@ def init_chain_state(
         model_evals=zero,
         accepts=zero,
         proposals=zero,
+        theta_live=theta_live0,
+        ctrl=ctrl0,
         k_u=k_u,
         k_xi=k_xi,
         u_buf=u_buf,
@@ -178,15 +196,23 @@ def asd_round(
     noise_mode: str = "buffer",
     keep_trajectory: bool = True,
     grs_impl: str = "core",
+    controller: ThetaController = _STATIC,
 ) -> ASDChainState:
     """One speculation round (Alg 1 lines 5-13): propose, roll theta steps,
     verify in ONE batched model call, commit the accepted prefix.
 
+    ``theta`` is the static cap theta_max.  The round always rolls and
+    dispatches ``theta``-shaped buffers — so the compiled program is shared
+    across every value of the per-chain live window — but only
+    ``st.theta_live`` slots are verified (the ``n_valid`` mask) and counted,
+    and the ``controller`` updates ``theta_live`` from the round's observed
+    accepts before the state is returned.
+
     Identity on finished chains (a >= K): under vmap a slot whose chain has
     retired keeps its state (and counters) frozen while its neighbours keep
     speculating — the property continuous batching relies on.  The static
-    arguments (theta, eager_head, noise_mode, keep_trajectory) must match the
-    ``init_chain_state`` call that produced ``st``.
+    arguments (theta, eager_head, noise_mode, keep_trajectory, controller)
+    must match the ``init_chain_state`` call that produced ``st``.
     """
     K = schedule.K
     theta = _clamp_theta(theta, K)
@@ -194,6 +220,7 @@ def asd_round(
     ev_shape = st.v_cache.shape
     ev_ndim = st.v_cache.ndim
     dtype = st.y.dtype
+    theta_live = jnp.clip(st.theta_live, 1, theta)
 
     def window(arr, start, length):
         return jax.lax.dynamic_slice_in_dim(arr, start, length, axis=0)
@@ -241,8 +268,14 @@ def asd_round(
 
     # --- 3. ONE batched parallel round (line 11)
     if eager_head:
-        pts = jnp.concatenate([y_prev, y_props[-1][None]], axis=0)
-        ts = jnp.concatenate([t_w, sched.t_model[a + theta][None]], axis=0)
+        # the head slot sits at the END of the LIVE window: on a full accept
+        # the chain lands on y_props[theta_live - 1], so this evaluation IS
+        # the next round's proposal call
+        y_head = jax.lax.dynamic_index_in_dim(
+            y_props, theta_live - 1, axis=0, keepdims=True
+        )
+        pts = jnp.concatenate([y_prev, y_head], axis=0)
+        ts = jnp.concatenate([t_w, sched.t_model[a + theta_live][None]], axis=0)
         g_all = model_fn(ts, pts)
         g_par, g_head = g_all[:-1], g_all[-1]
     else:
@@ -259,7 +292,7 @@ def asd_round(
         z, acc = grs_k(u_w, xi_w, m_hats, m_tgt, sig_w, event_ndim=ev_ndim)
     else:
         z, acc = grs(u_w, xi_w, m_hats, m_tgt, sig_w, event_ndim=ev_ndim)
-    n_valid = jnp.minimum(theta, K - a)
+    n_valid = jnp.minimum(theta_live, K - a)
     slot = jnp.arange(theta)
     acc = acc & (slot < n_valid)
     lead = leading_true_count(acc)
@@ -284,7 +317,10 @@ def asd_round(
         )
         y_new = jax.lax.dynamic_slice_in_dim(buf2, advance, theta + 1, axis=0)
 
-    full_accept = jnp.logical_and(~rejected, n_valid == theta)
+    full_accept = jnp.logical_and(~rejected, n_valid == theta_live)
+    ctrl_new, theta_next = controller.update(
+        st.ctrl, theta_live, lead, n_valid, rejected, theta
+    )
     new = ASDChainState(
         y=y_new,
         a=a + advance,
@@ -298,6 +334,8 @@ def asd_round(
         + (1 if eager_head else 0),
         accepts=st.accepts + lead,
         proposals=st.proposals + n_valid,
+        theta_live=jnp.clip(theta_next, 1, theta),
+        ctrl=ctrl_new,
         k_u=st.k_u,
         k_xi=st.k_xi,
         u_buf=st.u_buf,
@@ -323,11 +361,16 @@ def asd_sample(
     noise_mode: str = "buffer",
     keep_trajectory: bool = True,
     grs_impl: str = "core",
+    controller: ThetaController = _STATIC,
 ) -> ASDResult:
     """Run ASD for one chain.  ``theta >= K`` gives ASD-infinity.
 
     model_fn(t: f32[m], y: f32[m, *event]) -> f32[m, *event] must accept any
     leading batch size m (it is called with m=1 and m=theta(+1)).
+
+    ``theta`` is the window CAP; the ``controller`` (default: the static
+    full-width window, bit-identical to the original sampler) adapts the live
+    window per round from observed accepts — see repro.core.controller.
 
     Beyond-paper memory options (identical law; see EXPERIMENTS.md §Perf):
       * noise_mode="counter": derive (u_i, xi_i) from a counter-based PRNG
@@ -341,7 +384,9 @@ def asd_sample(
     K = schedule.K
     theta = _clamp_theta(theta, K)
 
-    st0 = init_chain_state(schedule, y0, key, theta, noise_mode, keep_trajectory)
+    st0 = init_chain_state(
+        schedule, y0, key, theta, noise_mode, keep_trajectory, controller
+    )
 
     def cond(st: ASDChainState):
         return st.a < K
@@ -349,7 +394,7 @@ def asd_sample(
     def body(st: ASDChainState):
         return asd_round(
             model_fn, schedule, st, theta, eager_head, noise_mode,
-            keep_trajectory, grs_impl,
+            keep_trajectory, grs_impl, controller,
         )
 
     st = jax.lax.while_loop(cond, body, st0)
@@ -381,6 +426,7 @@ def asd_sample_batched(
     eager_head: bool = False,
     noise_mode: str = "buffer",
     keep_trajectory: bool = True,
+    controller: ThetaController = _STATIC,
 ) -> ASDResult:
     """Independent ASD chains vmapped over a batch.
 
@@ -393,7 +439,8 @@ def asd_sample_batched(
     """
     keys = jax.random.split(key, y0.shape[0])
     fn = lambda y, k: asd_sample(
-        model_fn, schedule, y, k, theta, eager_head, noise_mode, keep_trajectory
+        model_fn, schedule, y, k, theta, eager_head, noise_mode,
+        keep_trajectory, controller=controller,
     )
     return jax.vmap(fn)(y0, keys)
 

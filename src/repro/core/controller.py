@@ -1,0 +1,173 @@
+"""Speculation-window controllers: per-chain dynamic theta.
+
+The paper's adaptive complexity analysis gets its O~(K^{1/3}) bound by tuning
+the speculation window to the chain's acceptance behavior — a chain that
+accepts everything should speculate deeper, a chain that rejects early burns
+verification FLOPs on slots it will never commit.  A ``ThetaController``
+closes that loop per chain, per round:
+
+  * the controller object itself is a frozen (hashable) dataclass — a STATIC
+    configuration closed over by the jitted round program, exactly like the
+    ``theta`` int used to be;
+  * its dynamic state is a small f32 vector carried inside ``ASDChainState``
+    (``st.ctrl``) next to the live window ``st.theta_live``, so it vmaps,
+    shards, and ships across hosts with the chain.
+
+``asd_round`` keeps every buffer and model-call batch ``theta_max``-shaped —
+``theta_live`` only moves the ``n_valid`` mask and the eager-head index — so
+changing the live window NEVER changes dispatch shapes and the round program
+compiles exactly once (asserted in tests/test_theta_controller.py).
+
+Adapting the window preserves exactness: ``theta_live`` for round r is a
+function of rounds < r only (it is F_{a}-measurable in the filtration of
+Lemma 13), so the verifier still sees a predictable window and the committed
+chain law is unchanged — only WHICH prefix gets verified each round moves.
+
+Controllers:
+
+  ``StaticTheta``      theta_live == theta_max always; bit-identical to the
+                       pre-controller fused sampler (the exactness baseline).
+  ``AIMDTheta``        additive increase on a fully-accepted window,
+                       multiplicative backoff on a rejection — the TCP move.
+  ``AcceptRateTheta``  EWMA of observed accept rates; the window tracks the
+                       expected accepted run length 1/(1 - p_hat).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ThetaController:
+    """Interface: pure init/update functions over a pytree ``ctrl`` state.
+
+    ``update`` runs INSIDE the jitted speculation round with the round's
+    observables; everything it returns must be traced arrays.
+    """
+
+    name = "base"
+
+    def init(self, theta_max: int):
+        """-> (ctrl: f32 state vector, theta_live: i32 scalar) at round 0."""
+        raise NotImplementedError
+
+    def update(self, ctrl, theta_live, accepts, n_valid, rejected, theta_max: int):
+        """Observe one round, emit the next round's live window.
+
+        Args:
+          ctrl: this controller's state vector (from ``ASDChainState.ctrl``).
+          theta_live: () i32 — the window the round just ran.
+          accepts: () i32 — accepted slots this round (the leading-true count).
+          n_valid: () i32 — verified slots this round (min(theta_live, K - a)).
+          rejected: () bool — whether the round hit a rejection.
+          theta_max: static cap; buffers are shaped by it.
+
+        Returns:
+          (ctrl', theta_live'): next state and next window, 1 <= theta_live'
+          <= theta_max.
+        """
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticTheta(ThetaController):
+    """A constant window.  ``value=None`` (default) means the full
+    ``theta_max`` — the pre-refactor behavior, bit for bit.  A smaller
+    ``value`` is the compromise window an operator would tune for a mixed
+    workload's verification budget; it runs on the same theta_max-shaped
+    buffers, which is what makes iso-shape comparisons against adaptive
+    controllers meaningful."""
+
+    name = "static"
+    value: typing.Optional[int] = None
+
+    def _theta(self, theta_max: int):
+        v = theta_max if self.value is None else min(self.value, theta_max)
+        return jnp.asarray(v, jnp.int32)
+
+    def init(self, theta_max: int):
+        return jnp.zeros((0,), jnp.float32), self._theta(theta_max)
+
+    def update(self, ctrl, theta_live, accepts, n_valid, rejected, theta_max: int):
+        return ctrl, self._theta(theta_max)
+
+
+@dataclasses.dataclass(frozen=True)
+class AIMDTheta(ThetaController):
+    """Additive-increase / multiplicative-decrease on the live window.
+
+    A fully-accepted valid window grows theta by ``increase``; a rejection
+    multiplies it by ``backoff``.  State is the un-rounded float window so
+    repeated small backoffs compound smoothly.
+    """
+
+    name = "aimd"
+    increase: float = 1.0
+    backoff: float = 0.5
+    theta_min: int = 1
+
+    def init(self, theta_max: int):
+        return (jnp.full((1,), float(theta_max), jnp.float32),
+                jnp.asarray(theta_max, jnp.int32))
+
+    def update(self, ctrl, theta_live, accepts, n_valid, rejected, theta_max: int):
+        th = ctrl[0]
+        th = jnp.where(
+            rejected,
+            jnp.maximum(th * self.backoff, float(self.theta_min)),
+            jnp.minimum(th + self.increase, float(theta_max)),
+        )
+        live = jnp.clip(jnp.round(th).astype(jnp.int32), self.theta_min, theta_max)
+        return ctrl.at[0].set(th), live
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceptRateTheta(ThetaController):
+    """Window sized to a discounted-counts estimate of the accept rate.
+
+    State is (discounted accepted slots, discounted verified slots); the
+    estimate p_hat = (prior + s_acc) / (prior + s_prop) is a Beta-posterior
+    mean under an optimistic prior, so a fresh chain opens fully and the
+    estimate's variance shrinks with observed slots instead of jumping per
+    round (a per-round EWMA of ratios closes the window on one unlucky
+    round, truncating windows that would have fully accepted).  ``decay``
+    discounts old rounds (1.0 = cumulative/stationary); with per-slot accept
+    probability p the expected accepted run length is 1/(1 - p), and the
+    window tracks headroom/(1 - p_hat) clipped to [theta_min, theta_max].
+    """
+
+    name = "accept-rate"
+    decay: float = 0.95
+    headroom: float = 1.0
+    prior: float = 4.0
+    theta_min: int = 1
+
+    def init(self, theta_max: int):
+        return jnp.zeros((2,), jnp.float32), jnp.asarray(theta_max, jnp.int32)
+
+    def update(self, ctrl, theta_live, accepts, n_valid, rejected, theta_max: int):
+        s = self.decay * ctrl + jnp.stack(
+            [accepts.astype(jnp.float32), n_valid.astype(jnp.float32)]
+        )
+        p = (self.prior + s[0]) / (self.prior + s[1])
+        run = self.headroom / jnp.maximum(1.0 - p, 1.0 / (2.0 * theta_max))
+        live = jnp.clip(jnp.floor(run).astype(jnp.int32), self.theta_min, theta_max)
+        return s, live
+
+
+CONTROLLERS = {c.name: c for c in (StaticTheta, AIMDTheta, AcceptRateTheta)}
+
+
+def make_controller(name: str, **kwargs) -> ThetaController:
+    """CLI-facing factory: ``make_controller("aimd", backoff=0.75)``."""
+    try:
+        return CONTROLLERS[name](**kwargs)
+    except KeyError:
+        raise ValueError(
+            f"unknown theta controller {name!r}; have {sorted(CONTROLLERS)}"
+        ) from None

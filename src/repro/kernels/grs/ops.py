@@ -3,6 +3,8 @@ to the TPU lane boundary, interpret-mode fallback on CPU."""
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -15,6 +17,15 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _pad_dim(a, pad: int, axis: int, value: float = 0.0):
+    """Zero-pad (or ``value``-pad) ``a`` by ``pad`` at the end of ``axis``."""
+    if not pad:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
 def grs(u, xi, m_hat, m, sigma, event_ndim: int = 1, interpret: bool | None = None):
     """Drop-in replacement for repro.core.grs.grs backed by the Pallas kernel.
 
@@ -24,7 +35,6 @@ def grs(u, xi, m_hat, m, sigma, event_ndim: int = 1, interpret: bool | None = No
     """
     if interpret is None:
         interpret = not _on_tpu()
-    import math
 
     batch_shape = xi.shape[: xi.ndim - event_ndim]
     event_shape = xi.shape[xi.ndim - event_ndim:]
@@ -39,14 +49,12 @@ def grs(u, xi, m_hat, m, sigma, event_ndim: int = 1, interpret: bool | None = No
 
     pad_d = (-D) % LANE
     pad_r = (-R) % ROW_BLK
-    if pad_d:
-        zcols = lambda a: jnp.pad(a, ((0, 0), (0, pad_d)))
-        xi2, mh2, m2 = zcols(xi2), zcols(mh2), zcols(m2)
-    if pad_r:
-        zrows = lambda a: jnp.pad(a, ((0, pad_r), (0, 0)))
-        xi2, mh2, m2 = zrows(xi2), zrows(mh2), zrows(m2)
-        u2 = jnp.pad(u2, (0, pad_r))
-        s2 = jnp.pad(s2, (0, pad_r), constant_values=1.0)
+    xi2, mh2, m2 = (
+        _pad_dim(_pad_dim(a, pad_d, axis=1), pad_r, axis=0)
+        for a in (xi2, mh2, m2)
+    )
+    u2 = _pad_dim(u2, pad_r, axis=0)
+    s2 = _pad_dim(s2, pad_r, axis=0, value=1.0)
 
     z, acc = grs_pallas(u2, s2, xi2, mh2, m2, interpret=interpret)
     z = z[:R, :D].reshape(batch_shape + event_shape)

@@ -34,6 +34,7 @@ from repro.configs.registry import (
     ARCHS, PAPER_MODELS, get_config, get_denoiser_config, all_cells,
 )
 from repro.core.asd import asd_sample_batched
+from repro.core.controller import make_controller
 from repro.core.schedules import ddpm as ddpm_schedule
 from repro.distributed.sharding import (
     LOGICAL_RULES, batch_pspec, fsdp_pspecs, opt_state_pspecs, param_pspecs,
@@ -244,9 +245,13 @@ def build_decode_cell(cfg: ModelConfig, shape: InputShape, mesh):
 
 def build_asd_cell(name: str, mesh, theta: int = 8, K: int = 1000,
                    n_chains: int = 64, profile: str = "tp",
-                   noise_mode: str = "buffer", keep_trajectory: bool = True):
+                   noise_mode: str = "buffer", keep_trajectory: bool = True,
+                   controller: str = "static"):
     """The paper technique's own dry-run cell: the full fused batched-ASD
-    sampling program (while_loop of speculate->batched-verify->commit)."""
+    sampling program (while_loop of speculate->batched-verify->commit).
+    ``controller`` selects the speculation-window controller by name; the
+    adaptive variants carry their window state inside the fused loop, so the
+    dry-run verifies they lower/compile on the production meshes too."""
     dc = get_denoiser_config(name)
     if name == "paper-diffusion-policy":
         K, n_chains = 100, max(n_chains, 512)
@@ -271,11 +276,14 @@ def build_asd_cell(name: str, mesh, theta: int = 8, K: int = 1000,
     key = _sds((n_chains, 2), jnp.uint32,
                NamedSharding(mesh, P(*(tuple(bspec) + (None,)))))
 
+    ctrl = make_controller(controller)
+
     def sample(params, y0, keys):
         model_fn = make_ddpm_model_fn(params, dc)
         res = asd_sample_batched(model_fn, sched, y0, keys[0], theta,
                                  eager_head=True, noise_mode=noise_mode,
-                                 keep_trajectory=keep_trajectory)
+                                 keep_trajectory=keep_trajectory,
+                                 controller=ctrl)
         return res.sample, res.rounds, res.head_calls
 
     jitted = jax.jit(sample)
@@ -298,6 +306,9 @@ VARIANTS = {
     "memopt": dict(noise_mode="counter", keep_trajectory=False),
     "dp256memopt": dict(profile="dp", n_chains=256, noise_mode="counter",
                         keep_trajectory=False),
+    # adaptive per-chain speculation windows riding inside the fused loop
+    "aimd": dict(controller="aimd"),
+    "acceptrate": dict(controller="accept-rate"),
     "accum2": dict(accum=2),
     "accum32": dict(accum=32),
     # FSDP re-gathers weights per microbatch; at accum=1 the gather happens

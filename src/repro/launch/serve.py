@@ -17,6 +17,14 @@ Two serving modes:
 Both are the TPU-native form of the paper's multi-GPU parallel verification
 (DESIGN.md §2): the per-round model call is a (slots*theta)-point forward,
 data-parallel over the mesh.
+
+Speculation control and scheduling are pluggable:
+
+  --theta-controller static|aimd|accept-rate   per-chain live window
+  --policy fcfs|priority|serr|deadline         slot admission policy
+  --grs-impl core|kernel                       verifier backend (the Pallas
+                                               GRS kernel runs interpret-mode
+                                               off-TPU)
 """
 
 from __future__ import annotations
@@ -32,6 +40,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import get_denoiser_config
 from repro.core.asd import asd_sample_batched
+from repro.core.controller import CONTROLLERS, make_controller
 from repro.core.schedules import ddpm as ddpm_schedule
 from repro.distributed.sharding import (
     batch_pspec,
@@ -42,6 +51,7 @@ from repro.distributed.sharding import (
 from repro.models.diffusion import denoiser_init, make_ddpm_model_fn
 from repro.nn.param import unbox
 from repro.serving.engine import ContinuousASDEngine, Request
+from repro.serving.scheduler import POLICIES, make_policy
 
 
 def _build(args):
@@ -62,6 +72,7 @@ def run_fused(args):
     mesh, dc, params = _build(args)
     sched = ddpm_schedule(args.K)
     bshard = NamedSharding(mesh, batch_pspec(mesh))
+    controller = make_controller(args.theta_controller)
 
     @jax.jit
     def sample(params, y0, key):
@@ -69,6 +80,7 @@ def run_fused(args):
         res = asd_sample_batched(
             model_fn, sched, y0, key, args.theta, eager_head=True,
             noise_mode="counter", keep_trajectory=False,
+            controller=controller,
         )
         return res.sample, res.rounds, res.head_calls
 
@@ -110,7 +122,10 @@ def run_continuous(args):
         eager_head=True,
         noise_mode="counter",
         keep_trajectory=False,
+        grs_impl=args.grs_impl,
         state_sharding=chain_state_shardings(mesh),
+        controller=make_controller(args.theta_controller),
+        policy=make_policy(args.policy),
     )
     reqs = [Request(i, key=jax.random.PRNGKey(1000 + i)) for i in range(args.chains)]
     t0 = time.perf_counter()
@@ -118,9 +133,13 @@ def run_continuous(args):
     dt = time.perf_counter() - t0
     s = eng.stats
     print(f"[continuous] served {s.retired} requests on {slots} slots "
-          f"(K={args.K}) in {dt:.1f}s (includes compile): "
+          f"(K={args.K}, policy={args.policy}, "
+          f"controller={args.theta_controller}, grs={args.grs_impl}) "
+          f"in {dt:.1f}s (includes compile): "
           f"{s.rounds_total} fused rounds, accept rate {s.accept_rate():.2f}, "
+          f"mean live window {s.mean_window():.1f}/{args.theta}, "
           f"mean queue latency {s.mean_queue_latency()*1e3:.0f}ms, "
+          f"SLO attainment {s.slo_attainment():.2f}, "
           f"{s.throughput():.2f} samples/s")
     sample = next(iter(out.values()))
     print(f"output {sample.shape} per request, "
@@ -137,8 +156,18 @@ def main():
     ap.add_argument("--slots", type=int, default=0,
                     help="continuous engine slots (default: ~chains/2, "
                          "rounded up to a multiple of the mesh batch axes)")
-    ap.add_argument("--theta", type=int, default=8)
+    ap.add_argument("--theta", type=int, default=8,
+                    help="speculation window cap theta_max (buffers are "
+                         "shaped by it; the controller sets the live window)")
     ap.add_argument("--K", type=int, default=100)
+    ap.add_argument("--theta-controller", default="static",
+                    choices=sorted(CONTROLLERS),
+                    help="per-chain speculation-window controller")
+    ap.add_argument("--policy", default="fcfs", choices=sorted(POLICIES),
+                    help="continuous-engine admission policy")
+    ap.add_argument("--grs-impl", default="core", choices=("core", "kernel"),
+                    help="verifier backend: pure-jnp or the Pallas GRS "
+                         "kernel (interpret-mode off-TPU)")
     args = ap.parse_args()
     if args.engine == "continuous":
         run_continuous(args)

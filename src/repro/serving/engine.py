@@ -16,8 +16,18 @@ boundary* and its slot is refilled from the queue (FCFS, see
 round is ONE fused (slots x theta)-point verification forward — on a mesh it
 is pjit-sharded over the `data` axis (see repro/launch/serve.py).
 
+The continuous engine is parameterized on two pluggable axes:
+
+  * a ``ThetaController`` (``repro.core.controller``) adapts each chain's
+    live speculation window theta_live <= theta from its observed accepts,
+    inside the jitted round (buffer shapes never change — no recompiles);
+  * a ``SchedulingPolicy`` (``repro.serving.scheduler``) decides which
+    queued request takes a freed slot (FCFS / priority / SJF-on-expected-
+    rounds / earliest-deadline-first with SLO admission control).
+
 Both engines produce per-request ``RequestMetrics`` and an ``EngineStats``
-aggregate (rounds, head calls, accept rate, queue latency, throughput).
+aggregate (rounds, head calls, accept rate, queue latency, throughput,
+SLO attainment).
 """
 
 from __future__ import annotations
@@ -37,11 +47,16 @@ from repro.core.asd import (
     chain_sample,
     init_chain_state,
 )
+from repro.core.controller import StaticTheta, ThetaController
 from repro.core.schedules import Schedule
 from repro.core.sequential import sequential_sample, init_y0
 from repro.models.diffusion import DenoiserConfig
 from repro.serving.metrics import EngineStats, RequestMetrics
-from repro.serving.scheduler import SlotScheduler
+from repro.serving.scheduler import (
+    AdmissionContext,
+    SchedulingPolicy,
+    SlotScheduler,
+)
 
 
 @dataclasses.dataclass
@@ -50,6 +65,9 @@ class Request:
     cond: Optional[np.ndarray] = None  # (d_cond,) or None
     key: Optional[jax.Array] = None  # per-request PRNG key (else derived)
     y0: Optional[np.ndarray] = None  # explicit start state (else init_y0)
+    priority: float = 0.0  # Priority policy: higher admits first
+    deadline: Optional[float] = None  # absolute SLO deadline (perf_counter s)
+    expected_accept_rate: Optional[float] = None  # SERR/deadline estimate hint
 
 
 # ---------------------------------------------------------------------------
@@ -78,6 +96,15 @@ class ContinuousASDEngine:
       state_sharding: optional sharding pytree (matching ``ASDChainState``
         leaves with a leading slot axis) applied to the slot batch, e.g. from
         ``repro.distributed.sharding.chain_state_shardings``.
+      controller: per-chain speculation-window controller (theta_live <=
+        theta); a static config closed over by the jitted round, its state
+        rides inside each slot's ``ASDChainState``.  Default: StaticTheta —
+        the constant full-width window, bit-identical to PR-1 behavior.
+      policy: host-side admission policy (``repro.serving.scheduler``):
+        which queued request takes a freed slot, and whether a deadline-
+        carrying request is admitted at all.  Default: FCFS.
+      grs_impl: "core" (pure-jnp verifier) or "kernel" (the Pallas GRS
+        kernel; interpret-mode off-TPU, so CPU serving still works).
     """
 
     def __init__(
@@ -96,6 +123,8 @@ class ContinuousASDEngine:
         state_sharding=None,
         pipelined: bool = False,
         seed: int = 0,
+        controller: Optional[ThetaController] = None,
+        policy: Optional[SchedulingPolicy] = None,
     ):
         self.schedule = schedule
         self.event_shape = tuple(event_shape)
@@ -107,10 +136,20 @@ class ContinuousASDEngine:
         self.keep_trajectory = keep_trajectory
         self.grs_impl = grs_impl
         self.pipelined = pipelined
-        self.scheduler = SlotScheduler(num_slots)
+        self.controller = controller if controller is not None else StaticTheta()
+        self.scheduler = SlotScheduler(num_slots, policy=policy)
         self.stats = EngineStats()
         self._key = jax.random.PRNGKey(seed)
         self._results: dict[int, np.ndarray] = {}
+        self.dropped_rids: list[int] = []
+        # admission-context estimates: EWMAs of accept rate over retired
+        # chains and of observed wall seconds per fused round.  Per-round
+        # EWMA (not total-elapsed / rounds) so compile time and idle gaps
+        # between serve() calls decay out instead of permanently inflating
+        # the deadline policy's service-time estimates.
+        self._accept_ewma = 1.0
+        self._spr_ewma = 0.0
+        self._spr_seen = False
 
         statics = dict(
             theta=self.theta,
@@ -118,6 +157,7 @@ class ContinuousASDEngine:
             noise_mode=noise_mode,
             keep_trajectory=keep_trajectory,
             grs_impl=grs_impl,
+            controller=self.controller,
         )
         self._params = params
         if params is None:
@@ -139,7 +179,8 @@ class ContinuousASDEngine:
             # init + scatter for a whole round's admissions in ONE dispatch
             new_sts = jax.vmap(
                 lambda y0, k: init_chain_state(
-                    schedule, y0, k, self.theta, noise_mode, keep_trajectory
+                    schedule, y0, k, self.theta, noise_mode, keep_trajectory,
+                    self.controller,
                 )
             )(y0s, keys)
             return jax.tree_util.tree_map(
@@ -166,7 +207,7 @@ class ContinuousASDEngine:
         self._states = jax.vmap(
             lambda k: init_chain_state(
                 schedule, jnp.zeros(self.event_shape), k, self.theta,
-                noise_mode, keep_trajectory,
+                noise_mode, keep_trajectory, self.controller,
             )
         )(jax.random.split(jax.random.PRNGKey(seed), num_slots))
         self._states = dataclasses.replace(
@@ -187,9 +228,33 @@ class ContinuousASDEngine:
         self._key, sub = jax.random.split(self._key)
         return sub
 
+    def _admission_context(self, now: float) -> AdmissionContext:
+        return AdmissionContext(
+            K=self.schedule.K,
+            theta_max=self.theta,
+            accept_rate=self._accept_ewma,
+            seconds_per_round=self._spr_ewma,
+            now=now,
+        )
+
+    def _observe_round_time(self, dt: float) -> None:
+        if not self._spr_seen:
+            # the engine's first round pays the jit compile: seeding the
+            # EWMA with it would make the deadline policy drop meetable
+            # requests for the next ~10 rounds, and those drops are final
+            self._spr_seen = True
+            return
+        self._spr_ewma = dt if self._spr_ewma == 0.0 else (
+            0.7 * self._spr_ewma + 0.3 * dt)
+
     def _admit_pending(self) -> None:
         now = time.perf_counter()
-        placed = self.scheduler.admit(now, self.stats.rounds_total)
+        placed = self.scheduler.admit(
+            now, self.stats.rounds_total, self._admission_context(now)
+        )
+        for entry in self.scheduler.drain_dropped():
+            self.stats.observe_drop()
+            self.dropped_rids.append(entry.request.rid)
         if not placed:
             return
         idxs, y0s, keys = [], [], []
@@ -258,7 +323,8 @@ class ContinuousASDEngine:
         for i, slot in enumerate(finished):
             info = self.scheduler.retire(slot)
             self._results[info.request.rid] = np.asarray(samples[i])
-            self.stats.observe(RequestMetrics(
+            deadline = getattr(info.request, "deadline", None)
+            rm = RequestMetrics(
                 rid=info.request.rid,
                 queue_latency=info.admit_time - info.submit_time,
                 service_time=now - info.admit_time,
@@ -267,7 +333,12 @@ class ContinuousASDEngine:
                 model_evals=int(evals[i]),
                 accepts=int(accepts[i]),
                 proposals=int(proposals[i]),
-            ))
+                deadline=deadline,
+                slo_met=None if deadline is None else now <= deadline,
+            )
+            self.stats.observe(rm)
+            # EWMA over retired chains feeds the SERR/deadline estimates
+            self._accept_ewma = 0.8 * self._accept_ewma + 0.2 * rm.accept_rate
 
     def step(self) -> bool:
         """Admit, run ONE fused speculation round over all slots, retire.
@@ -276,10 +347,12 @@ class ContinuousASDEngine:
         """
         if not self.scheduler.has_work():
             return False
+        t0 = time.perf_counter()
         self._admit_pending()
         self._states = self._round_fn(self._states, self._conds, self._params)
         self.stats.rounds_total += 1
-        self._retire_finished()
+        self._retire_finished()  # syncs on the round via states.a
+        self._observe_round_time(time.perf_counter() - t0)
         return self.scheduler.has_work()
 
     def serve(self, requests: list[Request], key=None) -> dict[int, np.ndarray]:
@@ -296,12 +369,14 @@ class ContinuousASDEngine:
         """
         if key is not None:
             self._key = key
+        self.dropped_rids = []  # drops are reported per serve() wave
         t0 = time.perf_counter()
         for r in requests:
             self.submit(r)
         if self.pipelined:
             prev = None
             while self.scheduler.has_work():
+                t_round = time.perf_counter()
                 self._admit_pending()
                 nxt = self._round_fn(self._states, self._conds, self._params)
                 self.stats.rounds_total += 1
@@ -309,6 +384,7 @@ class ContinuousASDEngine:
                     # overlaps the round in flight; prev is one round old
                     self._retire_finished(prev, self.stats.rounds_total - 1)
                 self._states = prev = nxt
+                self._observe_round_time(time.perf_counter() - t_round)
         else:
             while self.step():
                 pass

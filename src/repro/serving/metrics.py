@@ -13,7 +13,7 @@ system tests read.
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 
 @dataclasses.dataclass
@@ -26,6 +26,8 @@ class RequestMetrics:
     model_evals: int  # total model evaluations (all speculation slots)
     accepts: int
     proposals: int
+    deadline: Optional[float] = None  # absolute SLO deadline, if any
+    slo_met: Optional[bool] = None  # retired before the deadline? (None: no SLO)
 
     @property
     def accept_rate(self) -> float:
@@ -40,6 +42,12 @@ class RequestMetrics:
     def latency(self) -> float:
         return self.queue_latency + self.service_time
 
+    @property
+    def mean_window(self) -> float:
+        """Mean live speculation window (verified slots per round) — equals
+        theta under StaticTheta, tracks theta_live under adaptive control."""
+        return self.proposals / max(self.rounds, 1)
+
 
 @dataclasses.dataclass
 class EngineStats:
@@ -53,6 +61,9 @@ class EngineStats:
     proposals_total: int = 0
     queue_latency_total: float = 0.0
     wall_time: float = 0.0
+    dropped: int = 0  # rejected at admission (SLO admission control)
+    slo_tracked: int = 0  # retired requests that carried a deadline
+    slo_met_count: int = 0
     per_request: List[RequestMetrics] = dataclasses.field(default_factory=list)
 
     def observe(self, rm: RequestMetrics) -> None:
@@ -62,7 +73,14 @@ class EngineStats:
         self.accepts_total += rm.accepts
         self.proposals_total += rm.proposals
         self.queue_latency_total += rm.queue_latency
+        if rm.slo_met is not None:
+            self.slo_tracked += 1
+            self.slo_met_count += int(rm.slo_met)
         self.per_request.append(rm)
+
+    def observe_drop(self, n: int = 1) -> None:
+        """A request rejected at admission: its deadline was unmeetable."""
+        self.dropped += n
 
     def parallel_depth_per_sample(self) -> float:
         return (self.rounds_total + self.head_calls_total) / max(self.requests, 1)
@@ -77,15 +95,38 @@ class EngineStats:
         """Completed samples per second of engine wall time."""
         return self.retired / self.wall_time if self.wall_time > 0 else 0.0
 
+    def slo_attainment(self) -> float:
+        """Fraction of deadline-carrying requests that met their deadline.
+        Admission-control drops count as misses (tracked but unmet)."""
+        tracked = self.slo_tracked + self.dropped
+        if tracked == 0:
+            return 1.0
+        return self.slo_met_count / tracked
+
+    def mean_window(self) -> float:
+        """Verified slots per fused round per chain (mean live theta)."""
+        rounds = sum(m.rounds for m in self.per_request)
+        return self.proposals_total / max(rounds, 1)
+
+    def mean_parallel_depth(self) -> float:
+        """Mean per-request sequential model-call depth (rounds + head calls)."""
+        if not self.per_request:
+            return 0.0
+        return sum(m.parallel_depth for m in self.per_request) / len(self.per_request)
+
     def summary(self) -> dict:
         return {
             "requests": self.requests,
             "retired": self.retired,
+            "dropped": self.dropped,
             "rounds_total": self.rounds_total,
             "head_calls_total": self.head_calls_total,
             "model_evals_total": self.model_evals_total,
             "accept_rate": self.accept_rate(),
+            "mean_window": self.mean_window(),
+            "mean_parallel_depth": self.mean_parallel_depth(),
             "mean_queue_latency_s": self.mean_queue_latency(),
+            "slo_attainment": self.slo_attainment(),
             "wall_time_s": self.wall_time,
             "throughput_rps": self.throughput(),
         }

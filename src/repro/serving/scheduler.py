@@ -3,9 +3,11 @@
 The engine owns a fixed number of *slots* — lanes of the vmapped per-round
 speculation program.  The scheduler is the host-side bookkeeping around them:
 
-  submitted --> queued --FCFS admit--> active (slot i) --chain done--> retired
-                                          ^                               |
-                                          +------- slot i freed ----------+
+  submitted --> queued --policy admit--> active (slot i) --chain done--> retired
+                   |                        ^                               |
+                   +-- admission control    +------- slot i freed ----------+
+                       may DROP (deadline
+                       already unmeetable)
 
 Admission happens at round boundaries only (the device program is SPMD over
 slots, so a slot can only change occupants between rounds).  A chain that
@@ -13,6 +15,21 @@ accepts its full speculation window retires early and frees its slot for the
 next queued request instead of blocking the batch until the slowest chain
 finishes — the standard continuous-batching move from LLM serving, applied to
 diffusion chains.
+
+WHICH queued request takes a freed slot is a pluggable ``SchedulingPolicy``:
+
+  ``FCFS``                            submit order (the PR-1 behavior).
+  ``Priority``                        highest ``Request.priority`` first.
+  ``ShortestExpectedRemainingRounds`` fewest expected speculation rounds
+      first, estimated from the request's accept-rate hint (or the engine's
+      observed EWMA accept rate) — SJF for diffusion chains: short chains
+      stop queueing behind long ones.
+  ``DeadlineAware``                   earliest deadline first; with
+      ``drop_late`` it rejects requests whose deadline can no longer be met
+      given the engine's observed seconds-per-round (SLO admission control).
+
+Policies are host-side and only reorder/filter the queue — the device
+program never sees them, so every policy serves bit-identical samples.
 """
 
 from __future__ import annotations
@@ -32,28 +49,171 @@ class SlotInfo:
     admit_round: int  # engine round counter at admission
 
 
-class SlotScheduler:
-    """FCFS admission of requests into a fixed set of engine slots."""
+@dataclasses.dataclass(eq=False)  # identity equality: requests may hold
+class QueueEntry:                 # ndarray fields, where __eq__ is ambiguous
+    request: Any
+    submit_time: float
 
-    def __init__(self, num_slots: int):
+
+@dataclasses.dataclass
+class AdmissionContext:
+    """Engine observables the scheduling policies key on.
+
+    The engine refreshes this at every admission point; estimates degrade
+    gracefully (policies fall back to FCFS-ish behavior) when the engine has
+    not observed enough traffic yet.
+    """
+
+    K: int = 0  # chain length (steps to commit per request)
+    theta_max: int = 1  # speculation window cap
+    accept_rate: float = 1.0  # engine-level EWMA of observed accept rates
+    seconds_per_round: float = 0.0  # observed wall seconds per fused round
+    now: float = 0.0
+
+    def expected_rounds(self, request) -> float:
+        """Expected speculation rounds for ``request``: K / E[steps per round]
+        under a geometric accept model at the request's (hinted or engine-
+        observed) per-slot accept rate."""
+        rate = getattr(request, "expected_accept_rate", None)
+        if rate is None:
+            rate = self.accept_rate
+        rate = min(max(float(rate), 0.0), 0.999)
+        # E[advance] = sum_{j<theta} rate^j = (1 - rate^theta) / (1 - rate)
+        adv = (1.0 - rate ** self.theta_max) / max(1.0 - rate, 1e-3)
+        return self.K / max(adv, 1.0)
+
+    def expected_service_time(self, request) -> float:
+        return self.expected_rounds(request) * self.seconds_per_round
+
+
+class SchedulingPolicy:
+    """Orders the queue at each admission point; may veto admissions."""
+
+    name = "base"
+    # True when order() is submit order and admit_ok() never vetoes: the
+    # scheduler then admits via O(1) popleft instead of sort-and-filter
+    fifo_fast_path = False
+
+    def order(self, queue: List[QueueEntry], ctx: AdmissionContext) -> List[QueueEntry]:
+        return list(queue)
+
+    def admit_ok(self, entry: QueueEntry, ctx: AdmissionContext) -> bool:
+        return True
+
+
+class FCFS(SchedulingPolicy):
+    """First-come-first-served: the queue's own order."""
+
+    name = "fcfs"
+    fifo_fast_path = True
+
+
+class Priority(SchedulingPolicy):
+    """Highest ``Request.priority`` first; FCFS within a priority level."""
+
+    name = "priority"
+
+    def order(self, queue, ctx):
+        return sorted(
+            queue,
+            key=lambda e: (
+                -float(getattr(e.request, "priority", 0.0) or 0.0),
+                e.submit_time,
+            ),
+        )
+
+
+class ShortestExpectedRemainingRounds(SchedulingPolicy):
+    """SJF on expected speculation rounds (accept-rate-informed)."""
+
+    name = "serr"
+
+    def order(self, queue, ctx):
+        return sorted(
+            queue,
+            key=lambda e: (ctx.expected_rounds(e.request), e.submit_time),
+        )
+
+
+class DeadlineAware(SchedulingPolicy):
+    """Earliest-deadline-first + optional SLO admission control.
+
+    Requests without a deadline sort last (best effort).  With ``drop_late``,
+    a request whose estimated completion ``now + queue-position-agnostic
+    service estimate`` already exceeds its deadline is rejected at admission
+    instead of burning a slot it cannot use — the engine records the drop.
+    """
+
+    name = "deadline"
+
+    def __init__(self, drop_late: bool = True):
+        self.drop_late = drop_late
+
+    def order(self, queue, ctx):
+        return sorted(
+            queue,
+            key=lambda e: (
+                getattr(e.request, "deadline", None) is None,
+                getattr(e.request, "deadline", None) or 0.0,
+                e.submit_time,
+            ),
+        )
+
+    def admit_ok(self, entry, ctx):
+        deadline = getattr(entry.request, "deadline", None)
+        if deadline is None or not self.drop_late:
+            return True
+        if ctx.seconds_per_round <= 0.0:  # no service-time estimate yet
+            return True
+        return ctx.now + ctx.expected_service_time(entry.request) <= deadline
+
+
+POLICIES = {
+    "fcfs": FCFS,
+    "priority": Priority,
+    "serr": ShortestExpectedRemainingRounds,
+    "deadline": DeadlineAware,
+}
+
+
+def make_policy(name: str, **kwargs) -> SchedulingPolicy:
+    """CLI-facing factory: ``make_policy("deadline", drop_late=False)``."""
+    try:
+        return POLICIES[name](**kwargs)
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduling policy {name!r}; have {sorted(POLICIES)}"
+        ) from None
+
+
+class SlotScheduler:
+    """Policy-driven admission of requests into a fixed set of engine slots."""
+
+    def __init__(self, num_slots: int, policy: Optional[SchedulingPolicy] = None):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         self.num_slots = num_slots
-        self._queue: deque = deque()  # (request, submit_time)
+        self.policy = policy if policy is not None else FCFS()
+        self._queue: deque[QueueEntry] = deque()
         self._slots: List[Optional[SlotInfo]] = [None] * num_slots
         self.submitted = 0
         self.admitted = 0
         self.retired = 0
+        self.dropped: List[QueueEntry] = []  # drained by the engine
 
     # -- queue side ---------------------------------------------------------
 
     def submit(self, request, now: float) -> None:
-        self._queue.append((request, now))
+        self._queue.append(QueueEntry(request, now))
         self.submitted += 1
 
     @property
     def queue_depth(self) -> int:
         return len(self._queue)
+
+    def drain_dropped(self) -> List[QueueEntry]:
+        out, self.dropped = self.dropped, []
+        return out
 
     # -- slot side ----------------------------------------------------------
 
@@ -66,21 +226,57 @@ class SlotScheduler:
     def slot_info(self, slot: int) -> Optional[SlotInfo]:
         return self._slots[slot]
 
-    def admit(self, now: float, round_idx: int) -> List[Tuple[int, Any]]:
-        """Fill free slots from the queue (FCFS).  Returns [(slot, request)]."""
-        placed = []
-        for slot in self.free_slots():
-            if not self._queue:
-                break
-            request, submit_time = self._queue.popleft()
+    def admit(
+        self,
+        now: float,
+        round_idx: int,
+        ctx: Optional[AdmissionContext] = None,
+    ) -> List[Tuple[int, Any]]:
+        """Fill free slots from the queue in policy order.
+
+        Returns [(slot, request)].  Entries the policy vetoes
+        (``admit_ok`` False) are moved to ``self.dropped`` — the engine
+        drains and accounts them.
+        """
+        free = self.free_slots()
+        if not free or not self._queue:
+            return []
+        if ctx is None:
+            ctx = AdmissionContext(now=now)
+        ctx.now = now
+        placed: List[Tuple[int, Any]] = []
+
+        def place(slot: int, entry: QueueEntry) -> None:
             self._slots[slot] = SlotInfo(
-                request=request,
-                submit_time=submit_time,
+                request=entry.request,
+                submit_time=entry.submit_time,
                 admit_time=now,
                 admit_round=round_idx,
             )
             self.admitted += 1
-            placed.append((slot, request))
+            placed.append((slot, entry.request))
+
+        if self.policy.fifo_fast_path:  # hot loop: no copy, sort, or scan
+            for slot in free:
+                if not self._queue:
+                    break
+                place(slot, self._queue.popleft())
+            return placed
+
+        taken: set = set()
+        for entry in self.policy.order(list(self._queue), ctx):
+            if not free:
+                break
+            if not self.policy.admit_ok(entry, ctx):
+                taken.add(id(entry))
+                self.dropped.append(entry)
+                continue
+            place(free.pop(0), entry)
+            taken.add(id(entry))
+        if taken:  # one rebuild pass (entries compare by identity)
+            self._queue = deque(
+                e for e in self._queue if id(e) not in taken
+            )
         return placed
 
     def retire(self, slot: int) -> SlotInfo:

@@ -1,0 +1,172 @@
+"""Scheduling policies (repro.serving.scheduler) and their engine wiring:
+ordering semantics per policy, SLO admission control (deadline drops), and
+the invariant that policies only reorder host-side admission — the served
+samples stay bit-identical to FCFS for the same request keys."""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.serving.engine import ContinuousASDEngine, Request
+from repro.serving.scheduler import (
+    AdmissionContext,
+    DeadlineAware,
+    FCFS,
+    Priority,
+    ShortestExpectedRemainingRounds,
+    SlotScheduler,
+    make_policy,
+)
+
+THETA = 5
+
+
+def _requests(n, seed0=100, **kw):
+    return [
+        Request(i, key=jax.random.PRNGKey(seed0 + i),
+                y0=np.zeros((2,), np.float32), **kw)
+        for i in range(n)
+    ]
+
+
+def _engine(sl_model2, sched_tiny, **kw):
+    return ContinuousASDEngine(
+        lambda cond: sl_model2, sched_tiny, (2,), num_slots=2, theta=THETA,
+        eager_head=True, keep_trajectory=True, **kw,
+    )
+
+
+# -- policy units ----------------------------------------------------------
+
+
+def test_priority_ordering():
+    sched = SlotScheduler(1, policy=Priority())
+    sched.submit(Request(0, priority=0.0), now=0.0)
+    sched.submit(Request(1, priority=5.0), now=1.0)
+    sched.submit(Request(2, priority=5.0), now=2.0)
+    placed = sched.admit(now=3.0, round_idx=0)
+    assert [r.rid for _, r in placed] == [1]  # highest priority wins
+    sched.retire(placed[0][0])
+    placed = sched.admit(now=4.0, round_idx=1)
+    assert [r.rid for _, r in placed] == [2]  # FCFS within a priority level
+
+
+def test_serr_ordering_uses_accept_rate_hints():
+    sched = SlotScheduler(2, policy=ShortestExpectedRemainingRounds())
+    ctx = AdmissionContext(K=100, theta_max=8, accept_rate=0.5)
+    sched.submit(Request(0, expected_accept_rate=0.2), now=0.0)  # slow chain
+    sched.submit(Request(1, expected_accept_rate=0.95), now=1.0)  # fast chain
+    sched.submit(Request(2), now=2.0)  # no hint: engine rate (0.5)
+    placed = sched.admit(now=3.0, round_idx=0, ctx=ctx)
+    assert [r.rid for _, r in placed] == [1, 2]  # fewest expected rounds first
+    assert ctx.expected_rounds(Request(9, expected_accept_rate=0.95)) < \
+        ctx.expected_rounds(Request(9, expected_accept_rate=0.2))
+
+
+def test_deadline_edf_ordering_and_drop():
+    sched = SlotScheduler(1, policy=DeadlineAware(drop_late=True))
+    ctx = AdmissionContext(K=10, theta_max=4, accept_rate=0.9,
+                           seconds_per_round=1.0)
+    sched.submit(Request(0), now=0.0)  # no deadline: best effort, sorts last
+    sched.submit(Request(1, deadline=1000.0), now=0.0)
+    sched.submit(Request(2, deadline=0.5), now=0.0)  # already unmeetable
+    placed = sched.admit(now=10.0, round_idx=0, ctx=ctx)
+    # rid 2 has the earliest deadline but cannot meet it -> dropped;
+    # rid 1 (deadline 1000) beats the no-deadline rid 0
+    assert [r.rid for _, r in placed] == [1]
+    assert [e.request.rid for e in sched.drain_dropped()] == [2]
+    assert sched.queue_depth == 1  # rid 0 still waiting
+
+
+def test_deadline_no_drop_without_estimate():
+    sched = SlotScheduler(1, policy=DeadlineAware(drop_late=True))
+    sched.submit(Request(0, deadline=-1.0), now=0.0)
+    # seconds_per_round == 0: no service estimate yet -> must not drop
+    placed = sched.admit(now=1.0, round_idx=0,
+                         ctx=AdmissionContext(seconds_per_round=0.0))
+    assert [r.rid for _, r in placed] == [0]
+
+
+def test_reordering_admit_with_array_fields_and_duplicate_rids():
+    """Queue entries compare by identity: admitting under a reordering
+    policy must not invoke Request.__eq__ (ndarray fields make it ambiguous),
+    even when two queued requests look identical."""
+    sched = SlotScheduler(1, policy=Priority())
+    sched.submit(Request(7, cond=np.zeros(4), key=jax.random.PRNGKey(0),
+                         priority=0.0), now=0.0)
+    sched.submit(Request(7, cond=np.ones(4), key=jax.random.PRNGKey(1),
+                         priority=5.0), now=1.0)
+    placed = sched.admit(now=2.0, round_idx=0)
+    assert len(placed) == 1 and placed[0][1].priority == 5.0
+    assert sched.queue_depth == 1  # the low-priority twin is still queued
+
+
+def test_make_policy_factory():
+    assert isinstance(make_policy("fcfs"), FCFS)
+    assert make_policy("deadline", drop_late=False).drop_late is False
+    with pytest.raises(ValueError):
+        make_policy("lifo")
+
+
+# -- engine integration ----------------------------------------------------
+
+
+def test_policies_serve_bit_identical_samples(sl_model2, sched_tiny):
+    """Policies reorder admission only: per-request samples are key-derived,
+    so every policy returns bit-identical results."""
+    outs = {}
+    for name in ("fcfs", "priority", "serr"):
+        eng = _engine(sl_model2, sched_tiny, policy=make_policy(name))
+        outs[name] = eng.serve(_requests(7, priority=3.0,
+                                         expected_accept_rate=0.7))
+    for name in ("priority", "serr"):
+        assert sorted(outs[name]) == sorted(outs["fcfs"])
+        for rid in outs["fcfs"]:
+            np.testing.assert_array_equal(outs[name][rid], outs["fcfs"][rid])
+
+
+def test_priority_request_admitted_first(sl_model2, sched_tiny):
+    """With a deep queue, the high-priority request reaches a slot in the
+    first admission wave even though it was submitted last."""
+    eng = _engine(sl_model2, sched_tiny, policy=Priority())
+    reqs = _requests(6)
+    reqs.append(Request(99, key=jax.random.PRNGKey(999), priority=10.0,
+                        y0=np.zeros((2,), np.float32)))
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    active = {eng.scheduler.slot_info(s).request.rid
+              for s in eng.scheduler.active_slots()}
+    assert 99 in active
+
+
+def test_deadline_drop_accounting(sl_model2, sched_tiny):
+    """An unmeetable deadline is dropped at admission: not served, counted
+    in stats, and SLO attainment reflects the miss."""
+    eng = _engine(sl_model2, sched_tiny, policy=DeadlineAware(drop_late=True))
+    # prime the engine's seconds-per-round estimate with real traffic
+    eng.serve(_requests(3, seed0=500))
+    out = eng.serve([
+        Request(0, key=jax.random.PRNGKey(0), y0=np.zeros((2,), np.float32),
+                deadline=time.perf_counter() + 1e6),
+        Request(1, key=jax.random.PRNGKey(1), y0=np.zeros((2,), np.float32),
+                deadline=time.perf_counter() - 1.0),  # already past
+    ])
+    assert sorted(out) == [0]
+    assert eng.dropped_rids == [1]
+    assert eng.stats.dropped == 1
+    s = eng.stats
+    assert s.slo_attainment() == pytest.approx(1 / 2)  # one met, one dropped
+    met = [m for m in s.per_request if m.rid == 0 and m.deadline is not None]
+    assert met and met[0].slo_met is True
+    summary = s.summary()
+    assert summary["dropped"] == 1 and "slo_attainment" in summary
+
+
+def test_fcfs_remains_default(sl_model2, sched_tiny):
+    eng = _engine(sl_model2, sched_tiny)
+    assert isinstance(eng.scheduler.policy, FCFS)
+    out = eng.serve(_requests(5))
+    assert sorted(out) == list(range(5))

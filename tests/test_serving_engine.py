@@ -151,6 +151,22 @@ def test_rounds_monotone_under_step(warm_engine, sl_model2, sched_tiny):
         assert len(eng.scheduler.active_slots()) <= eng.num_slots
 
 
+def test_engine_grs_kernel_matches_core(warm_engine, sl_model2, sched_tiny):
+    """grs_impl="kernel" threads the Pallas GRS verifier through the
+    continuous engine (interpret-mode off-TPU) and serves samples that match
+    the core-verifier engine for the same keys."""
+    n = 5
+    ref = _engine(warm_engine, sl_model2, sched_tiny).serve(_requests(n))
+    eng = ContinuousASDEngine(
+        lambda cond: sl_model2, sched_tiny, (2,), num_slots=4, theta=THETA,
+        eager_head=True, keep_trajectory=True, grs_impl="kernel",
+    )
+    out = eng.serve(_requests(n))
+    assert sorted(out) == sorted(ref)
+    for rid in ref:
+        np.testing.assert_allclose(out[rid], ref[rid], atol=1e-5)
+
+
 def test_scheduler_unit():
     sched = SlotScheduler(2)
     sched.submit("a", now=0.0)

@@ -1,0 +1,227 @@
+"""Adaptive speculation-window controllers (repro.core.controller).
+
+Three contracts:
+
+  1. EXACTNESS — the default ``StaticTheta`` path is bit-identical to the
+     pre-controller fused ``asd_sample``: pinned-seed goldens captured from
+     the pre-refactor implementation (sample bits AND every counter) across
+     eager_head x noise_mode.
+  2. CONTROL LAW — AIMD is monotone under forced accept/reject streams and
+     saturates at [theta_min, theta_max]; the accept-rate controller opens
+     the window under high observed accept rates and closes it under low.
+  3. NO RECOMPILES — theta_live is traced state, never a shape: one jitted
+     round program serves every live-window value (cache size stays 1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AIMDTheta,
+    AcceptRateTheta,
+    StaticTheta,
+    asd_round,
+    asd_sample,
+    chain_done,
+    init_chain_state,
+    make_controller,
+    sequential_sample,
+)
+
+THETA = 5
+
+# pinned goldens captured at PR 1 (pre-controller asd_sample), key=42,
+# theta=5, K=16 sl_uniform(t_max=8), d=2 GMM mean oracle, y0=0:
+# (sample float32 bytes hex, rounds, head_calls, model_evals, accepts,
+#  proposals)
+GOLDEN = {
+    (False, "buffer"): ("c0e8f8c012c8b1c0", 4, 4, 20, 15, 16),
+    (False, "counter"): ("4dd6b7c0a4622ec1", 4, 4, 23, 15, 19),
+    (True, "buffer"): ("c0e8f8c012c8b1c0", 4, 2, 22, 15, 16),
+    (True, "counter"): ("4dd6b7c0a4622ec1", 4, 2, 25, 15, 19),
+}
+
+
+@pytest.mark.parametrize("eager_head", [False, True])
+@pytest.mark.parametrize("noise_mode", ["buffer", "counter"])
+def test_static_theta_bit_identical_to_pre_refactor(
+    sl_model2, sched_tiny, zeros2, eager_head, noise_mode
+):
+    """StaticTheta(theta_max) == the pre-refactor sampler, bit for bit."""
+    res = jax.jit(lambda: asd_sample(
+        sl_model2, sched_tiny, zeros2, jax.random.PRNGKey(42), THETA,
+        eager_head, noise_mode, controller=StaticTheta()))()
+    hex_bits, rounds, heads, evals, accepts, proposals = GOLDEN[
+        (eager_head, noise_mode)]
+    assert np.asarray(res.sample).tobytes().hex() == hex_bits
+    assert int(res.rounds) == rounds
+    assert int(res.head_calls) == heads
+    assert int(res.model_evals) == evals
+    assert int(res.accepts) == accepts
+    assert int(res.proposals) == proposals
+
+
+def test_static_is_the_default_controller(sl_model2, sched_tiny, zeros2):
+    """Omitting ``controller`` means StaticTheta: same bits."""
+    key = jax.random.PRNGKey(7)
+    a = jax.jit(lambda: asd_sample(
+        sl_model2, sched_tiny, zeros2, key, THETA, True))()
+    b = jax.jit(lambda: asd_sample(
+        sl_model2, sched_tiny, zeros2, key, THETA, True,
+        controller=StaticTheta()))()
+    np.testing.assert_array_equal(np.asarray(a.sample), np.asarray(b.sample))
+    assert int(a.model_evals) == int(b.model_evals)
+
+
+def test_aimd_monotone_under_forced_streams():
+    """Forced rejects shrink theta monotonically to theta_min; forced full
+    accepts grow it monotonically back to theta_max."""
+    theta_max = 8
+    c = AIMDTheta(theta_min=1)
+    ctrl, live = c.init(theta_max)
+    assert int(live) == theta_max
+
+    seen = []
+    for _ in range(12):  # reject every round
+        ctrl, live = c.update(ctrl, live, jnp.asarray(0), live,
+                              jnp.asarray(True), theta_max)
+        seen.append(int(live))
+    assert all(b <= a for a, b in zip(seen, seen[1:]))
+    assert seen[-1] == 1
+
+    seen = []
+    for _ in range(12):  # accept the full window every round
+        ctrl, live = c.update(ctrl, live, live, live,
+                              jnp.asarray(False), theta_max)
+        seen.append(int(live))
+    assert all(b >= a for a, b in zip(seen, seen[1:]))
+    assert seen[-1] == theta_max
+
+
+def test_accept_rate_controller_tracks_rate():
+    theta_max = 8
+    c = AcceptRateTheta(theta_min=1)
+    ctrl, live = c.init(theta_max)
+    for _ in range(20):  # everything accepted -> window fully open
+        ctrl, live = c.update(ctrl, live, live, live,
+                              jnp.asarray(False), theta_max)
+    assert int(live) == theta_max
+    shut = []
+    for _ in range(60):  # nothing accepted -> window closes to theta_min
+        ctrl, live = c.update(ctrl, live, jnp.asarray(0), live,
+                              jnp.asarray(True), theta_max)
+        shut.append(int(live))
+    assert all(b <= a for a, b in zip(shut, shut[1:]))
+    assert shut[-1] == 1
+
+
+def test_no_recompile_across_theta_live(sl_model2, sched_tiny, zeros2):
+    """One compiled round serves every live-window value: theta_live is data,
+    not shape.  Tracing the model more than once (or growing the jit cache)
+    means the live window leaked into the program as a static."""
+    traces = []
+
+    def counting_model(t, y):
+        traces.append(1)  # runs at TRACE time only
+        return sl_model2(t, y)
+
+    controller = AIMDTheta(theta_min=1)
+    round_fn = jax.jit(lambda s: asd_round(
+        counting_model, sched_tiny, s, THETA, True, "buffer", True,
+        controller=controller))
+    st = init_chain_state(sched_tiny, zeros2, jax.random.PRNGKey(3), THETA,
+                          controller=controller)
+    windows = set()
+    n = 0
+    while not bool(chain_done(st, sched_tiny.K)) and n < 50:
+        windows.add(int(st.theta_live))
+        st = round_fn(st)
+        n += 1
+    # also push a hand-built state at a window the run never visited
+    import dataclasses
+    st_min = dataclasses.replace(
+        init_chain_state(sched_tiny, zeros2, jax.random.PRNGKey(4), THETA,
+                         controller=controller),
+        theta_live=jnp.asarray(1, jnp.int32))
+    round_fn(st_min)
+    windows.add(1)
+    assert len(windows) >= 2  # the assertion below actually spans windows
+    n_traces = len(traces)
+    assert round_fn._cache_size() == 1
+    round_fn(st_min)  # and re-dispatch traces nothing new
+    assert len(traces) == n_traces
+
+
+@pytest.mark.parametrize("name", ["aimd", "accept-rate"])
+def test_adaptive_rounds_preserve_fused_equivalence(
+    sl_model2, sched_tiny, zeros2, name
+):
+    """Manual asd_round driving == fused asd_sample under ADAPTIVE control
+    too: the controller state lives in the chain state, so the resumable API
+    stays bit-identical to the while_loop."""
+    controller = make_controller(name)
+    key = jax.random.PRNGKey(21)
+    ref = jax.jit(lambda: asd_sample(
+        sl_model2, sched_tiny, zeros2, key, THETA, True,
+        controller=controller))()
+    st = init_chain_state(sched_tiny, zeros2, key, THETA,
+                          controller=controller)
+    round_fn = jax.jit(lambda s: asd_round(
+        sl_model2, sched_tiny, s, THETA, True, "buffer", True,
+        controller=controller))
+    n = 0
+    while not bool(chain_done(st, sched_tiny.K)):
+        st = round_fn(st)
+        n += 1
+        assert n <= 100
+    np.testing.assert_array_equal(
+        np.asarray(st.y[: sched_tiny.K + 1]), np.asarray(ref.trajectory))
+    for field in ("rounds", "head_calls", "model_evals", "accepts",
+                  "proposals"):
+        assert int(getattr(st, field)) == int(getattr(ref, field)), field
+
+
+def test_adaptive_law_matches_sequential(sl_model2, sched_tiny, zeros2):
+    """Window adaptation preserves exactness: theta_live for round r is a
+    function of rounds < r (filtration-measurable), so adaptive chains are
+    still exact DDPM chains — moments match the sequential sampler."""
+    n = 64
+    fn = jax.jit(jax.vmap(lambda k: asd_sample(
+        sl_model2, sched_tiny, zeros2, k, THETA, True,
+        controller=AIMDTheta(theta_min=1)).sample))
+    ya = np.asarray(fn(jax.random.split(jax.random.PRNGKey(5), n)))
+    seq = jax.jit(jax.vmap(
+        lambda k: sequential_sample(sl_model2, sched_tiny, zeros2, k)[0]))
+    ys = np.asarray(seq(jax.random.split(jax.random.PRNGKey(9), 256)))
+    np.testing.assert_allclose(
+        ya.mean(0), ys.mean(0), atol=4 * ys.std(0).max() / np.sqrt(n))
+    assert ya.std(0).max() < 3 * ys.std(0).max()
+
+
+def test_adaptive_spends_fewer_model_evals_when_rejecting(sched_tiny, zeros2):
+    """On a low-acceptance chain the adaptive window closes and the chain
+    verifies fewer slots per round than the static full window."""
+    # a deliberately inconsistent oracle: proposals drift from targets
+    bad_model = lambda t, y: jnp.tanh(y) + 0.5 * jnp.sin(
+        t[..., None] + jnp.zeros_like(y))
+    key = jax.random.PRNGKey(11)
+    run = lambda c: jax.jit(lambda: asd_sample(
+        bad_model, sched_tiny, zeros2, key, THETA, True, controller=c))()
+    static = run(StaticTheta())
+    adaptive = run(AIMDTheta(theta_min=1))
+    assert float(static.accept_rate()) < 0.8  # genuinely mixed acceptance
+    evals_per_step_static = int(static.model_evals) / sched_tiny.K
+    evals_per_step_adaptive = int(adaptive.model_evals) / sched_tiny.K
+    assert evals_per_step_adaptive < evals_per_step_static
+    # mean verified window shrank below the static full width
+    assert (int(adaptive.proposals) / int(adaptive.rounds)
+            < int(static.proposals) / int(static.rounds))
+
+
+def test_make_controller_factory():
+    assert isinstance(make_controller("static"), StaticTheta)
+    assert make_controller("aimd", backoff=0.25).backoff == 0.25
+    with pytest.raises(ValueError):
+        make_controller("nope")
