@@ -1,10 +1,14 @@
 """End-to-end inference driver (the paper's kind): train a small DiT
 denoiser on synthetic image latents, then SERVE batched sampling requests
-three ways — sequential DDPM, chunked static ASD batching, and the
+four ways — sequential DDPM, chunked static ASD batching, the
 continuous-batching ASD engine (slot refill at speculation-round
-boundaries; see repro/serving).
+boundaries; see repro/serving), and the PACKED continuous engine
+(repro/serving/packing): per round, only the LIVE verification points are
+gathered into one fixed budget-shaped model call, so adaptive speculation
+windows save real wall-clock, not just counted work.
 
     PYTHONPATH=src:. python examples/serve_asd.py [--requests 32] [--theta 8]
+        [--round-budget 58]   # packed engine budget (default ~0.85*slots*theta)
 """
 
 import argparse
@@ -24,6 +28,9 @@ def main():
     ap.add_argument("--theta", type=int, default=8)
     ap.add_argument("--K", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--round-budget", type=int, default=0,
+                    help="packed engine verification points per round "
+                         "(default: ~0.85 * slots * theta)")
     args = ap.parse_args()
 
     print("training / loading the latent denoiser (cached under results/)...")
@@ -68,6 +75,42 @@ def main():
         f"({s.rounds_total} fused rounds on {args.batch} slots); accept rate "
         f"{s.accept_rate():.2f}, mean queue latency "
         f"{s.mean_queue_latency()*1e3:.0f}ms, {s.throughput():.2f} samples/s"
+    )
+    sample = next(iter(out.values()))
+    print(f"       sample shape {sample.shape}, "
+          f"finite={bool(np.isfinite(sample).all())}")
+
+    # --- packed ragged verification: the same continuous engine, but each
+    # round's model call is sized by a fixed verification-point budget
+    # instead of slots * theta.  The accept-rate controller closes windows
+    # on low-acceptance chains, and the waterfilling allocator hands the
+    # freed points to the chains that can use them.
+    from repro.core.controller import AcceptRateTheta
+
+    budget = args.round_budget or max(
+        args.batch, int(round(0.85 * args.batch * args.theta)))
+    peng = ContinuousASDEngine(
+        model_fn_factory=lambda p, cond: make_sl_model_fn(p, dc),
+        params=params,
+        schedule=sched,
+        event_shape=(dc.seq_len, dc.d_data),
+        num_slots=args.batch,
+        theta=args.theta,
+        eager_head=True,
+        execution="packed",
+        round_budget=budget,
+        controller=AcceptRateTheta(headroom=3.5, theta_min=2),
+    )
+    t0 = time.perf_counter()
+    out = peng.serve([Request(i) for i in range(args.requests)],
+                     key=jax.random.PRNGKey(0))
+    dt = time.perf_counter() - t0
+    s = peng.stats
+    print(
+        f"[asd  packed    ] served {s.retired} requests in {dt:.1f}s "
+        f"({s.rounds_total} rounds, budget {budget}/{args.batch * args.theta} "
+        f"points); accept rate {s.accept_rate():.2f}, mean live window "
+        f"{s.mean_window():.1f}/{args.theta}, {s.throughput():.2f} samples/s"
     )
     sample = next(iter(out.values()))
     print(f"       sample shape {sample.shape}, "

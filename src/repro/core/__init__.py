@@ -21,13 +21,16 @@ from repro.core.sequential import (
 from repro.core.asd import (
     ASDChainState,
     ASDResult,
+    RoundPlan,
     asd_round,
     asd_sample,
     asd_sample_batched,
     asd_init_y0,
     chain_done,
     chain_sample,
+    commit_round,
     init_chain_state,
+    plan_round,
 )
 from repro.core.controller import (
     AIMDTheta,
@@ -58,6 +61,9 @@ __all__ = [
     "init_y0",
     "ASDChainState",
     "ASDResult",
+    "RoundPlan",
+    "plan_round",
+    "commit_round",
     "asd_round",
     "asd_sample",
     "asd_sample_batched",

@@ -187,7 +187,41 @@ def chain_sample(st: ASDChainState, K: int, keep_trajectory: bool = True) -> jax
     return st.y[0]  # live window: slot 0 is position a == K on exit
 
 
-def asd_round(
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RoundPlan:
+    """Everything one speculation round computes BEFORE the parallel
+    verification model call: the proposal call's output, the theta-step
+    elementwise rollout, and the schedule/noise windows it consumed.
+
+    ``plan_round`` produces it; the dense path (``asd_round``) verifies the
+    whole theta_max-shaped window against it, while the packed path
+    (``repro.serving.packing``) gathers only each slot's LIVE points across
+    a slot batch of plans into one budget-shaped model call.  All leaves are
+    per-chain arrays, so a ``RoundPlan`` vmaps exactly like ``ASDChainState``.
+    """
+
+    a: jax.Array  # () i32 chain position entering the round
+    theta_live: jax.Array  # () i32 clipped live window
+    n_valid: jax.Array  # () i32 live verification points: min(theta_live, K-a)
+    v_a: jax.Array  # (*event) proposal-call output g(t_a, y_a)
+    new_head: jax.Array  # () i32 — 1 if the proposal call was actually made
+    y_prev: jax.Array  # (theta, *event) verification inputs y_{a+j}
+    y_props: jax.Array  # (theta, *event) proposal samples y_hat_{a+j+1}
+    m_hats: jax.Array  # (theta, *event) proposal means
+    t_w1: jax.Array  # (theta+1,) model times t_a .. t_{a+theta}
+    u_w: jax.Array  # (theta,) verifier uniforms
+    xi_w: jax.Array  # (theta, *event) step noises
+    A_w: jax.Array  # (theta,)
+    B_w: jax.Array  # (theta,)
+    sig_w: jax.Array  # (theta,)
+
+
+def _window(arr, start, length):
+    return jax.lax.dynamic_slice_in_dim(arr, start, length, axis=0)
+
+
+def plan_round(
     model_fn: ModelFn,
     schedule: Schedule,
     st: ASDChainState,
@@ -195,39 +229,20 @@ def asd_round(
     eager_head: bool = False,
     noise_mode: str = "buffer",
     keep_trajectory: bool = True,
-    grs_impl: str = "core",
-    controller: ThetaController = _STATIC,
-) -> ASDChainState:
-    """One speculation round (Alg 1 lines 5-13): propose, roll theta steps,
-    verify in ONE batched model call, commit the accepted prefix.
-
-    ``theta`` is the static cap theta_max.  The round always rolls and
-    dispatches ``theta``-shaped buffers — so the compiled program is shared
-    across every value of the per-chain live window — but only
-    ``st.theta_live`` slots are verified (the ``n_valid`` mask) and counted,
-    and the ``controller`` updates ``theta_live`` from the round's observed
-    accepts before the state is returned.
-
-    Identity on finished chains (a >= K): under vmap a slot whose chain has
-    retired keeps its state (and counters) frozen while its neighbours keep
-    speculating — the property continuous batching relies on.  The static
-    arguments (theta, eager_head, noise_mode, keep_trajectory, controller)
-    must match the ``init_chain_state`` call that produced ``st``.
-    """
+) -> RoundPlan:
+    """Phase 1 of a speculation round (Alg 1 lines 6-9): the sequential
+    proposal call (possibly served from the eager cache) plus the theta-step
+    elementwise proposal rollout.  No parallel model call happens here."""
     K = schedule.K
     theta = _clamp_theta(theta, K)
     sched = schedule.pad(theta + 1)
     ev_shape = st.v_cache.shape
-    ev_ndim = st.v_cache.ndim
     dtype = st.y.dtype
     theta_live = jnp.clip(st.theta_live, 1, theta)
 
-    def window(arr, start, length):
-        return jax.lax.dynamic_slice_in_dim(arr, start, length, axis=0)
-
     def noise_window(a):
         if noise_mode == "buffer":
-            return window(st.u_buf, a, theta), window(st.xi_buf, a, theta)
+            return _window(st.u_buf, a, theta), _window(st.xi_buf, a, theta)
         idx = a + jnp.arange(theta)
         u_w = jax.vmap(lambda i: jax.random.uniform(jax.random.fold_in(st.k_u, i), ()))(idx)
         xi_w = jax.vmap(
@@ -251,10 +266,10 @@ def asd_round(
         new_head = jnp.asarray(1, jnp.int32)
 
     # --- 2. theta-step proposal rollout (lines 7-9)
-    A_w = window(sched.A, a, theta)
-    B_w = window(sched.B, a, theta)
-    sig_w = window(sched.sigma, a, theta)
-    t_w = window(sched.t_model, a, theta)
+    A_w = _window(sched.A, a, theta)
+    B_w = _window(sched.B, a, theta)
+    sig_w = _window(sched.sigma, a, theta)
+    t_w1 = _window(sched.t_model, a, theta + 1)
     u_w, xi_w = noise_window(a)
 
     def roll(y_i, inp):
@@ -266,33 +281,55 @@ def asd_round(
     _, (m_hats, y_props) = jax.lax.scan(roll, y_a, (A_w, B_w, sig_w, xi_w))
     y_prev = jnp.concatenate([y_a[None], y_props[:-1]], axis=0)  # (theta, ev)
 
-    # --- 3. ONE batched parallel round (line 11)
-    if eager_head:
-        # the head slot sits at the END of the LIVE window: on a full accept
-        # the chain lands on y_props[theta_live - 1], so this evaluation IS
-        # the next round's proposal call
-        y_head = jax.lax.dynamic_index_in_dim(
-            y_props, theta_live - 1, axis=0, keepdims=True
-        )
-        pts = jnp.concatenate([y_prev, y_head], axis=0)
-        ts = jnp.concatenate([t_w, sched.t_model[a + theta_live][None]], axis=0)
-        g_all = model_fn(ts, pts)
-        g_par, g_head = g_all[:-1], g_all[-1]
-    else:
-        g_par = model_fn(t_w, y_prev)
-        g_head = None
-    m_tgt = bcast_right(A_w, ev_ndim + 1) * y_prev + bcast_right(
-        B_w, ev_ndim + 1
-    ) * g_par
+    return RoundPlan(
+        a=a,
+        theta_live=theta_live,
+        n_valid=jnp.minimum(theta_live, K - a),
+        v_a=v_a,
+        new_head=new_head,
+        y_prev=y_prev,
+        y_props=y_props,
+        m_hats=m_hats,
+        t_w1=t_w1,
+        u_w=u_w,
+        xi_w=xi_w,
+        A_w=A_w,
+        B_w=B_w,
+        sig_w=sig_w,
+    )
 
-    # --- 4. Verifier (Alg 2) + windowed commit
-    if grs_impl == "kernel":
-        from repro.kernels.grs.ops import grs as grs_k
 
-        z, acc = grs_k(u_w, xi_w, m_hats, m_tgt, sig_w, event_ndim=ev_ndim)
-    else:
-        z, acc = grs(u_w, xi_w, m_hats, m_tgt, sig_w, event_ndim=ev_ndim)
-    n_valid = jnp.minimum(theta_live, K - a)
+def commit_round(
+    schedule: Schedule,
+    st: ASDChainState,
+    plan: RoundPlan,
+    z: jax.Array,
+    acc: jax.Array,
+    theta_r: jax.Array,
+    g_head: Optional[jax.Array],
+    theta: int,
+    eager_head: bool = False,
+    keep_trajectory: bool = True,
+    controller: ThetaController = _STATIC,
+) -> ASDChainState:
+    """Phase 3 of a speculation round (Alg 1 lines 12-13): windowed commit of
+    the accepted prefix + the reflected first rejection, counter updates, and
+    the controller's window update.
+
+    ``z``/``acc`` are the theta_max-shaped verifier outputs — only slots
+    ``< min(theta_r, K - a)`` are read.  ``theta_r`` is the window THIS round
+    effectively ran: ``plan.theta_live`` on the dense path, the slot's budget
+    grant on the packed path (a pre-round-measurable quantity either way, so
+    the committed chain's law is unchanged).  Identity on finished chains.
+    """
+    K = schedule.K
+    theta = _clamp_theta(theta, K)
+    ev_shape = st.v_cache.shape
+    ev_ndim = st.v_cache.ndim
+    dtype = st.y.dtype
+    a = plan.a
+
+    n_valid = jnp.minimum(theta_r, K - a)
     slot = jnp.arange(theta)
     acc = acc & (slot < n_valid)
     lead = leading_true_count(acc)
@@ -300,7 +337,7 @@ def asd_round(
     advance = lead + jnp.where(rejected, 1, 0)
 
     if keep_trajectory:
-        old = window(st.y, a + 1, theta)
+        old = _window(st.y, a + 1, theta)
     else:
         old = st.y[1:]
     mask = bcast_right(slot < advance, ev_ndim + 1)
@@ -317,9 +354,11 @@ def asd_round(
         )
         y_new = jax.lax.dynamic_slice_in_dim(buf2, advance, theta + 1, axis=0)
 
-    full_accept = jnp.logical_and(~rejected, n_valid == theta_live)
+    # n_valid > 0 guards the packed path's zero-grant stall: a round that
+    # verified nothing must not validate the eager-head cache
+    full_accept = (~rejected) & (n_valid == theta_r) & (n_valid > 0)
     ctrl_new, theta_next = controller.update(
-        st.ctrl, theta_live, lead, n_valid, rejected, theta
+        st.ctrl, theta_r, lead, n_valid, rejected, theta
     )
     new = ASDChainState(
         y=y_new,
@@ -327,9 +366,9 @@ def asd_round(
         v_cache=g_head if eager_head else st.v_cache,
         v_valid=full_accept if eager_head else jnp.asarray(False),
         rounds=st.rounds + 1,
-        head_calls=st.head_calls + new_head,
+        head_calls=st.head_calls + plan.new_head,
         model_evals=st.model_evals
-        + new_head
+        + plan.new_head
         + n_valid
         + (1 if eager_head else 0),
         accepts=st.accepts + lead,
@@ -342,6 +381,83 @@ def asd_round(
         xi_buf=st.xi_buf,
     )
     return _where_tree(a < K, new, st)
+
+
+def asd_round(
+    model_fn: ModelFn,
+    schedule: Schedule,
+    st: ASDChainState,
+    theta: int,
+    eager_head: bool = False,
+    noise_mode: str = "buffer",
+    keep_trajectory: bool = True,
+    grs_impl: str = "core",
+    controller: ThetaController = _STATIC,
+) -> ASDChainState:
+    """One speculation round (Alg 1 lines 5-13): propose, roll theta steps,
+    verify in ONE batched model call, commit the accepted prefix.
+
+    ``theta`` is the static cap theta_max.  The round always rolls and
+    dispatches ``theta``-shaped buffers — so the compiled program is shared
+    across every value of the per-chain live window — but only
+    ``st.theta_live`` slots are verified (the ``n_valid`` mask) and counted,
+    and the ``controller`` updates ``theta_live`` from the round's observed
+    accepts before the state is returned.
+
+    Internally this is ``plan_round`` (proposal + rollout) -> one dense
+    theta_max-shaped verification call -> ``commit_round``; the packed
+    execution path (``repro.serving.packing``) reuses the same plan/commit
+    phases but gathers only the live points across a slot batch.
+
+    Identity on finished chains (a >= K): under vmap a slot whose chain has
+    retired keeps its state (and counters) frozen while its neighbours keep
+    speculating — the property continuous batching relies on.  The static
+    arguments (theta, eager_head, noise_mode, keep_trajectory, controller)
+    must match the ``init_chain_state`` call that produced ``st``.
+    """
+    K = schedule.K
+    theta = _clamp_theta(theta, K)
+    ev_ndim = st.v_cache.ndim
+
+    plan = plan_round(
+        model_fn, schedule, st, theta, eager_head, noise_mode, keep_trajectory
+    )
+    theta_live = plan.theta_live
+    t_w = plan.t_w1[:theta]
+    y_prev = plan.y_prev
+
+    # --- 3. ONE batched parallel round (line 11)
+    if eager_head:
+        # the head slot sits at the END of the LIVE window: on a full accept
+        # the chain lands on y_props[theta_live - 1], so this evaluation IS
+        # the next round's proposal call
+        y_head = jax.lax.dynamic_index_in_dim(
+            plan.y_props, theta_live - 1, axis=0, keepdims=True
+        )
+        pts = jnp.concatenate([y_prev, y_head], axis=0)
+        ts = jnp.concatenate([t_w, plan.t_w1[theta_live][None]], axis=0)
+        g_all = model_fn(ts, pts)
+        g_par, g_head = g_all[:-1], g_all[-1]
+    else:
+        g_par = model_fn(t_w, y_prev)
+        g_head = None
+    m_tgt = bcast_right(plan.A_w, ev_ndim + 1) * y_prev + bcast_right(
+        plan.B_w, ev_ndim + 1
+    ) * g_par
+
+    # --- 4. Verifier (Alg 2) + windowed commit
+    if grs_impl == "kernel":
+        from repro.kernels.grs.ops import grs as grs_k
+
+        z, acc = grs_k(plan.u_w, plan.xi_w, plan.m_hats, m_tgt, plan.sig_w,
+                       event_ndim=ev_ndim)
+    else:
+        z, acc = grs(plan.u_w, plan.xi_w, plan.m_hats, m_tgt, plan.sig_w,
+                     event_ndim=ev_ndim)
+    return commit_round(
+        schedule, st, plan, z, acc, theta_live, g_head, theta,
+        eager_head, keep_trajectory, controller,
+    )
 
 
 def _where_tree(pred, new, old):

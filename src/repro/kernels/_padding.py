@@ -1,0 +1,26 @@
+"""Shared padding helper for the kernel wrappers.
+
+Every Pallas wrapper in this package pads its operands to hardware-friendly
+shapes (128-lane feature axes, ROW_BLK row tiles) before the kernel call and
+slices the padding back off afterwards.  The helper lives here — not in each
+ops.py — so the padding semantics (zero-fill by default, caller-chosen fill
+for scalars whose neutral element is not 0, e.g. sigma) cannot drift between
+kernels that must agree bit-for-bit on padded lanes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# TPU vector lane width: feature axes are padded to a multiple of this.
+LANE = 128
+
+
+def pad_dim(a: jax.Array, pad: int, axis: int, value: float = 0.0) -> jax.Array:
+    """Zero-pad (or ``value``-pad) ``a`` by ``pad`` at the end of ``axis``."""
+    if not pad:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)

@@ -8,22 +8,12 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._padding import LANE, pad_dim as _pad_dim
 from repro.kernels.grs.kernel import ROW_BLK, grs_pallas
-
-LANE = 128
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
-
-
-def _pad_dim(a, pad: int, axis: int, value: float = 0.0):
-    """Zero-pad (or ``value``-pad) ``a`` by ``pad`` at the end of ``axis``."""
-    if not pad:
-        return a
-    widths = [(0, 0)] * a.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(a, widths, constant_values=value)
 
 
 def grs(u, xi, m_hat, m, sigma, event_ndim: int = 1, interpret: bool | None = None):

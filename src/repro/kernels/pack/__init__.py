@@ -1,0 +1,5 @@
+"""Ragged segment gather/scatter for packed verification rounds."""
+
+from repro.kernels.pack.ops import gather_rows, scatter_rows
+
+__all__ = ["gather_rows", "scatter_rows"]

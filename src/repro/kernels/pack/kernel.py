@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: ragged row gather/scatter for packed verification.
+
+The pack op is pure data movement — each output row is one dynamically
+indexed row copy — so the kernel's job is to keep the copies inside VMEM and
+off the HLO gather/scatter path (which XLA lowers to one dynamic-slice per
+row plus a concatenate on TPU).
+
+Layout: the source/destination row table lives wholly in VMEM (it is the
+slot-batch's speculation window, ``num_slots * theta`` rows of a lane-padded
+feature axis — small by construction); the packed side is blocked by ROW_BLK
+rows.  The row index map rides in SMEM as scalar-prefetch-style operands.
+
+  gather grid step i: for each of its ROW_BLK packed rows p, one dynamic
+    row load  out[p, :] = src[idx[p], :].
+  scatter grid step i: zero the output on the first step (TPU grid steps are
+    sequential), then for each input row p a predicated dynamic row store
+    out[idx[p], :] = vals[p, :]; rows with idx[p] >= num_rows are dropped.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLK = 8
+
+
+def _gather_kernel(idx_ref, src_ref, out_ref):
+    for r in range(ROW_BLK):
+        out_ref[r, :] = src_ref[idx_ref[r, 0], :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows_pallas(src, idx, interpret: bool = False):
+    """src: (N, D); idx: (M,) int32 in [0, N), M % ROW_BLK == 0, D % 128 == 0.
+
+    Returns out: (M, D) with out[p] = src[idx[p]].
+    """
+    N, D = src.shape
+    (M,) = idx.shape
+    assert M % ROW_BLK == 0, (M, ROW_BLK)
+    grid = (M // ROW_BLK,)
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLK, 1), lambda i: (i, 0)),  # idx block
+            pl.BlockSpec((N, D), lambda i: (0, 0)),  # whole table in VMEM
+        ],
+        out_specs=pl.BlockSpec((ROW_BLK, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, D), src.dtype),
+        interpret=interpret,
+    )(idx[:, None], src)
+
+
+def _scatter_kernel(idx_ref, vals_ref, out_ref, *, num_rows: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    for r in range(ROW_BLK):
+        row = idx_ref[r, 0]
+
+        @pl.when(row < num_rows)
+        def _():
+            out_ref[row, :] = vals_ref[r, :]
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "interpret"))
+def scatter_rows_pallas(vals, idx, num_rows: int, interpret: bool = False):
+    """vals: (M, D); idx: (M,) int32; M % ROW_BLK == 0, D % 128 == 0.
+
+    Returns out: (num_rows, D) with out[idx[p]] = vals[p] for idx[p] in
+    range; out-of-range rows dropped, unwritten rows zero.  In-range indices
+    must be unique (the pack maps guarantee it).
+    """
+    (M,) = idx.shape
+    D = vals.shape[1]
+    assert M % ROW_BLK == 0, (M, ROW_BLK)
+    grid = (M // ROW_BLK,)
+    return pl.pallas_call(
+        functools.partial(_scatter_kernel, num_rows=num_rows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLK, 1), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_BLK, D), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_rows, D), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_rows, D), vals.dtype),
+        interpret=interpret,
+    )(idx[:, None], vals)

@@ -1,0 +1,74 @@
+"""Jit'd public wrappers for the pack kernel: arbitrary event shapes, padding
+to the TPU lane boundary (via the shared kernels/_padding helper — the same
+semantics the GRS wrapper uses), interpret-mode fallback on CPU, and an
+``impl="ref"`` escape hatch to the pure-jnp reference."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._padding import LANE, pad_dim
+from repro.kernels.pack.kernel import (
+    ROW_BLK,
+    gather_rows_pallas,
+    scatter_rows_pallas,
+)
+from repro.kernels.pack.ref import gather_rows_ref, scatter_rows_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _collapse(a: jax.Array):
+    """(R, *event) -> (R, D) with D lane-padded; returns (rows, event, D)."""
+    event_shape = a.shape[1:]
+    D = math.prod(event_shape) if event_shape else 1
+    return a.reshape(a.shape[0], D), event_shape, D
+
+
+def gather_rows(
+    src: jax.Array,
+    idx: jax.Array,
+    impl: str = "kernel",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """out[p] = src[idx[p]] for a (N, *event) row table and (M,) indices."""
+    if impl == "ref":
+        return gather_rows_ref(src, idx)
+    if interpret is None:
+        interpret = not _on_tpu()
+    src2, event_shape, D = _collapse(src)
+    M = idx.shape[0]
+    pad_m = (-M) % ROW_BLK
+    src2 = pad_dim(src2, (-D) % LANE, axis=1)
+    # padding rows re-read row 0 and are sliced off below
+    idx2 = pad_dim(idx.astype(jnp.int32), pad_m, axis=0)
+    out = gather_rows_pallas(src2, idx2, interpret=interpret)
+    return out[:M, :D].reshape((M,) + event_shape)
+
+
+def scatter_rows(
+    vals: jax.Array,
+    idx: jax.Array,
+    num_rows: int,
+    impl: str = "kernel",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Inverse of gather: route (M, *event) rows to a zeroed (num_rows, *event)
+    table; ``idx[p] >= num_rows`` drops row p (the pack's padding lanes)."""
+    if impl == "ref":
+        return scatter_rows_ref(vals, idx, num_rows)
+    if interpret is None:
+        interpret = not _on_tpu()
+    vals2, event_shape, D = _collapse(vals)
+    M = idx.shape[0]
+    pad_m = (-M) % ROW_BLK
+    vals2 = pad_dim(vals2, (-D) % LANE, axis=1)
+    # padding rows target num_rows (out of range) and are dropped in-kernel
+    idx2 = pad_dim(idx.astype(jnp.int32), pad_m, axis=0, value=num_rows)
+    out = scatter_rows_pallas(vals2, idx2, num_rows, interpret=interpret)
+    return out[:, :D].reshape((num_rows,) + event_shape)

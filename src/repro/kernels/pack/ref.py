@@ -1,0 +1,35 @@
+"""Pure-jnp reference for the ragged row gather/scatter (kernels/pack).
+
+The packed verification round flattens per-slot speculation windows into row
+tables — ``(num_slots * theta, *event)`` — and moves only the LIVE rows into
+a dense budget-shaped batch (gather) and back (scatter).  These references
+define the semantics the Pallas kernel must match bit-for-bit:
+
+  gather_rows:  out[p] = src[idx[p]]            (idx may repeat)
+  scatter_rows: out[i] = vals[p] if idx[p] == i else 0
+                rows never written stay zero; idx[p] >= num_rows drops row p
+                (the pack's padding lanes all point one past the table).
+
+Real (in-range) indices produced by the pack-map builder are unique, so the
+scatter never sees colliding writes outside the drop row.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_rows_ref(src: jax.Array, idx: jax.Array) -> jax.Array:
+    """src: (N, *event); idx: (M,) int32 in [0, N) -> (M, *event)."""
+    return jnp.take(src, idx, axis=0)
+
+
+def scatter_rows_ref(vals: jax.Array, idx: jax.Array, num_rows: int) -> jax.Array:
+    """vals: (M, *event); idx: (M,) int32 -> (num_rows, *event).
+
+    Rows with ``idx >= num_rows`` are dropped; unwritten rows are zero.
+    """
+    out = jnp.zeros((num_rows + 1,) + vals.shape[1:], vals.dtype)
+    safe = jnp.minimum(idx, num_rows)  # all out-of-range rows hit the dump row
+    return out.at[safe].set(vals)[:num_rows]

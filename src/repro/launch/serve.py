@@ -21,10 +21,18 @@ data-parallel over the mesh.
 Speculation control and scheduling are pluggable:
 
   --theta-controller static|aimd|accept-rate   per-chain live window
-  --policy fcfs|priority|serr|deadline         slot admission policy
+  --policy fcfs|priority|serr|deadline|budget  slot admission policy
   --grs-impl core|kernel                       verifier backend (the Pallas
                                                GRS kernel runs interpret-mode
                                                off-TPU)
+
+Packed ragged verification (repro/serving/packing): gather only the LIVE
+verification points across slots into one fixed budget-shaped model call, so
+adaptive windows save wall-clock, not just counted work:
+
+  --execution packed --round-budget 96         e.g. ~0.85 * slots * theta
+  --allocator proportional|waterfill|priority  budget split across slots
+  --pack-impl ref|kernel                       ragged gather/scatter backend
 """
 
 from __future__ import annotations
@@ -51,6 +59,7 @@ from repro.distributed.sharding import (
 from repro.models.diffusion import denoiser_init, make_ddpm_model_fn
 from repro.nn.param import unbox
 from repro.serving.engine import ContinuousASDEngine, Request
+from repro.serving.packing import ALLOCATORS, make_allocator
 from repro.serving.scheduler import POLICIES, make_policy
 
 
@@ -112,6 +121,14 @@ def run_continuous(args):
         slots = max(args.chains // 2, batch_world)
         slots = ((slots + batch_world - 1) // batch_world) * batch_world
 
+    # round_budget reaches the engine only on the packed path: the unpacked
+    # engine must keep reporting budget == slots * theta so the budget-aware
+    # admission policy's pressure signal stays truthful
+    budget = None
+    allocator = None
+    if args.execution == "packed":
+        budget = args.round_budget or slots * args.theta
+        allocator = make_allocator(args.allocator, theta_max=args.theta)
     eng = ContinuousASDEngine(
         model_fn_factory=lambda p, cond: make_ddpm_model_fn(p, dc),
         params=params,  # jit argument: keeps the mesh sharding of weights
@@ -126,14 +143,21 @@ def run_continuous(args):
         state_sharding=chain_state_shardings(mesh),
         controller=make_controller(args.theta_controller),
         policy=make_policy(args.policy),
+        execution=args.execution,
+        round_budget=budget,
+        allocator=allocator,
+        pack_impl=args.pack_impl,
     )
     reqs = [Request(i, key=jax.random.PRNGKey(1000 + i)) for i in range(args.chains)]
     t0 = time.perf_counter()
     out = eng.serve(reqs)
     dt = time.perf_counter() - t0
     s = eng.stats
+    exec_desc = (f"packed B={budget}/{slots * args.theta} "
+                 f"alloc={args.allocator}"
+                 if args.execution == "packed" else "unpacked")
     print(f"[continuous] served {s.retired} requests on {slots} slots "
-          f"(K={args.K}, policy={args.policy}, "
+          f"({exec_desc}, K={args.K}, policy={args.policy}, "
           f"controller={args.theta_controller}, grs={args.grs_impl}) "
           f"in {dt:.1f}s (includes compile): "
           f"{s.rounds_total} fused rounds, accept rate {s.accept_rate():.2f}, "
@@ -168,6 +192,19 @@ def main():
     ap.add_argument("--grs-impl", default="core", choices=("core", "kernel"),
                     help="verifier backend: pure-jnp or the Pallas GRS "
                          "kernel (interpret-mode off-TPU)")
+    ap.add_argument("--execution", default="unpacked",
+                    choices=("unpacked", "packed"),
+                    help="packed: gather only live verification points into "
+                         "a fixed --round-budget model call per round")
+    ap.add_argument("--round-budget", type=int, default=0,
+                    help="packed verification points per round "
+                         "(default: slots * theta, i.e. never binding)")
+    ap.add_argument("--allocator", default="waterfill",
+                    choices=sorted(ALLOCATORS),
+                    help="packed budget split across slots")
+    ap.add_argument("--pack-impl", default="ref", choices=("ref", "kernel"),
+                    help="ragged gather/scatter backend (the Pallas pack "
+                         "kernel runs interpret-mode off-TPU)")
     args = ap.parse_args()
     if args.engine == "continuous":
         run_continuous(args)

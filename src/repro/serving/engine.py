@@ -105,6 +105,19 @@ class ContinuousASDEngine:
         carrying request is admitted at all.  Default: FCFS.
       grs_impl: "core" (pure-jnp verifier) or "kernel" (the Pallas GRS
         kernel; interpret-mode off-TPU, so CPU serving still works).
+      execution: "unpacked" (one theta_max-shaped lane per slot — the PR-1/2
+        round) or "packed" (``repro.serving.packing``: each round gathers
+        only the LIVE verification points across slots into one
+        ``round_budget``-shaped model call, so small windows free real
+        compute for large ones).  With ``round_budget >= slots * theta``
+        the packed engine is bit-identical to the unpacked one.
+      round_budget: packed execution's verification points per round (>=
+        num_slots; default slots * theta, i.e. never binding).
+      allocator: ``BudgetAllocator`` splitting the budget across slots
+        (default: waterfilling).  Its priority weights come from
+        ``Request.priority`` at admission.
+      pack_impl: "ref" (jnp gather/scatter) or "kernel" (the Pallas pack
+        kernel; interpret-mode off-TPU).
     """
 
     def __init__(
@@ -125,6 +138,10 @@ class ContinuousASDEngine:
         seed: int = 0,
         controller: Optional[ThetaController] = None,
         policy: Optional[SchedulingPolicy] = None,
+        execution: str = "unpacked",
+        round_budget: Optional[int] = None,
+        allocator=None,
+        pack_impl: str = "ref",
     ):
         self.schedule = schedule
         self.event_shape = tuple(event_shape)
@@ -137,6 +154,17 @@ class ContinuousASDEngine:
         self.grs_impl = grs_impl
         self.pipelined = pipelined
         self.controller = controller if controller is not None else StaticTheta()
+        if execution not in ("unpacked", "packed"):
+            raise ValueError(f"unknown execution mode {execution!r}")
+        self.execution = execution
+        self.round_budget = (
+            num_slots * self.theta if round_budget is None else int(round_budget)
+        )
+        if execution == "packed" and self.round_budget < num_slots:
+            raise ValueError(
+                f"round_budget {self.round_budget} < num_slots {num_slots}: "
+                "every live chain needs at least one verification point per "
+                "round to make progress")
         self.scheduler = SlotScheduler(num_slots, policy=policy)
         self.stats = EngineStats()
         self._key = jax.random.PRNGKey(seed)
@@ -150,6 +178,12 @@ class ContinuousASDEngine:
         self._accept_ewma = 1.0
         self._spr_ewma = 0.0
         self._spr_seen = False
+        # live verification-point demand of the slot batch, refreshed from
+        # the same device sync the retirement scan already pays; feeds the
+        # budget-pressure signal of the admission policies
+        self._live_demand = 0
+        # a fresh chain's opening window (what one admission adds to demand)
+        self._theta_open = int(self.controller.init(self.theta)[1])
 
         statics = dict(
             theta=self.theta,
@@ -165,15 +199,37 @@ class ContinuousASDEngine:
         else:
             make_fn = model_fn_factory  # (params, cond) -> model_fn
 
-        def _round(states, conds, p):
-            def one(st, cond):
-                return asd_round(make_fn(p, cond), schedule, st, **statics)
+        if execution == "packed":
+            from repro.serving.packing import WaterfillingAllocator, packed_round
 
-            if conds is None:
-                return jax.vmap(lambda st: one(st, None))(states)
-            return jax.vmap(one)(states, conds)
+            self.allocator = (
+                allocator if allocator is not None
+                else WaterfillingAllocator(theta_max=self.theta)
+            )
+
+            def _round(states, conds, p, weights):
+                return packed_round(
+                    make_fn, p, schedule, states, conds, weights,
+                    budget=self.round_budget, allocator=self.allocator,
+                    pack_impl=pack_impl, **statics,
+                )
+
+        else:
+            self.allocator = allocator
+
+            def _round(states, conds, p, weights):
+                def one(st, cond):
+                    return asd_round(make_fn(p, cond), schedule, st, **statics)
+
+                if conds is None:
+                    return jax.vmap(lambda st: one(st, None))(states)
+                return jax.vmap(one)(states, conds)
 
         self._round_fn = jax.jit(_round)
+        self._weights = np.ones((num_slots,), np.float32)
+        # device copy of the allocator weights, re-uploaded only when an
+        # admission/retire actually changes them — not every round
+        self._weights_dev = jnp.asarray(self._weights)
 
         def _admit(states, y0s, keys, idxs):
             # init + scatter for a whole round's admissions in ONE dispatch
@@ -235,6 +291,9 @@ class ContinuousASDEngine:
             accept_rate=self._accept_ewma,
             seconds_per_round=self._spr_ewma,
             now=now,
+            round_budget=self.round_budget,
+            live_demand=self._live_demand,
+            theta_open=self._theta_open,
         )
 
     def _observe_round_time(self, dt: float) -> None:
@@ -272,6 +331,15 @@ class ContinuousASDEngine:
             if self.d_cond:
                 conds[slot] = 0.0 if req.cond is None else np.asarray(
                     req.cond, np.float32)
+            # allocator priority weight: 1 + the request's priority (>= a
+            # small floor so zero/negative priorities still get budget)
+            w = max(1.0 + float(getattr(req, "priority", 0.0) or 0.0), 0.1)
+            if self._weights[slot] != w:
+                self._weights[slot] = w
+                self._weights_dev = None  # re-upload before the next round
+            # a fresh chain opens at the controller's initial window: count
+            # it into the live demand the budget-pressure signal sees
+            self._live_demand += self._theta_open
             self.stats.requests += 1
         # pad the admission batch to a power of two (duplicate scatter of the
         # same record is a no-op) so the jitted program has O(log S) variants
@@ -301,9 +369,16 @@ class ContinuousASDEngine:
         states = self._states if states is None else states
         if snapshot_rounds is None:
             snapshot_rounds = self.stats.rounds_total
-        a = np.asarray(states.a)
+        a, theta_live = jax.device_get((states.a, states.theta_live))
         now = time.perf_counter()
         K = self.schedule.K
+        # refresh the budget-pressure signal off the sync we already pay:
+        # live demand = sum over active slots of min(theta_live, K - a)
+        occupied = np.zeros((self.num_slots,), bool)
+        occupied[self.scheduler.active_slots()] = True
+        live = occupied & (a < K)
+        self._live_demand = int(
+            np.minimum(theta_live[live], (K - a)[live]).sum())
         finished = [
             slot for slot in self.scheduler.active_slots()
             if self.scheduler.slot_info(slot).admit_round < snapshot_rounds
@@ -322,6 +397,9 @@ class ContinuousASDEngine:
             self._peek_fn(states, jnp.asarray(idxs, jnp.int32)))
         for i, slot in enumerate(finished):
             info = self.scheduler.retire(slot)
+            if self._weights[slot] != 1.0:
+                self._weights[slot] = 1.0
+                self._weights_dev = None
             self._results[info.request.rid] = np.asarray(samples[i])
             deadline = getattr(info.request, "deadline", None)
             rm = RequestMetrics(
@@ -349,7 +427,10 @@ class ContinuousASDEngine:
             return False
         t0 = time.perf_counter()
         self._admit_pending()
-        self._states = self._round_fn(self._states, self._conds, self._params)
+        if self._weights_dev is None:
+            self._weights_dev = jnp.asarray(self._weights)
+        self._states = self._round_fn(
+            self._states, self._conds, self._params, self._weights_dev)
         self.stats.rounds_total += 1
         self._retire_finished()  # syncs on the round via states.a
         self._observe_round_time(time.perf_counter() - t0)
@@ -378,7 +459,11 @@ class ContinuousASDEngine:
             while self.scheduler.has_work():
                 t_round = time.perf_counter()
                 self._admit_pending()
-                nxt = self._round_fn(self._states, self._conds, self._params)
+                if self._weights_dev is None:
+                    self._weights_dev = jnp.asarray(self._weights)
+                nxt = self._round_fn(
+                    self._states, self._conds, self._params,
+                    self._weights_dev)
                 self.stats.rounds_total += 1
                 if prev is not None:
                     # overlaps the round in flight; prev is one round old

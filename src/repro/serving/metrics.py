@@ -108,6 +108,26 @@ class EngineStats:
         rounds = sum(m.rounds for m in self.per_request)
         return self.proposals_total / max(rounds, 1)
 
+    def latency_percentiles(self, qs=(50, 95, 99)) -> dict:
+        """Nearest-rank percentiles of queue and completion (submit ->
+        retire) latency over retired requests — the open-loop traffic
+        numbers.  Empty engines report zeros."""
+
+        def pcts(values):
+            if not values:
+                return {f"p{q}": 0.0 for q in qs}
+            ordered = sorted(values)
+            n = len(ordered)
+            return {
+                f"p{q}": ordered[min(n - 1, max(0, -(-q * n // 100) - 1))]
+                for q in qs
+            }
+
+        return {
+            "queue": pcts([m.queue_latency for m in self.per_request]),
+            "completion": pcts([m.latency for m in self.per_request]),
+        }
+
     def mean_parallel_depth(self) -> float:
         """Mean per-request sequential model-call depth (rounds + head calls)."""
         if not self.per_request:

@@ -1,0 +1,45 @@
+"""Packed ragged verification: fixed-budget work packing for the continuous
+ASD engine.
+
+Each engine round, every live chain wants ``n_valid = min(theta_live, K - a)``
+verification points.  The unpacked engine dispatches theta_max-shaped buffers
+per slot regardless, so adaptive windows save verification WORK but not
+wall-clock — the model call is sized by the cap.  This subsystem makes the
+saving real:
+
+  plan    ``plan_round`` per slot (proposal call + elementwise rollout),
+  pack    a ``BudgetAllocator`` grants each slot ``g_s <= n_valid_s`` points
+          with ``sum g_s <= B`` and pack maps gather exactly those points
+          into ONE dense (B [+ slots])-shaped model batch,
+  verify  one model call + one GRS pass over the packed rows,
+  commit  scatter accept/reject back and run ``commit_round`` per slot.
+
+When the budget covers every live window the packed round is bit-identical
+to the unpacked one; when it doesn't, a slot's grant is simply a smaller
+effective window for that round — a pre-round-measurable quantity, so the
+chain law is untouched.  The packed program's shapes depend only on
+(B, slots, theta_max): it compiles once per budget across any window mix.
+"""
+
+from repro.serving.packing.allocator import (
+    ALLOCATORS,
+    BudgetAllocator,
+    ProportionalAllocator,
+    PriorityWeightedAllocator,
+    WaterfillingAllocator,
+    make_allocator,
+)
+from repro.serving.packing.plan import PackedRoundPlan, build_pack_maps
+from repro.serving.packing.round import packed_round
+
+__all__ = [
+    "ALLOCATORS",
+    "BudgetAllocator",
+    "ProportionalAllocator",
+    "PriorityWeightedAllocator",
+    "WaterfillingAllocator",
+    "make_allocator",
+    "PackedRoundPlan",
+    "build_pack_maps",
+    "packed_round",
+]

@@ -1,0 +1,177 @@
+"""Budget allocators: split a fixed per-round verification-point budget
+across the live speculation windows of a slot batch.
+
+An allocator is a frozen (hashable) dataclass closed over statically by the
+jitted packed round — exactly like a ``ThetaController`` — whose
+``allocate`` runs INSIDE the jit on traced arrays.  Given per-slot demands
+``d_s`` (the live verification points ``min(theta_live, K - a)``, 0 for
+retired slots) and an integer budget ``B``, it returns integer grants with
+
+  0 <= g_s <= d_s,   sum(g_s) <= B,
+  g_s == d_s everywhere whenever sum(d_s) <= B      (the AMPLE short-circuit
+      — this is what makes the packed round bit-identical to the unpacked
+      engine when the budget covers all live windows), and
+  g_s >= 1 wherever d_s >= 1, provided B >= #active  (every live chain makes
+      progress every round; engines enforce B >= num_slots).
+
+The demands are produced by the PR-2 ``ThetaController``s: the controller
+shapes each chain's wish, the allocator reconciles the wishes with the
+hardware budget.  Three policies:
+
+  ``proportional``  g_s ~ B * d_s / sum(d) with largest-remainder rounding —
+      every window shrinks by the same factor under pressure.
+  ``waterfill``     max-min fairness: raise a common water level L and grant
+      min(d_s, L) — small windows are served in full, pressure lands on the
+      chains speculating deepest (whose marginal point is worth least under
+      the geometric accept model).
+  ``priority``      proportional in w_s * d_s for per-slot weights (from
+      ``Request.priority``), greedy top-up by weight — paying requests keep
+      their depth under pressure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _greedy_fill(grants, headroom, leftover, rank_key):
+    """Give each slot, in ascending ``rank_key`` order, as much of its
+    ``headroom`` as the remaining ``leftover`` allows.  Exact and O(S log S)."""
+    order = jnp.argsort(rank_key)
+    head_sorted = headroom[order]
+    before = jnp.cumsum(head_sorted) - head_sorted  # exclusive prefix sum
+    extra_sorted = jnp.clip(leftover - before, 0, head_sorted)
+    extra = jnp.zeros_like(grants).at[order].set(extra_sorted)
+    return grants + extra
+
+
+def _with_min_one(grants, demand):
+    """Reserve one point per active slot first, then lay ``grants`` (computed
+    over the reduced demand) on top.  Callers pass grants <= demand - min1."""
+    return jnp.minimum(demand, 1) + grants
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetAllocator:
+    """Interface: a pure jnp function from demands to integer grants."""
+
+    name = "base"
+
+    def allocate(self, demand: jax.Array, budget: int, weights: jax.Array):
+        """demand: (S,) i32 >= 0; weights: (S,) f32 > 0 -> grants (S,) i32."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ProportionalAllocator(BudgetAllocator):
+    """Grants proportional to demand, largest-remainder rounding."""
+
+    name = "proportional"
+
+    def allocate(self, demand, budget, weights):
+        demand = demand.astype(jnp.int32)
+        total = jnp.sum(demand)
+        min1 = jnp.minimum(demand, 1)
+        eb = jnp.maximum(budget - jnp.sum(min1), 0)  # budget past the min-1
+        ed = demand - min1
+        ed_total = jnp.maximum(jnp.sum(ed), 1)
+        raw = eb * ed  # i32 products stay tiny: B, theta are O(1e3)
+        share = raw // ed_total
+        leftover = eb - jnp.sum(share)
+        # +1 to the largest fractional remainders (slot index breaks ties);
+        # leftover < #positive-remainder slots, each of which has headroom
+        rank = -(raw % ed_total).astype(jnp.float32) + jnp.arange(
+            demand.shape[0]
+        ) * 1e-6
+        headroom = jnp.minimum(ed - share, 1)
+        constrained = _with_min_one(
+            _greedy_fill(share, headroom, leftover, rank), demand
+        )
+        return jnp.where(total <= budget, demand, constrained)
+
+
+@dataclasses.dataclass(frozen=True)
+class WaterfillingAllocator(BudgetAllocator):
+    """Max-min fair grants: min(d_s, L) at the highest feasible level L.
+
+    ``theta_max`` bounds demands, so the feasible level is found by scanning
+    the static candidate range [1, theta_max] — no sort, no host sync.
+    """
+
+    name = "waterfill"
+    theta_max: int = 64  # static upper bound on any demand
+
+    def allocate(self, demand, budget, weights):
+        demand = demand.astype(jnp.int32)
+        total = jnp.sum(demand)
+        levels = jnp.arange(1, self.theta_max + 1, dtype=jnp.int32)
+        used = jnp.sum(
+            jnp.minimum(demand[None, :], levels[:, None]), axis=1
+        )  # (theta_max,)
+        feasible = used <= budget
+        L = jnp.max(jnp.where(feasible, levels, 0))
+        L = jnp.maximum(L, 1)  # B >= #active makes level 1 always feasible
+        base = jnp.minimum(demand, L)
+        leftover = jnp.maximum(budget - jnp.sum(base), 0)
+        # top up the tallest demands first (deepest windows, ties by slot)
+        rank = -demand.astype(jnp.float32) + jnp.arange(demand.shape[0]) * 1e-6
+        constrained = _greedy_fill(base, demand - base, leftover, rank)
+        return jnp.where(total <= budget, demand, constrained)
+
+
+@dataclasses.dataclass(frozen=True)
+class PriorityWeightedAllocator(BudgetAllocator):
+    """Proportional in weight * demand, greedy top-up by weight."""
+
+    name = "priority"
+
+    def allocate(self, demand, budget, weights):
+        demand = demand.astype(jnp.int32)
+        total = jnp.sum(demand)
+        min1 = jnp.minimum(demand, 1)
+        eb = jnp.maximum(budget - jnp.sum(min1), 0)
+        ed = demand - min1
+        w = jnp.maximum(weights.astype(jnp.float32), 1e-3)
+        wd = w * ed.astype(jnp.float32)
+        share_f = eb * wd / jnp.maximum(jnp.sum(wd), 1e-9)
+        share = jnp.minimum(jnp.floor(share_f).astype(jnp.int32), ed)
+        leftover = jnp.maximum(eb - jnp.sum(share), 0)
+        # highest weight first; fractional remainder then slot index tiebreak
+        rank = (-w * 1e6 - (share_f - jnp.floor(share_f))
+                + jnp.arange(demand.shape[0]) * 1e-9)
+        constrained = _with_min_one(
+            _greedy_fill(share, ed - share, leftover, rank), demand
+        )
+        return jnp.where(total <= budget, demand, constrained)
+
+
+ALLOCATORS = {
+    a.name: a for a in (
+        ProportionalAllocator, WaterfillingAllocator, PriorityWeightedAllocator
+    )
+}
+
+
+def make_allocator(name: str, theta_max: Optional[int] = None, **kwargs) -> BudgetAllocator:
+    """CLI-facing factory: ``make_allocator("waterfill", theta_max=8)``.
+
+    ``theta_max`` (the engine's window cap, an upper bound on any demand) is
+    accepted for every allocator and forwarded only to those that use it —
+    callers should always pass it so waterfilling's level scan is sized to
+    the actual cap rather than its silent 64 default.
+    """
+    try:
+        cls = ALLOCATORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown budget allocator {name!r}; have {sorted(ALLOCATORS)}"
+        ) from None
+    if theta_max is not None and "theta_max" in {
+        f.name for f in dataclasses.fields(cls)
+    }:
+        kwargs.setdefault("theta_max", theta_max)
+    return cls(**kwargs)

@@ -1,0 +1,66 @@
+"""Pack maps: the slot/step index maps that flatten ragged live windows into
+one dense budget-shaped batch.
+
+Given integer grants ``g_s`` (how many verification points each slot packs
+this round, ``sum g_s <= B``), the packed batch lays slots out contiguously:
+
+  packed position p  ->  slot_id[p] = the s with  off_s <= p < off_s + g_s
+                         step_id[p] = p - off_s          (0-based in-window)
+                         valid[p]   = p < sum(g_s)
+
+Padding positions (p >= total) carry slot_id/step_id 0 and valid False; the
+gather reads a harmless row for them and the scatter routes them to the drop
+row.  Everything is O(B log S) jnp (searchsorted over the grant prefix sums),
+shapes depend only on the static budget — the maps never trigger a recompile
+as the window mix moves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PackedRoundPlan:
+    """Index maps + grants for one packed verification round."""
+
+    grants: jax.Array  # (S,) i32 points packed per slot
+    offsets: jax.Array  # (S,) i32 exclusive prefix sums of grants
+    total: jax.Array  # () i32 live packed points (<= budget)
+    slot_id: jax.Array  # (B,) i32 packed position -> slot
+    step_id: jax.Array  # (B,) i32 packed position -> in-window step
+    valid: jax.Array  # (B,) bool packed position holds a live point
+
+    def row_id(self, theta: int) -> jax.Array:
+        """Row into the flattened (S * theta) window table; padding positions
+        map one past the table (the scatter drop row)."""
+        rows = self.slot_id * theta + self.step_id
+        n_slots = self.grants.shape[0]
+        return jnp.where(self.valid, rows, n_slots * theta)
+
+
+def build_pack_maps(grants: jax.Array, budget: int) -> PackedRoundPlan:
+    """grants: (S,) i32, sum <= budget (static) -> PackedRoundPlan."""
+    grants = grants.astype(jnp.int32)
+    csum = jnp.cumsum(grants)
+    total = csum[-1]
+    offsets = csum - grants
+    pos = jnp.arange(budget, dtype=jnp.int32)
+    # first slot whose segment end exceeds p; clip keeps padding in range
+    slot_id = jnp.searchsorted(csum, pos, side="right").astype(jnp.int32)
+    slot_id = jnp.minimum(slot_id, grants.shape[0] - 1)
+    valid = pos < total
+    step_id = jnp.where(valid, pos - offsets[slot_id], 0)
+    slot_id = jnp.where(valid, slot_id, 0)
+    return PackedRoundPlan(
+        grants=grants,
+        offsets=offsets,
+        total=total,
+        slot_id=slot_id,
+        step_id=step_id,
+        valid=valid,
+    )

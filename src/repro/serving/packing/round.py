@@ -1,0 +1,184 @@
+"""The packed speculation round: plan -> pack -> verify -> commit.
+
+One fused jitted program over a slot batch of ``ASDChainState``s that spends
+at most ``budget`` verification points per round, however the live windows
+are distributed:
+
+  1. PLAN    (vmapped ``plan_round``): the dense per-slot proposal call plus
+     the theta_max-shaped elementwise rollout — cheap, no parallel model
+     work.  Demands are each slot's live points ``min(theta_live, K - a)``.
+  2. PACK    the ``BudgetAllocator`` turns demands into grants; pack maps
+     (``build_pack_maps``) lay the granted points out contiguously; the
+     ragged gather (``kernels/pack``) moves y/xi/m_hat rows into the dense
+     budget-shaped batch.  With ``eager_head`` each slot's head point rides
+     in a fixed extra lane, so the packed call is (budget + slots) points.
+  3. VERIFY  ONE model call over the packed points + ONE GRS pass — the only
+     O(model) work in the round, and it is sized by the budget, not by
+     slots * theta_max.  Small windows therefore free real compute.
+  4. COMMIT  scatter z/accept back to theta_max-shaped per-slot buffers and
+     run the shared ``commit_round`` with each slot's granted window as its
+     effective window theta_r.
+
+Exactness: a slot's grant depends only on pre-round state (it is
+F_a-measurable, like theta_live itself — Lemma 13's filtration argument),
+so a constrained round is just a round at a smaller live window.  When
+``sum(demands) <= budget`` every grant equals its demand, theta_r equals
+theta_live, and the packed round reproduces the unpacked ``asd_round``
+bit for bit (asserted in tests/test_packed_round.py).
+
+Compile-once: every shape in the program depends only on the static
+``(budget, slots, theta_max)`` triple — grants, maps, and windows are data.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.asd import commit_round, plan_round
+from repro.core.controller import StaticTheta, ThetaController
+from repro.core.grs import bcast_right, grs
+from repro.core.schedules import Schedule
+from repro.kernels.pack import gather_rows
+from repro.serving.packing.plan import build_pack_maps
+
+_STATIC = StaticTheta()
+
+
+def _gather_scalar(table: jax.Array, slot_id, step_id) -> jax.Array:
+    """(S, theta) scalar table -> (B,) packed; cheap jnp fancy-gather."""
+    return table[slot_id, step_id]
+
+
+def packed_round(
+    make_fn: Callable,
+    params,
+    schedule: Schedule,
+    states,  # slot-batched ASDChainState (leading S axis on every leaf)
+    conds: Optional[jax.Array],  # (S, d_cond) or None
+    weights: jax.Array,  # (S,) f32 allocator priority weights
+    *,
+    theta: int,
+    budget: int,
+    allocator,
+    eager_head: bool = True,
+    noise_mode: str = "buffer",
+    keep_trajectory: bool = False,
+    grs_impl: str = "core",
+    controller: ThetaController = _STATIC,
+    pack_impl: str = "ref",
+):
+    """One packed verification round over all slots; returns the new states."""
+    K = schedule.K
+    S = states.a.shape[0]
+    ev_ndim = states.v_cache.ndim - 1
+
+    # --- 1. plan: proposal call + rollout per slot (vmapped) ----------------
+    def plan_one(st, cond):
+        return plan_round(
+            make_fn(params, cond), schedule, st, theta, eager_head,
+            noise_mode, keep_trajectory,
+        )
+
+    if conds is None:
+        plans = jax.vmap(lambda st: plan_one(st, None))(states)
+    else:
+        plans = jax.vmap(plan_one)(states, conds)
+
+    # --- 2. pack: allocate the budget, build maps, gather live points -------
+    active = states.a < K
+    demand = jnp.where(active, plans.n_valid, 0).astype(jnp.int32)
+    grants = allocator.allocate(demand, budget, weights)
+    grants = jnp.minimum(grants, demand)  # contract guard: g <= d always
+    # a fully-granted slot runs its true live window (head index included);
+    # a trimmed slot runs the grant as its effective window this round.  A
+    # zero grant (only possible when budget < #active slots) is a safe stall:
+    # theta_r = 0 verifies nothing, commits nothing, and advances nowhere.
+    theta_r = jnp.where(grants >= demand, plans.theta_live, grants)
+    maps = build_pack_maps(grants, budget)
+    src_rows = jnp.where(  # gather side: padding lanes re-read row 0
+        maps.valid, maps.slot_id * theta + maps.step_id, 0
+    )
+
+    def flat(x):  # (S, theta, *ev) -> (S*theta, *ev)
+        return x.reshape((S * theta,) + x.shape[2:])
+
+    y_pt = gather_rows(flat(plans.y_prev), src_rows, impl=pack_impl)
+    xi_pt = gather_rows(flat(plans.xi_w), src_rows, impl=pack_impl)
+    mh_pt = gather_rows(flat(plans.m_hats), src_rows, impl=pack_impl)
+    t_pt = _gather_scalar(plans.t_w1[:, :theta], maps.slot_id, maps.step_id)
+    u_pt = _gather_scalar(plans.u_w, maps.slot_id, maps.step_id)
+    A_pt = _gather_scalar(plans.A_w, maps.slot_id, maps.step_id)
+    B_pt = _gather_scalar(plans.B_w, maps.slot_id, maps.step_id)
+    sig_pt = _gather_scalar(plans.sig_w, maps.slot_id, maps.step_id)
+
+    if eager_head:
+        # one fixed head lane per slot: the point the chain lands on when it
+        # accepts its whole effective window — next round's proposal call
+        y_head = jax.vmap(
+            lambda yp, tr: jax.lax.dynamic_index_in_dim(
+                yp, tr - 1, axis=0, keepdims=False)
+        )(plans.y_props, theta_r)
+        t_head = jax.vmap(lambda tw, tr: tw[tr])(plans.t_w1, theta_r)
+        ts_all = jnp.concatenate([t_pt, t_head], axis=0)
+        ys_all = jnp.concatenate([y_pt, y_head], axis=0)
+        conds_all = (
+            None if conds is None
+            else jnp.concatenate([conds[maps.slot_id], conds], axis=0)
+        )
+    else:
+        ts_all, ys_all = t_pt, y_pt
+        conds_all = None if conds is None else conds[maps.slot_id]
+
+    # --- 3. verify: ONE budget-shaped model call + ONE GRS pass -------------
+    if conds is None:
+        g_all = make_fn(params, None)(ts_all, ys_all)
+    else:
+        g_all = jax.vmap(
+            lambda t, y, c: make_fn(params, c)(t[None], y[None])[0]
+        )(ts_all, ys_all, conds_all)
+    if eager_head:
+        g_pt, g_head = g_all[:budget], g_all[budget:]
+    else:
+        g_pt, g_head = g_all, None
+
+    m_tgt_pt = (
+        bcast_right(A_pt, ev_ndim + 1) * y_pt
+        + bcast_right(B_pt, ev_ndim + 1) * g_pt
+    )
+    if grs_impl == "kernel":
+        from repro.kernels.grs.ops import grs as grs_k
+
+        z_pt, acc_pt = grs_k(u_pt, xi_pt, mh_pt, m_tgt_pt, sig_pt,
+                             event_ndim=ev_ndim)
+    else:
+        z_pt, acc_pt = grs(u_pt, xi_pt, mh_pt, m_tgt_pt, sig_pt,
+                           event_ndim=ev_ndim)
+
+    # --- 4. commit: scatter back and close each slot's round ----------------
+    from repro.kernels.pack import scatter_rows
+
+    drop_rows = maps.row_id(theta)  # padding lanes -> the drop row
+    z_seg = scatter_rows(z_pt, drop_rows, S * theta, impl=pack_impl).reshape(
+        (S, theta) + z_pt.shape[1:]
+    )
+    acc_seg = (
+        jnp.zeros((S * theta + 1,), bool)
+        .at[drop_rows].set(acc_pt)[: S * theta]
+        .reshape(S, theta)
+    )
+
+    def commit_one(st, plan, z, acc, gh, tr):
+        return commit_round(
+            schedule, st, plan, z, acc, tr, gh, theta,
+            eager_head, keep_trajectory, controller,
+        )
+
+    if eager_head:
+        return jax.vmap(commit_one)(states, plans, z_seg, acc_seg, g_head,
+                                    theta_r)
+    return jax.vmap(
+        lambda st, plan, z, acc, tr: commit_one(st, plan, z, acc, None, tr)
+    )(states, plans, z_seg, acc_seg, theta_r)

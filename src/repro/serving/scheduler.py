@@ -69,6 +69,22 @@ class AdmissionContext:
     accept_rate: float = 1.0  # engine-level EWMA of observed accept rates
     seconds_per_round: float = 0.0  # observed wall seconds per fused round
     now: float = 0.0
+    # packed execution: per-round verification-point budget and the slot
+    # batch's current live demand (sum of live windows).  The unpacked
+    # engine reports budget == slots * theta_max, so pressure stays sane.
+    round_budget: int = 0
+    live_demand: int = 0
+    # what ONE admission adds to demand: the controller's opening window
+    # (<= theta_max; 0 means unknown — price at the cap)
+    theta_open: int = 0
+
+    @property
+    def budget_pressure(self) -> float:
+        """Live verification demand as a fraction of the round budget.
+        > 1 means windows are being trimmed by the allocator right now."""
+        if self.round_budget <= 0:
+            return 0.0
+        return self.live_demand / self.round_budget
 
     def expected_rounds(self, request) -> float:
         """Expected speculation rounds for ``request``: K / E[steps per round]
@@ -99,6 +115,12 @@ class SchedulingPolicy:
 
     def admit_ok(self, entry: QueueEntry, ctx: AdmissionContext) -> bool:
         return True
+
+    def admit_quota(self, n_free: int, ctx: AdmissionContext) -> int:
+        """How many of the ``n_free`` slots to fill this round.  Unlike an
+        ``admit_ok`` veto (which DROPS a request), an unused quota leaves the
+        request queued for a later round — the budget-pressure deferral."""
+        return n_free
 
 
 class FCFS(SchedulingPolicy):
@@ -168,11 +190,45 @@ class DeadlineAware(SchedulingPolicy):
         return ctx.now + ctx.expected_service_time(entry.request) <= deadline
 
 
+class BudgetAware(SchedulingPolicy):
+    """FCFS admission that defers under verification-budget pressure.
+
+    Packed execution multiplexes a fixed per-round point budget across the
+    live windows: admitting a fresh chain (which opens at the controller's
+    initial window, typically theta_max) when demand already exceeds
+    ``pressure_target * budget`` doesn't add throughput — it trims every
+    in-flight chain's window, stretching THEIR rounds while the new chain
+    still has to wait for points.  This policy leaves the queue untouched
+    until pressure drops below the target, then fills as many slots as the
+    remaining headroom covers.  Deferred requests stay queued (never
+    dropped), and an idle engine always admits at least one request, so the
+    engine cannot stall.
+    """
+
+    name = "budget"
+
+    def __init__(self, pressure_target: float = 1.0):
+        self.pressure_target = pressure_target
+
+    def admit_quota(self, n_free, ctx):
+        if ctx.round_budget <= 0:  # unpacked engine without budget info
+            return n_free
+        headroom = (self.pressure_target - ctx.budget_pressure
+                    ) * ctx.round_budget
+        # price each admission at the controller's opening window, not the
+        # cap — a small-opening controller admits proportionally more
+        quota = int(headroom // max(ctx.theta_open or ctx.theta_max, 1))
+        if ctx.live_demand <= 0:  # idle engine: always make progress
+            quota = max(quota, 1)
+        return max(0, min(n_free, quota))
+
+
 POLICIES = {
     "fcfs": FCFS,
     "priority": Priority,
     "serr": ShortestExpectedRemainingRounds,
     "deadline": DeadlineAware,
+    "budget": BudgetAware,
 }
 
 
@@ -244,6 +300,10 @@ class SlotScheduler:
         if ctx is None:
             ctx = AdmissionContext(now=now)
         ctx.now = now
+        quota = self.policy.admit_quota(len(free), ctx)
+        if quota <= 0:  # deferred: requests stay queued for a later round
+            return []
+        free = free[:quota]
         placed: List[Tuple[int, Any]] = []
 
         def place(slot: int, entry: QueueEntry) -> None:

@@ -1,0 +1,110 @@
+"""EngineStats aggregation edge cases: empty engines, all-dropped (SLO)
+waves, and single-round chains must all produce finite, sane aggregates."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.serving.engine import ContinuousASDEngine, Request
+from repro.serving.metrics import EngineStats, RequestMetrics
+from repro.serving.scheduler import DeadlineAware
+
+
+def test_zero_completed_requests():
+    """A fresh (or fully idle) stats object: every aggregate is defined and
+    zero-ish — no division by zero anywhere in summary()."""
+    s = EngineStats()
+    assert s.retired == 0
+    assert s.accept_rate() == 0.0
+    assert s.mean_queue_latency() == 0.0
+    assert s.throughput() == 0.0
+    assert s.mean_window() == 0.0
+    assert s.mean_parallel_depth() == 0.0
+    assert s.slo_attainment() == 1.0  # nothing tracked -> vacuously met
+    pct = s.latency_percentiles()
+    assert pct["queue"]["p50"] == 0.0 and pct["completion"]["p99"] == 0.0
+    summary = s.summary()
+    assert all(np.isfinite(v) for v in summary.values()
+               if isinstance(v, (int, float)))
+
+
+def test_all_dropped_batch():
+    """Every request rejected at admission: drops count as SLO misses,
+    nothing retires, aggregates stay finite."""
+    s = EngineStats()
+    s.observe_drop(5)
+    assert s.dropped == 5 and s.retired == 0
+    assert s.slo_attainment() == 0.0  # 0 met of 5 tracked-by-drop
+    assert s.throughput() == 0.0
+    assert s.mean_parallel_depth() == 0.0
+    summary = s.summary()
+    assert summary["dropped"] == 5 and summary["retired"] == 0
+
+
+def test_all_dropped_through_engine(sl_model2, sched_tiny):
+    """Engine-level: a wave whose deadlines are already unmeetable is
+    dropped whole; serve() returns {} and the stats record the drops."""
+    eng = ContinuousASDEngine(
+        lambda cond: sl_model2, sched_tiny, (2,), num_slots=2, theta=3,
+        policy=DeadlineAware(drop_late=True))
+    eng._spr_ewma = 10.0  # pretend rounds are slow: 10 s/round observed
+    eng._spr_seen = True
+    reqs = [Request(i, key=jax.random.PRNGKey(i),
+                    y0=np.zeros((2,), np.float32), deadline=0.0)
+            for i in range(4)]  # deadlines in the past
+    out = eng.serve(reqs)
+    assert out == {}
+    assert eng.stats.dropped == 4 and eng.stats.retired == 0
+    assert sorted(eng.dropped_rids) == [0, 1, 2, 3]
+    assert eng.stats.slo_attainment() == 0.0
+    assert np.isfinite(eng.stats.summary()["mean_parallel_depth"])
+
+
+def test_mean_parallel_depth_single_round_chains():
+    """Chains that finish on their first round: depth = rounds + head_calls
+    = 2 (no eager cache yet), and the mean over a mixed bag is exact."""
+    s = EngineStats()
+    s.observe(RequestMetrics(rid=0, queue_latency=0.0, service_time=0.1,
+                             rounds=1, head_calls=1, model_evals=5,
+                             accepts=4, proposals=4))
+    assert s.mean_parallel_depth() == 2.0
+    assert s.per_request[0].mean_window == 4.0
+    s.observe(RequestMetrics(rid=1, queue_latency=0.0, service_time=0.2,
+                             rounds=5, head_calls=3, model_evals=20,
+                             accepts=10, proposals=18))
+    assert s.mean_parallel_depth() == pytest.approx((2 + 8) / 2)
+
+
+def test_single_round_chains_through_engine(sched_tiny):
+    """theta >= K with a self-consistent (constant) oracle: proposal and
+    target means coincide, GRS accepts everything, every chain retires after
+    exactly one round — and the aggregates reflect depth 2."""
+    import jax.numpy as jnp
+
+    const_model = lambda t, y: jnp.ones_like(y)  # proposal == target always
+    K = sched_tiny.K
+    eng = ContinuousASDEngine(
+        lambda cond: const_model, sched_tiny, (2,), num_slots=2, theta=K,
+        eager_head=True, keep_trajectory=True)
+    out = eng.serve([Request(i, key=jax.random.PRNGKey(50 + i),
+                             y0=np.zeros((2,), np.float32))
+                     for i in range(2)])
+    assert len(out) == 2
+    for m in eng.stats.per_request:
+        assert m.rounds == 1
+        assert m.parallel_depth == 2  # 1 verification round + 1 head call
+        assert m.accepts == m.proposals == K
+        assert m.mean_window == float(K)
+    assert eng.stats.mean_parallel_depth() == 2.0
+
+
+def test_latency_percentiles_nearest_rank():
+    s = EngineStats()
+    for i, q in enumerate([0.1, 0.2, 0.3, 0.4]):
+        s.observe(RequestMetrics(rid=i, queue_latency=q, service_time=1.0,
+                                 rounds=1, head_calls=1, model_evals=1,
+                                 accepts=1, proposals=1))
+    pct = s.latency_percentiles()
+    assert pct["queue"]["p50"] == pytest.approx(0.2)
+    assert pct["queue"]["p99"] == pytest.approx(0.4)
+    assert pct["completion"]["p95"] == pytest.approx(1.4)

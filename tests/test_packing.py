@@ -1,0 +1,172 @@
+"""Packing substrate: budget allocators, pack maps, and the ragged
+gather/scatter op (ref vs Pallas-interpret parity)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.pack import gather_rows, scatter_rows
+from repro.kernels.pack.ref import gather_rows_ref, scatter_rows_ref
+from repro.serving.packing import (
+    ALLOCATORS,
+    ProportionalAllocator,
+    PriorityWeightedAllocator,
+    WaterfillingAllocator,
+    build_pack_maps,
+    make_allocator,
+)
+
+ALLOCS = [
+    ProportionalAllocator(),
+    WaterfillingAllocator(theta_max=8),
+    PriorityWeightedAllocator(),
+]
+
+
+def _check_contract(alloc, demand, budget, weights=None):
+    demand = jnp.asarray(demand, jnp.int32)
+    if weights is None:
+        weights = jnp.ones_like(demand, jnp.float32)
+    g = np.asarray(alloc.allocate(demand, budget, weights))
+    d = np.asarray(demand)
+    assert (g >= 0).all(), (alloc.name, g)
+    assert (g <= d).all(), (alloc.name, g, d)
+    assert g.sum() <= budget, (alloc.name, g, budget)
+    if d.sum() <= budget:  # ample: grants ARE the demands, exactly
+        np.testing.assert_array_equal(g, d)
+    else:
+        # min-1 progress guarantee (budget >= #active in all our cases)
+        assert (g[d >= 1] >= 1).all(), (alloc.name, g, d)
+        # a constrained allocator should not strand budget it could grant
+        assert g.sum() == min(budget, d.sum()), (alloc.name, g)
+    return g
+
+
+@pytest.mark.parametrize("alloc", ALLOCS, ids=lambda a: a.name)
+def test_allocator_contract(alloc):
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        S = int(rng.integers(1, 9))
+        demand = rng.integers(0, 9, size=S)
+        budget = int(rng.integers(max(1, (demand >= 1).sum()), 80))
+        _check_contract(alloc, demand, budget)
+
+
+@pytest.mark.parametrize("alloc", ALLOCS, ids=lambda a: a.name)
+def test_allocator_ample_is_exact_demand(alloc):
+    d = [5, 1, 0, 3, 8]
+    g = _check_contract(alloc, d, budget=17)  # == sum(d): boundary ample
+    np.testing.assert_array_equal(g, d)
+    _check_contract(alloc, d, budget=1000)
+
+
+def test_waterfill_is_max_min_fair():
+    g = _check_contract(WaterfillingAllocator(theta_max=8), [8, 8, 2, 1], 13)
+    # level trims the deep windows first; small demands served in full
+    assert g[2] == 2 and g[3] == 1
+    assert abs(int(g[0]) - int(g[1])) <= 1 and g[0] + g[1] == 10
+
+
+def test_proportional_scales_windows_evenly():
+    g = _check_contract(ProportionalAllocator(), [8, 4, 4], 8)
+    assert g[0] >= g[1] and g[1] == g[2]
+
+
+def test_priority_weights_shift_grants():
+    d = jnp.asarray([6, 6, 6], jnp.int32)
+    alloc = PriorityWeightedAllocator()
+    flat = np.asarray(alloc.allocate(d, 9, jnp.asarray([1.0, 1.0, 1.0])))
+    vip = np.asarray(alloc.allocate(d, 9, jnp.asarray([8.0, 1.0, 1.0])))
+    assert vip[0] > flat[0]  # the weighted slot keeps its depth
+    assert vip.sum() <= 9 and (vip <= np.asarray(d)).all()
+
+
+def test_make_allocator_factory():
+    assert make_allocator("waterfill", theta_max=4).theta_max == 4
+    assert set(ALLOCATORS) == {"proportional", "waterfill", "priority"}
+    with pytest.raises(ValueError):
+        make_allocator("nope")
+
+
+# ---------------------------------------------------------------------------
+# pack maps
+# ---------------------------------------------------------------------------
+
+
+def test_pack_maps_layout():
+    grants = jnp.asarray([2, 0, 3, 1], jnp.int32)
+    maps = build_pack_maps(grants, budget=8)
+    assert int(maps.total) == 6
+    np.testing.assert_array_equal(
+        np.asarray(maps.slot_id), [0, 0, 2, 2, 2, 3, 0, 0])
+    np.testing.assert_array_equal(
+        np.asarray(maps.step_id), [0, 1, 0, 1, 2, 0, 0, 0])
+    np.testing.assert_array_equal(
+        np.asarray(maps.valid), [1, 1, 1, 1, 1, 1, 0, 0])
+    rows = np.asarray(maps.row_id(theta=3))
+    np.testing.assert_array_equal(rows[:6], [0, 1, 6, 7, 8, 9])
+    assert (rows[6:] == 12).all()  # padding -> drop row
+
+
+def test_pack_maps_roundtrip_gather_scatter():
+    rng = np.random.default_rng(1)
+    S, theta, D = 5, 4, 3
+    grants = jnp.asarray([4, 0, 2, 3, 1], jnp.int32)
+    B = 12
+    table = jnp.asarray(rng.standard_normal((S * theta, D)), jnp.float32)
+    maps = build_pack_maps(grants, B)
+    src = jnp.where(maps.valid, maps.slot_id * theta + maps.step_id, 0)
+    packed = gather_rows(table, src, impl="ref")
+    back = scatter_rows(packed, maps.row_id(theta), S * theta, impl="ref")
+    # every granted row survives the round trip; ungranted rows are zero
+    g = np.asarray(grants)
+    tab, bk = np.asarray(table), np.asarray(back)
+    for s in range(S):
+        for j in range(theta):
+            row = s * theta + j
+            if j < g[s]:
+                np.testing.assert_array_equal(bk[row], tab[row])
+            else:
+                assert (bk[row] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# pack kernel: ref vs Pallas interpret parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(7, 3), (16, 130), (1, 1)])
+def test_gather_kernel_matches_ref(shape):
+    N, D = shape
+    rng = np.random.default_rng(2)
+    src = jnp.asarray(rng.standard_normal((N, D)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, N, size=11), jnp.int32)
+    ref = gather_rows_ref(src, idx)
+    out = gather_rows(src, idx, impl="kernel", interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("shape", [(9, 5), (8, 128)])
+def test_scatter_kernel_matches_ref(shape):
+    M, D = shape
+    rng = np.random.default_rng(3)
+    vals = jnp.asarray(rng.standard_normal((M, D)), jnp.float32)
+    num_rows = 2 * M
+    # unique in-range targets plus some dropped rows
+    idx = np.asarray(rng.permutation(num_rows)[:M], np.int64)
+    idx[:2] = num_rows + 1  # dropped
+    idx = jnp.asarray(idx, jnp.int32)
+    ref = scatter_rows_ref(vals, idx, num_rows)
+    out = scatter_rows(vals, idx, num_rows, impl="kernel", interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_gather_event_shapes():
+    rng = np.random.default_rng(4)
+    src = jnp.asarray(rng.standard_normal((6, 2, 3)), jnp.float32)
+    idx = jnp.asarray([5, 0, 3], jnp.int32)
+    for impl in ("ref", "kernel"):
+        out = gather_rows(src, idx, impl=impl,
+                          **({"interpret": True} if impl == "kernel" else {}))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(src)[[5, 0, 3]])
