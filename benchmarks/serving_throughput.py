@@ -48,10 +48,23 @@ traffic: requests arrive on a Poisson clock instead of all-at-once, and the
 report gains p50/p95/p99 queue and completion latency per arm — the regime
 where admission deferral and budget pressure actually matter.
 
+``--rounds-per-sync sweep`` compares SUPERSTEP lengths (rounds fused per
+device dispatch, repro.core.asd.asd_superstep) on the continuous engine and
+writes results/superstep_sweep.json.  Every arm runs the identical
+per-round program — R only changes how many scan iterations one dispatch
+carries and therefore how often the host pays a boundary (dispatch + sync
+packet transfer + retire bookkeeping) — so samples/sec isolates the
+dispatch-amortization win while the per-arm timing breakdown
+(dispatch_s / device_s / host_sync_s) shows exactly where the saved wall
+time came from.  An ``auto`` arm runs the accept-rate-adaptive ladder.
+Headline: samples/s is monotone non-decreasing from R=1 to the best R and
+the host-sync fraction of wall time strictly shrinks with R.
+
     PYTHONPATH=src:. python benchmarks/serving_throughput.py [--requests 48]
     PYTHONPATH=src:. python benchmarks/serving_throughput.py --controller sweep
     PYTHONPATH=src:. python benchmarks/serving_throughput.py --execution budget-sweep
     PYTHONPATH=src:. python benchmarks/serving_throughput.py --arrival poisson --rate 4
+    PYTHONPATH=src:. python benchmarks/serving_throughput.py --rounds-per-sync sweep
 """
 
 from __future__ import annotations
@@ -81,6 +94,8 @@ from repro.serving.packing import make_allocator
 def make_synthetic_model(d: int, key, width: int = 1024, depth: int = 8):
     """(params, factory): GMM posterior mean + flops ballast + cond-scaled
     oracle perturbation; ``factory(params, cond) -> model_fn``.
+    ``width``/``depth`` size the ballast — the superstep sweep runs it
+    lighter to sit in the dispatch-bound regime supersteps are built for.
 
     The ballast contributes an O(1e-6) output so XLA cannot fold it away.
     The cond term bends the oracle as a function of y: chains with larger
@@ -164,10 +179,7 @@ def run_chunked(params, factory, sched, reqs, theta, batch, d, repeats):
 
 
 def _clone_programs(eng, warm):
-    eng._round_fn = warm._round_fn
-    eng._admit_fn = warm._admit_fn
-    eng._peek_fn = warm._peek_fn
-    return eng
+    return eng.adopt_programs(warm)
 
 
 def run_open_loop(eng, reqs, arrivals):
@@ -191,7 +203,8 @@ def run_open_loop(eng, reqs, arrivals):
 
 
 def build_continuous(params, factory, sched, theta, slots, d, controller=None,
-                     execution="unpacked", round_budget=None, allocator=None):
+                     execution="unpacked", round_budget=None, allocator=None,
+                     rounds_per_sync=1):
     return ContinuousASDEngine(
         model_fn_factory=factory,
         schedule=sched,
@@ -206,6 +219,7 @@ def build_continuous(params, factory, sched, theta, slots, d, controller=None,
         execution=execution,
         round_budget=round_budget,
         allocator=allocator,
+        rounds_per_sync=rounds_per_sync,
     )
 
 
@@ -218,10 +232,12 @@ def warm_continuous(eng, slots):
 
 def run_continuous(params, factory, sched, reqs, theta, slots, d, repeats,
                    controller=None, execution="unpacked", round_budget=None,
-                   allocator=None, arrivals=None, warm_engine=None):
+                   allocator=None, arrivals=None, warm_engine=None,
+                   rounds_per_sync=1):
     def build():
         return build_continuous(params, factory, sched, theta, slots, d,
-                                controller, execution, round_budget, allocator)
+                                controller, execution, round_budget, allocator,
+                                rounds_per_sync)
 
     warm = warm_engine
     if warm is None:
@@ -250,6 +266,8 @@ def run_continuous(params, factory, sched, reqs, theta, slots, d, repeats,
         mean_queue_latency_s=s.mean_queue_latency(),
         model_evals_total=s.model_evals_total,
         slots=slots,
+        rounds_per_sync=rounds_per_sync,
+        timing=s.timing_breakdown(),
     )
     if execution == "packed":
         rep["round_budget"] = eng.round_budget
@@ -309,10 +327,7 @@ def run_controller_sweep(params, factory, sched, reqs, theta, slots, d,
     best = {}
     for _ in range(repeats):
         for name, make in SWEEP_ARMS.items():
-            eng = build(make)
-            eng._round_fn = warms[name]._round_fn
-            eng._admit_fn = warms[name]._admit_fn
-            eng._peek_fn = warms[name]._peek_fn
+            eng = build(make).adopt_programs(warms[name])
             t0 = time.perf_counter()
             out = eng.serve(list(reqs))
             wall = time.perf_counter() - t0
@@ -456,6 +471,93 @@ def run_budget_sweep(params, factory, sched, reqs, theta, slots, d, repeats,
     )
 
 
+def run_superstep_sweep(params, factory, sched, reqs, theta, slots, d,
+                        repeats, r_values=(1, 2, 4, 8)):
+    """Superstep length sweep: R rounds fused per dispatch vs the classic
+    one-round-per-dispatch engine, plus the accept-rate-adaptive auto arm.
+
+    Every arm runs the identical per-round program (unpacked, StaticTheta —
+    same keys, bit-identical samples, asserted), so samples/sec isolates the
+    boundary tax: R multiplies the rounds one dispatch carries, dividing the
+    host's per-boundary work (jit-call launch, sync-packet transfer, retire
+    bookkeeping) by R at the cost of freed slots refilling up to R-1 rounds
+    late.  Repeats are interleaved across arms; best-of walls per arm.  The
+    report records the dispatch/device/host-sync wall-time split per arm —
+    the superstep win is measured, not inferred."""
+    arms_spec = {f"R{r}": r for r in r_values}
+    arms_spec["auto"] = "auto"
+
+    def build(rps):
+        return build_continuous(params, factory, sched, theta, slots, d,
+                                controller=StaticTheta(),
+                                rounds_per_sync=rps)
+
+    # all warm engines share one program cache: each arm's warm pass only
+    # compiles its own R variant into it
+    warms, warm0 = {}, None
+    for name, rps in arms_spec.items():
+        warm = build(rps)
+        if warm0 is None:
+            warm0 = warm
+        else:
+            warm.adopt_programs(warm0)
+        warm_continuous(warm, slots)
+        warms[name] = warm
+
+    golden = None
+    best = {}
+    for _ in range(repeats):
+        for name, rps in arms_spec.items():
+            eng = _clone_programs(build(rps), warms[name])
+            t0 = time.perf_counter()
+            out = eng.serve(list(reqs))
+            wall = time.perf_counter() - t0
+            assert len(out) == len(reqs)
+            if golden is None:
+                golden = out
+            else:  # R only moves scheduling: the served bits cannot change
+                for r in reqs:
+                    np.testing.assert_array_equal(out[r.rid], golden[r.rid])
+            if name not in best or wall < best[name][0]:
+                best[name] = (wall, eng.stats)
+
+    arms = {}
+    for name, (wall, s) in best.items():
+        t = s.timing_breakdown()
+        arms[name] = dict(
+            rounds_per_sync=arms_spec[name],
+            wall_time_s=wall,
+            samples_per_s=s.retired / wall,
+            fused_rounds=s.rounds_total,
+            supersteps=s.supersteps,
+            accept_rate=s.accept_rate(),
+            timing=t,
+        )
+        print(f"[{name:5s}] {arms[name]['samples_per_s']:.2f} samples/s, "
+              f"{s.rounds_total} rounds / {s.supersteps} supersteps, "
+              f"host_sync {1e3 * t['host_sync_s']:.1f}ms "
+              f"({100 * t['host_sync_frac']:.2f}% of wall), "
+              f"dispatch {1e3 * t['dispatch_s']:.1f}ms")
+
+    ladder = [f"R{r}" for r in r_values]
+    tputs = [arms[n]["samples_per_s"] for n in ladder]
+    syncs = [arms[n]["timing"]["host_sync_frac"] for n in ladder]
+    best_i = int(np.argmax(tputs))
+    return dict(
+        arms=arms,
+        r_values=list(r_values),
+        best_r=r_values[best_i],
+        # headline: fusing rounds never hurts up to the sweet spot...
+        throughput_monotone_to_best=bool(
+            all(tputs[i + 1] >= tputs[i] for i in range(best_i))),
+        # ...and the host-sync tax strictly shrinks with R
+        host_sync_frac_decreasing=bool(
+            all(syncs[i + 1] < syncs[i] for i in range(len(syncs) - 1))),
+        best_vs_r1_throughput=tputs[best_i] / tputs[0],
+        auto_vs_r1_throughput=arms["auto"]["samples_per_s"] / tputs[0],
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
@@ -491,6 +593,15 @@ def main():
                          "engines with queue/completion latency percentiles")
     ap.add_argument("--rate", type=float, default=4.0,
                     help="--arrival poisson mean arrival rate (req/s)")
+    ap.add_argument("--rounds-per-sync", default="1",
+                    help="speculation rounds fused per device dispatch: an "
+                         'integer, "auto" (accept-rate-adaptive ladder), or '
+                         '"sweep" to compare R in {1,2,4,8} + auto and write '
+                         "results/superstep_sweep.json")
+    ap.add_argument("--ballast-width", type=int, default=1024,
+                    help="synthetic model compute-ballast width")
+    ap.add_argument("--ballast-depth", type=int, default=8,
+                    help="synthetic model compute-ballast depth")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: "
                          "results/serving_throughput.json, "
@@ -500,7 +611,9 @@ def main():
                          "results/serving_poisson.json for poisson arrivals)")
     args = ap.parse_args()
 
-    params, factory = make_synthetic_model(args.d, jax.random.PRNGKey(7))
+    params, factory = make_synthetic_model(
+        args.d, jax.random.PRNGKey(7), width=args.ballast_width,
+        depth=args.ballast_depth)
     sched = sl_uniform(K=args.K, t_max=25.0)
     # conds shuffled across arrival order: every chunked batch contains both
     # fast (low-cond) and slow (high-cond) chains, as real traffic would
@@ -516,8 +629,29 @@ def main():
         "requests": args.requests, "slots": args.slots,
         "theta_max": args.theta, "K": args.K, "d": args.d,
         "cond_max": args.cond_max,
-        "model": "gmm-posterior-mean + cond-bend + 8x1024 tanh ballast",
+        "model": (f"gmm-posterior-mean + cond-bend + "
+                  f"{args.ballast_depth}x{args.ballast_width} tanh ballast"),
     }
+
+    if args.rounds_per_sync == "sweep":
+        sweep = run_superstep_sweep(params, factory, sched, reqs, args.theta,
+                                    args.slots, args.d, args.repeats)
+        report = {"workload": workload, **sweep}
+        out_path = args.out or "results/superstep_sweep.json"
+        print(json.dumps(report, indent=2))
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"\nbest superstep R={report['best_r']}: "
+              f"{report['best_vs_r1_throughput']:.2f}x R=1 samples/s "
+              f"(auto arm {report['auto_vs_r1_throughput']:.2f}x); "
+              f"throughput monotone to best: "
+              f"{report['throughput_monotone_to_best']}, host-sync fraction "
+              f"decreasing: {report['host_sync_frac_decreasing']} "
+              f"-> {out_path}")
+        return
+    rps = (args.rounds_per_sync if args.rounds_per_sync == "auto"
+           else int(args.rounds_per_sync))
 
     if args.execution == "budget-sweep":
         sweep = run_budget_sweep(params, factory, sched, reqs, args.theta,
@@ -556,7 +690,7 @@ def main():
         warms = {
             name: warm_continuous(build_continuous(
                 params, factory, sched, args.theta, args.slots, args.d,
-                controller, execution, rb, alloc), args.slots)
+                controller, execution, rb, alloc, rps), args.slots)
             for name, (execution, rb, controller, alloc) in arm_spec.items()
         }
         arms = {}
@@ -567,6 +701,7 @@ def main():
                     args.d, 1, controller=controller,
                     execution=execution, round_budget=rb, allocator=alloc,
                     arrivals=arrivals, warm_engine=warms[name],
+                    rounds_per_sync=rps,
                 )
                 if (name not in arms
                         or rep["wall_time_s"] < arms[name]["wall_time_s"]):
@@ -622,7 +757,7 @@ def main():
                                  controller=controller,
                                  execution=args.execution,
                                  round_budget=args.round_budget or None,
-                                 allocator=alloc)
+                                 allocator=alloc, rounds_per_sync=rps)
     out_s, chunk = run_chunked(params, factory, sched, reqs, args.theta,
                                args.slots, args.d, args.repeats)
     assert len(out_c) == len(out_s) == args.requests

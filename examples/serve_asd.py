@@ -31,6 +31,9 @@ def main():
     ap.add_argument("--round-budget", type=int, default=0,
                     help="packed engine verification points per round "
                          "(default: ~0.85 * slots * theta)")
+    ap.add_argument("--rounds-per-sync", default="4",
+                    help="speculation rounds fused per device dispatch for "
+                         "the continuous engines (int or 'auto')")
     args = ap.parse_args()
 
     print("training / loading the latent denoiser (cached under results/)...")
@@ -64,6 +67,8 @@ def main():
         num_slots=args.batch,
         theta=args.theta,
         eager_head=True,
+        rounds_per_sync=(args.rounds_per_sync if args.rounds_per_sync == "auto"
+                         else int(args.rounds_per_sync)),
     )
     t0 = time.perf_counter()
     out = ceng.serve([Request(i) for i in range(args.requests)],
@@ -72,7 +77,8 @@ def main():
     s = ceng.stats
     print(
         f"[asd  continuous] served {s.retired} requests in {dt:.1f}s "
-        f"({s.rounds_total} fused rounds on {args.batch} slots); accept rate "
+        f"({s.rounds_total} fused rounds in {s.supersteps} supersteps "
+        f"[R={args.rounds_per_sync}] on {args.batch} slots); accept rate "
         f"{s.accept_rate():.2f}, mean queue latency "
         f"{s.mean_queue_latency()*1e3:.0f}ms, {s.throughput():.2f} samples/s"
     )

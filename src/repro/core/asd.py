@@ -467,6 +467,44 @@ def _where_tree(pred, new, old):
     )
 
 
+def asd_superstep(
+    model_fn: ModelFn,
+    schedule: Schedule,
+    st: ASDChainState,
+    theta: int,
+    rounds: int,
+    eager_head: bool = False,
+    noise_mode: str = "buffer",
+    keep_trajectory: bool = True,
+    grs_impl: str = "core",
+    controller: ThetaController = _STATIC,
+) -> ASDChainState:
+    """``rounds`` speculation rounds in ONE device dispatch (a ``lax.scan``).
+
+    The scan body is exactly ``asd_round``, so a chain that commits its final
+    step mid-superstep becomes a masked no-op for the remaining iterations:
+    every leaf of its state — committed chain, counters, controller state —
+    is preserved bit for bit by the ``a < K`` select inside ``commit_round``.
+    ``asd_superstep(R)`` is therefore bit-identical to R sequential
+    ``asd_round`` calls (asserted in tests/test_superstep.py), while paying
+    ONE dispatch and ONE host sync where the sequential drive pays R.
+
+    This is the device-resident substrate of the serving engine's
+    ``rounds_per_sync``: the host only intervenes (retire, admit, reweight)
+    at superstep boundaries.  ``rounds`` is static — each value compiles its
+    own program, so callers should draw it from a small ladder (the engine
+    uses powers of two).
+    """
+    def body(s, _):
+        return asd_round(
+            model_fn, schedule, s, theta, eager_head, noise_mode,
+            keep_trajectory, grs_impl, controller,
+        ), None
+
+    st, _ = jax.lax.scan(body, st, None, length=int(rounds))
+    return st
+
+
 def asd_sample(
     model_fn: ModelFn,
     schedule: Schedule,

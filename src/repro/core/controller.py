@@ -23,6 +23,15 @@ function of rounds < r only (it is F_{a}-measurable in the filtration of
 Lemma 13), so the verifier still sees a predictable window and the committed
 chain law is unchanged — only WHICH prefix gets verified each round moves.
 
+Because ``(ctrl, theta_live)`` live INSIDE ``ASDChainState``, they thread
+through a device-resident superstep (``asd_superstep`` /
+``packed_superstep``: R rounds under one ``lax.scan``) for free: each scan
+iteration's ``update`` reads the state the previous iteration wrote, and a
+retired chain's controller state is frozen with the rest of its leaves by
+``commit_round``'s finished-chain select.  Controllers must therefore stay
+pure jnp on traced arrays — no host callbacks, no data-dependent Python —
+which every controller below satisfies by construction.
+
 Controllers:
 
   ``StaticTheta``      theta_live == theta_max always; bit-identical to the

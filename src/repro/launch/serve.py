@@ -33,6 +33,14 @@ adaptive windows save wall-clock, not just counted work:
   --execution packed --round-budget 96         e.g. ~0.85 * slots * theta
   --allocator proportional|waterfill|priority  budget split across slots
   --pack-impl ref|kernel                       ragged gather/scatter backend
+
+Device-resident supersteps: fuse R speculation rounds per dispatch (the
+slot-state pytree is donated to XLA and updated in place; the host only
+syncs retire flags at superstep boundaries, double-buffered off the
+critical path):
+
+  --rounds-per-sync 4      fixed superstep length
+  --rounds-per-sync auto   accept-rate-adaptive R on a power-of-two ladder
 """
 
 from __future__ import annotations
@@ -147,6 +155,8 @@ def run_continuous(args):
         round_budget=budget,
         allocator=allocator,
         pack_impl=args.pack_impl,
+        rounds_per_sync=(args.rounds_per_sync if args.rounds_per_sync == "auto"
+                         else int(args.rounds_per_sync)),
     )
     reqs = [Request(i, key=jax.random.PRNGKey(1000 + i)) for i in range(args.chains)]
     t0 = time.perf_counter()
@@ -158,9 +168,11 @@ def run_continuous(args):
                  if args.execution == "packed" else "unpacked")
     print(f"[continuous] served {s.retired} requests on {slots} slots "
           f"({exec_desc}, K={args.K}, policy={args.policy}, "
-          f"controller={args.theta_controller}, grs={args.grs_impl}) "
+          f"controller={args.theta_controller}, grs={args.grs_impl}, "
+          f"R={args.rounds_per_sync}) "
           f"in {dt:.1f}s (includes compile): "
-          f"{s.rounds_total} fused rounds, accept rate {s.accept_rate():.2f}, "
+          f"{s.rounds_total} fused rounds in {s.supersteps} supersteps, "
+          f"accept rate {s.accept_rate():.2f}, "
           f"mean live window {s.mean_window():.1f}/{args.theta}, "
           f"mean queue latency {s.mean_queue_latency()*1e3:.0f}ms, "
           f"SLO attainment {s.slo_attainment():.2f}, "
@@ -205,6 +217,10 @@ def main():
     ap.add_argument("--pack-impl", default="ref", choices=("ref", "kernel"),
                     help="ragged gather/scatter backend (the Pallas pack "
                          "kernel runs interpret-mode off-TPU)")
+    ap.add_argument("--rounds-per-sync", default="1",
+                    help="speculation rounds fused per device dispatch: an "
+                         "integer, or 'auto' to adapt to the observed "
+                         "accept rate on a power-of-two ladder")
     args = ap.parse_args()
     if args.engine == "continuous":
         run_continuous(args)

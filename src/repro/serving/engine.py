@@ -8,13 +8,20 @@ fixed-size batches and each batch runs the *fused* batched-ASD program
 slowest chain and padded lanes burn compute.
 
 ``ContinuousASDEngine`` — the continuous-batching engine.  It owns a fixed
-set of *slots* holding vmapped ``ASDChainState``s and drives the resumable
-``asd_round`` API itself, one speculation round per iteration over all slots
-at once.  A chain that commits its final step retires *at the next round
-boundary* and its slot is refilled from the queue (FCFS, see
-``repro.serving.scheduler``), so the batch never waits for stragglers.  Each
-round is ONE fused (slots x theta)-point verification forward — on a mesh it
-is pjit-sharded over the `data` axis (see repro/launch/serve.py).
+set of *slots* holding vmapped ``ASDChainState``s and drives them in
+device-resident SUPERSTEPS: each dispatch runs ``rounds_per_sync`` fused
+speculation rounds under a ``lax.scan`` (chains that finish mid-superstep
+become masked no-ops, bit-for-bit frozen), with the slot-state pytree
+DONATED to XLA so buffers are reused in place instead of copied per round.
+The host is a lazy scheduler that only intervenes at superstep boundaries:
+it dispatches superstep s+1 immediately, then harvests superstep s's compact
+sync packet (retire flags, counters, samples — one small transfer, no
+per-slot peeks) while the device runs — ``block_until_ready`` never sits on
+the critical path.  A chain that commits its final step retires at the next
+boundary and its slot is refilled from the queue (FCFS, see
+``repro.serving.scheduler``).  Each round is ONE fused (slots x theta)-point
+verification forward — on a mesh it is pjit-sharded over the `data` axis
+(see repro/launch/serve.py).
 
 The continuous engine is parameterized on two pluggable axes:
 
@@ -42,8 +49,8 @@ import numpy as np
 
 from repro.core.asd import (
     ASDChainState,
-    asd_round,
     asd_sample,
+    asd_superstep,
     chain_sample,
     init_chain_state,
 )
@@ -57,6 +64,16 @@ from repro.serving.scheduler import (
     SchedulingPolicy,
     SlotScheduler,
 )
+
+# sync-packet row layout: the (7, S) int32 array each superstep returns next
+# to the new slot states — retire flags, live windows, and the per-chain
+# speculation counters, harvested with ONE host transfer per boundary
+_SYNC_ROWS = ("a", "theta_live", "rounds", "head_calls", "model_evals",
+              "accepts", "proposals")
+
+# the power-of-two ladder auto rounds_per_sync picks from: O(log) compiled
+# superstep variants instead of one per observed value
+_AUTO_MAX_R = 16
 
 
 @dataclasses.dataclass
@@ -118,6 +135,22 @@ class ContinuousASDEngine:
         ``Request.priority`` at admission.
       pack_impl: "ref" (jnp gather/scatter) or "kernel" (the Pallas pack
         kernel; interpret-mode off-TPU).
+      rounds_per_sync: speculation rounds fused per device dispatch (the
+        SUPERSTEP length R).  R=1 reproduces the classic one-round-per-
+        dispatch engine; larger R amortizes dispatch + host-sync overhead
+        over R rounds at the cost of retiring (and refilling) slots up to
+        R-1 rounds late.  "auto" picks R per boundary from the observed
+        accept-rate EWMA on a power-of-two ladder: high accept => chains
+        finish fast => small R keeps slot occupancy; low accept => chains
+        run many rounds => large R amortizes the dispatch tax.  Each ladder
+        value compiles once (one executable per (R, budget) pair).
+        Superstep dispatches DONATE the slot-state pytree to XLA, so the
+        full ``ASDChainState`` batch is updated in place instead of copied
+        every round.
+      pipelined: deprecated alias kept for compatibility — ``serve()`` is
+        now always double-buffered (dispatch superstep s+1, then harvest
+        superstep s's sync packet while the device runs); the flag is
+        ignored.
     """
 
     def __init__(
@@ -142,6 +175,7 @@ class ContinuousASDEngine:
         round_budget: Optional[int] = None,
         allocator=None,
         pack_impl: str = "ref",
+        rounds_per_sync=1,
     ):
         self.schedule = schedule
         self.event_shape = tuple(event_shape)
@@ -165,6 +199,16 @@ class ContinuousASDEngine:
                 f"round_budget {self.round_budget} < num_slots {num_slots}: "
                 "every live chain needs at least one verification point per "
                 "round to make progress")
+        if rounds_per_sync == "auto":
+            self._auto_rps = True
+            self._rps = 1  # last picked R; refreshed per boundary
+        else:
+            self._auto_rps = False
+            self._rps = int(rounds_per_sync)
+            if self._rps < 1:
+                raise ValueError(
+                    f"rounds_per_sync must be >= 1 or 'auto', got "
+                    f"{rounds_per_sync!r}")
         self.scheduler = SlotScheduler(num_slots, policy=policy)
         self.stats = EngineStats()
         self._key = jax.random.PRNGKey(seed)
@@ -177,7 +221,6 @@ class ContinuousASDEngine:
         # the deadline policy's service-time estimates.
         self._accept_ewma = 1.0
         self._spr_ewma = 0.0
-        self._spr_seen = False
         # live verification-point demand of the slot batch, refreshed from
         # the same device sync the retirement scan already pays; feeds the
         # budget-pressure signal of the admission policies
@@ -200,39 +243,76 @@ class ContinuousASDEngine:
             make_fn = model_fn_factory  # (params, cond) -> model_fn
 
         if execution == "packed":
-            from repro.serving.packing import WaterfillingAllocator, packed_round
+            from repro.serving.packing import (
+                WaterfillingAllocator,
+                packed_superstep,
+            )
 
             self.allocator = (
                 allocator if allocator is not None
                 else WaterfillingAllocator(theta_max=self.theta)
             )
+            # bind budget/allocator as locals: adopted programs (see
+            # adopt_programs) must keep the donor's compiled configuration
+            budget, alloc = self.round_budget, self.allocator
 
-            def _round(states, conds, p, weights):
-                return packed_round(
+            def _run_rounds(states, conds, p, weights, R):
+                return packed_superstep(
                     make_fn, p, schedule, states, conds, weights,
-                    budget=self.round_budget, allocator=self.allocator,
+                    rounds=R, budget=budget, allocator=alloc,
                     pack_impl=pack_impl, **statics,
                 )
 
         else:
             self.allocator = allocator
 
-            def _round(states, conds, p, weights):
+            def _run_rounds(states, conds, p, weights, R):
                 def one(st, cond):
-                    return asd_round(make_fn(p, cond), schedule, st, **statics)
+                    return asd_superstep(
+                        make_fn(p, cond), schedule, st, rounds=R, **statics)
 
                 if conds is None:
                     return jax.vmap(lambda st: one(st, None))(states)
                 return jax.vmap(one)(states, conds)
 
-        self._round_fn = jax.jit(_round)
+        K, keep = schedule.K, keep_trajectory
+
+        def _make_superstep(R: int):
+            # R fused rounds per dispatch + the boundary sync packet, built
+            # on the public superstep API (asd_superstep / packed_superstep)
+            # so the engine runs exactly the semantics the bit-exactness
+            # tests pin.  The slot-state pytree is DONATED: XLA aliases the
+            # output state buffers onto the inputs, so a superstep updates
+            # the batch in place instead of allocating a fresh ASDChainState
+            # copy per round.  The sync packet (fresh buffers: stack/gather
+            # outputs) is everything the host needs at the boundary — retire
+            # flags, live windows, counters, and each slot's final sample —
+            # so no separate peek dispatch ever touches the (possibly
+            # already donated-away) states.
+            def _superstep(states, conds, p, weights):
+                states = _run_rounds(states, conds, p, weights, R)
+                info = jnp.stack(
+                    [getattr(states, f).astype(jnp.int32) for f in _SYNC_ROWS]
+                )
+                samples = jax.vmap(
+                    lambda st: chain_sample(st, K, keep))(states)
+                return states, (info, samples)
+
+            return jax.jit(_superstep, donate_argnums=(0,))
+
+        self._make_superstep = _make_superstep
+        # one executable per (R, budget) pair; auto mode draws R from a
+        # power-of-two ladder so this stays O(log) entries
+        self._superstep_fns: dict[int, Callable] = {}
         self._weights = np.ones((num_slots,), np.float32)
-        # device copy of the allocator weights, re-uploaded only when an
-        # admission/retire actually changes them — not every round
+        # device copy of the allocator weights: updated IN PLACE one lane at
+        # a time when an admission/retire changes a slot's priority — never
+        # re-uploaded wholesale from the host
         self._weights_dev = jnp.asarray(self._weights)
 
         def _admit(states, y0s, keys, idxs):
-            # init + scatter for a whole round's admissions in ONE dispatch
+            # init + scatter for a whole boundary's admissions in ONE
+            # dispatch; states donated — the scatter reuses the slot buffers
             new_sts = jax.vmap(
                 lambda y0, k: init_chain_state(
                     schedule, y0, k, self.theta, noise_mode, keep_trajectory,
@@ -243,19 +323,7 @@ class ContinuousASDEngine:
                 lambda b, n: b.at[idxs].set(n), states, new_sts
             )
 
-        self._admit_fn = jax.jit(_admit)
-
-        def _peek(states, idxs):
-            # one dispatch + one transfer for a whole retirement wave
-            def one(idx):
-                st = jax.tree_util.tree_map(lambda x: x[idx], states)
-                sample = chain_sample(st, schedule.K, keep_trajectory)
-                return (sample, st.rounds, st.head_calls, st.model_evals,
-                        st.accepts, st.proposals)
-
-            return jax.vmap(one)(idxs)
-
-        self._peek_fn = jax.jit(_peek)
+        self._admit_fn = jax.jit(_admit, donate_argnums=(0,))
 
         # All slots start as already-finished dummy chains: frozen under
         # asd_round until a real request is admitted over them.
@@ -294,15 +362,50 @@ class ContinuousASDEngine:
             round_budget=self.round_budget,
             live_demand=self._live_demand,
             theta_open=self._theta_open,
+            rounds_per_sync=self._rps,
         )
 
+    # -- superstep machinery -------------------------------------------------
+
+    def _get_superstep(self, R: int):
+        fn = self._superstep_fns.get(R)
+        if fn is None:
+            fn = self._superstep_fns[R] = self._make_superstep(R)
+        return fn
+
+    def _pick_rounds(self) -> int:
+        """The superstep length for the next dispatch.
+
+        Fixed mode returns the configured R.  Auto mode sizes R to the
+        accept-rate EWMA: a fresh chain is expected to run about
+        K / E[advance] rounds (geometric accept model, the same estimate the
+        deadline policy uses); R is chosen so a chain that retires
+        mid-superstep idles its slot for at most ~1/8 of that service time,
+        then snapped DOWN to the power-of-two ladder so only O(log) superstep
+        programs ever compile.
+        """
+        if not self._auto_rps:
+            return self._rps
+        p = min(max(self._accept_ewma, 0.0), 0.999)
+        adv = (1.0 - p ** self.theta) / max(1.0 - p, 1e-3)
+        exp_rounds = self.schedule.K / max(adv, 1.0)
+        target = max(1, int(exp_rounds / 8.0))
+        R = 1
+        while R * 2 <= min(target, _AUTO_MAX_R):
+            R *= 2
+        self._rps = R
+        return R
+
+    def _set_weight(self, slot: int, w: float) -> None:
+        """One-lane device update of the allocator priority weights — no
+        full host->device re-upload on the admission/retire paths."""
+        if self._weights[slot] != w:
+            self._weights[slot] = w
+            self._weights_dev = self._weights_dev.at[slot].set(w)
+
     def _observe_round_time(self, dt: float) -> None:
-        if not self._spr_seen:
-            # the engine's first round pays the jit compile: seeding the
-            # EWMA with it would make the deadline policy drop meetable
-            # requests for the next ~10 rounds, and those drops are final
-            self._spr_seen = True
-            return
+        # cold (compiling) dispatches never reach here — see
+        # _dispatch_superstep — so the EWMA only sees real round walls
         self._spr_ewma = dt if self._spr_ewma == 0.0 else (
             0.7 * self._spr_ewma + 0.3 * dt)
 
@@ -333,10 +436,9 @@ class ContinuousASDEngine:
                     req.cond, np.float32)
             # allocator priority weight: 1 + the request's priority (>= a
             # small floor so zero/negative priorities still get budget)
-            w = max(1.0 + float(getattr(req, "priority", 0.0) or 0.0), 0.1)
-            if self._weights[slot] != w:
-                self._weights[slot] = w
-                self._weights_dev = None  # re-upload before the next round
+            self._set_weight(
+                slot,
+                max(1.0 + float(getattr(req, "priority", 0.0) or 0.0), 0.1))
             # a fresh chain opens at the controller's initial window: count
             # it into the live demand the budget-pressure signal sees
             self._live_demand += self._theta_open
@@ -358,18 +460,49 @@ class ContinuousASDEngine:
         if self.d_cond:
             self._conds = jnp.asarray(conds)
 
-    def _retire_finished(self, states=None, snapshot_rounds=None) -> None:
-        # ``states`` may be an older snapshot than self._states: a finished
-        # chain's state is frozen by asd_round, so peeking the snapshot
-        # yields identical values while the device crunches newer rounds.
-        # ``snapshot_rounds`` is the engine round count the snapshot
-        # reflects: slots admitted at or after it hold a new chain NOT yet
-        # present in the snapshot (whose lane still shows the previous,
-        # finished occupant) and must not be retired against it.
-        states = self._states if states is None else states
-        if snapshot_rounds is None:
-            snapshot_rounds = self.stats.rounds_total
-        a, theta_live = jax.device_get((states.a, states.theta_live))
+    def _dispatch_superstep(self):
+        """Admit at the boundary, launch one superstep, return its pending
+        harvest record (sync packet + the round count it reflects)."""
+        self._admit_pending()
+        R = self._pick_rounds()
+        fn = self._get_superstep(R)
+        # a cold executable means THIS call pays the jit compile: keep that
+        # one-off out of dispatch_s and the seconds-per-round EWMA, or (in
+        # auto mode especially, which compiles ladder entries mid-traffic)
+        # the deadline policy's service-time estimate balloons and drops
+        # meetable requests — and drops are final.  _cache_size is a private
+        # jax accessor: degrade to "warm" if an upgrade drops it
+        cold = getattr(fn, "_cache_size", lambda: 1)() == 0
+        t0 = time.perf_counter()
+        self._states, sync = fn(
+            self._states, self._conds, self._params, self._weights_dev)
+        if not cold:
+            self.stats.dispatch_s += time.perf_counter() - t0
+        self.stats.rounds_total += R
+        self.stats.supersteps += 1
+        return (sync, self.stats.rounds_total, R, t0, cold)
+
+    def _harvest(self, pending) -> None:
+        """Consume one superstep's sync packet: retire every chain that
+        finished during it (flags, counters, AND samples ride in the packet
+        — no peek dispatch against possibly-donated state buffers), refresh
+        the budget-pressure signal, and update the service-time EWMAs.
+
+        ``snapshot_rounds`` is the engine round count the packet reflects:
+        slots admitted at or after it hold a chain NOT yet present in the
+        packet (whose lane still shows the previous, finished occupant) and
+        must not be retired against it — the double-buffered loop harvests
+        packets one superstep behind the dispatch frontier.
+        """
+        sync, snapshot_rounds, R, t_dispatch, cold = pending
+        info_dev, samples_dev = sync
+        t0 = time.perf_counter()
+        jax.block_until_ready(info_dev)  # waits on the device, off-path in
+        t1 = time.perf_counter()         # serve()'s double-buffered loop
+        self.stats.device_s += t1 - t0
+        info = np.asarray(jax.device_get(info_dev))
+        row = {name: info[i] for i, name in enumerate(_SYNC_ROWS)}
+        a, theta_live = row["a"], row["theta_live"]
         now = time.perf_counter()
         K = self.schedule.K
         # refresh the budget-pressure signal off the sync we already pay:
@@ -384,69 +517,62 @@ class ContinuousASDEngine:
             if self.scheduler.slot_info(slot).admit_round < snapshot_rounds
             and a[slot] >= K
         ]
-        if not finished:
-            return
-        # pad the wave to a power of two (duplicate peeks are free) so the
-        # jitted gather has O(log S) compile variants, like admissions
-        idxs = list(finished)
-        width = 1
-        while width < len(idxs):
-            width *= 2
-        idxs += [idxs[0]] * (width - len(idxs))
-        samples, rounds, heads, evals, accepts, proposals = jax.device_get(
-            self._peek_fn(states, jnp.asarray(idxs, jnp.int32)))
-        for i, slot in enumerate(finished):
-            info = self.scheduler.retire(slot)
-            if self._weights[slot] != 1.0:
-                self._weights[slot] = 1.0
-                self._weights_dev = None
-            self._results[info.request.rid] = np.asarray(samples[i])
-            deadline = getattr(info.request, "deadline", None)
-            rm = RequestMetrics(
-                rid=info.request.rid,
-                queue_latency=info.admit_time - info.submit_time,
-                service_time=now - info.admit_time,
-                rounds=int(rounds[i]),
-                head_calls=int(heads[i]),
-                model_evals=int(evals[i]),
-                accepts=int(accepts[i]),
-                proposals=int(proposals[i]),
-                deadline=deadline,
-                slo_met=None if deadline is None else now <= deadline,
-            )
-            self.stats.observe(rm)
-            # EWMA over retired chains feeds the SERR/deadline estimates
-            self._accept_ewma = 0.8 * self._accept_ewma + 0.2 * rm.accept_rate
+        if finished:
+            samples = np.asarray(jax.device_get(samples_dev))
+            for slot in finished:
+                sinfo = self.scheduler.retire(slot)
+                self._set_weight(slot, 1.0)
+                self._results[sinfo.request.rid] = np.asarray(samples[slot])
+                deadline = getattr(sinfo.request, "deadline", None)
+                rm = RequestMetrics(
+                    rid=sinfo.request.rid,
+                    queue_latency=sinfo.admit_time - sinfo.submit_time,
+                    service_time=now - sinfo.admit_time,
+                    rounds=int(row["rounds"][slot]),
+                    head_calls=int(row["head_calls"][slot]),
+                    model_evals=int(row["model_evals"][slot]),
+                    accepts=int(row["accepts"][slot]),
+                    proposals=int(row["proposals"][slot]),
+                    deadline=deadline,
+                    slo_met=None if deadline is None else now <= deadline,
+                )
+                self.stats.observe(rm)
+                # EWMA over retired chains feeds SERR/deadline estimates
+                self._accept_ewma = (
+                    0.8 * self._accept_ewma + 0.2 * rm.accept_rate)
+        self.stats.host_sync_s += time.perf_counter() - t1
+        if not cold:  # a cold dispatch's elapsed time is mostly jit compile
+            self._observe_round_time((time.perf_counter() - t_dispatch) / R)
 
     def step(self) -> bool:
-        """Admit, run ONE fused speculation round over all slots, retire.
+        """Admit, run ONE superstep (``rounds_per_sync`` fused rounds) over
+        all slots, harvest its boundary synchronously.
 
-        Returns True while there is still work queued or in flight.
+        Returns True while there is still work queued or in flight.  This is
+        the synchronous drive used by open-loop arrival simulators; batch
+        serving should prefer ``serve()``, whose double-buffered loop keeps
+        the device busy while the host harvests.
         """
         if not self.scheduler.has_work():
             return False
-        t0 = time.perf_counter()
-        self._admit_pending()
-        if self._weights_dev is None:
-            self._weights_dev = jnp.asarray(self._weights)
-        self._states = self._round_fn(
-            self._states, self._conds, self._params, self._weights_dev)
-        self.stats.rounds_total += 1
-        self._retire_finished()  # syncs on the round via states.a
-        self._observe_round_time(time.perf_counter() - t0)
+        self._harvest(self._dispatch_superstep())
         return self.scheduler.has_work()
 
     def serve(self, requests: list[Request], key=None) -> dict[int, np.ndarray]:
-        """Submit everything, drive rounds until drained, return {rid: sample}.
+        """Submit everything, drive supersteps until drained, return
+        {rid: sample}.
 
-        With ``pipelined=True`` the loop dispatches round N+1 before round
-        N's results are read back, so host-side bookkeeping (polling,
-        retiring, metrics) overlaps the device's speculation round instead
-        of serializing with it.  Retirement then lags one round — a freed
-        slot admits its next request one round later — which trades a bit of
-        queue latency (and ~1 extra round per wave) for keeping an
-        accelerator saturated; on a host-only CPU backend the overlap buys
-        nothing and the synchronous loop is the default.
+        The loop is double-buffered: superstep s+1 is dispatched BEFORE
+        superstep s's sync packet is read back, so the blocking harvest
+        (device wait + transfer + retire bookkeeping) overlaps the device's
+        next R rounds instead of serializing with them —
+        ``block_until_ready`` never sits on the critical path.  The one
+        exception is deliberate: while requests are QUEUED waiting for a
+        slot, the boundary harvests synchronously instead, so a slot freed
+        by superstep s refills at boundary s+1 rather than s+2 — occupancy
+        is worth more than overlap when someone is waiting.  With an empty
+        queue the lag is free (nobody wants the slot) and the harvest rides
+        fully off the critical path.
         """
         if key is not None:
             self._key = key
@@ -454,29 +580,31 @@ class ContinuousASDEngine:
         t0 = time.perf_counter()
         for r in requests:
             self.submit(r)
-        if self.pipelined:
-            prev = None
-            while self.scheduler.has_work():
-                t_round = time.perf_counter()
-                self._admit_pending()
-                if self._weights_dev is None:
-                    self._weights_dev = jnp.asarray(self._weights)
-                nxt = self._round_fn(
-                    self._states, self._conds, self._params,
-                    self._weights_dev)
-                self.stats.rounds_total += 1
-                if prev is not None:
-                    # overlaps the round in flight; prev is one round old
-                    self._retire_finished(prev, self.stats.rounds_total - 1)
-                self._states = prev = nxt
-                self._observe_round_time(time.perf_counter() - t_round)
-        else:
-            while self.step():
-                pass
+        pending = None
+        while self.scheduler.has_work() or pending is not None:
+            if pending is not None and self.scheduler.queue_depth > 0:
+                # someone is waiting for a slot: sync the boundary so the
+                # dispatch below can admit into lanes superstep s freed
+                self._harvest(pending)
+                pending = None
+            nxt = None
+            if self.scheduler.has_work():
+                nxt = self._dispatch_superstep()
+            if pending is not None:
+                self._harvest(pending)  # overlaps the dispatch in flight
+            pending = nxt
         jax.block_until_ready(self._states.a)
         self.stats.wall_time += time.perf_counter() - t0
         out, self._results = self._results, {}
         return out
+
+    def adopt_programs(self, warm: "ContinuousASDEngine") -> "ContinuousASDEngine":
+        """Share a warm engine's compiled programs (same statics/shapes):
+        benchmarks build fresh engines per repeat without re-paying jit."""
+        self._make_superstep = warm._make_superstep
+        self._superstep_fns = warm._superstep_fns
+        self._admit_fn = warm._admit_fn
+        return self
 
     def chain_state(self, slot: int) -> ASDChainState:
         """Debug view of one slot's resumable state."""

@@ -55,6 +55,17 @@ class EngineStats:
     retired: int = 0  # completed and returned
     batches: int = 0  # chunked engine: batches launched
     rounds_total: int = 0  # fused engine rounds driven (all slots at once)
+    supersteps: int = 0  # device dispatches (each runs rounds_per_sync rounds)
+    # where the engine's wall time goes, per superstep boundary:
+    #   dispatch_s   host time spent launching the jitted superstep (+ the
+    #                admission dispatches) — the async call, not its execution
+    #   device_s     host time blocked waiting for a superstep's results to
+    #                become ready (block_until_ready on the sync packet)
+    #   host_sync_s  host time transferring the sync packet + retire/metrics
+    #                bookkeeping — the per-boundary tax supersteps amortize
+    dispatch_s: float = 0.0
+    device_s: float = 0.0
+    host_sync_s: float = 0.0
     head_calls_total: int = 0
     model_evals_total: int = 0
     accepts_total: int = 0
@@ -134,12 +145,34 @@ class EngineStats:
             return 0.0
         return sum(m.parallel_depth for m in self.per_request) / len(self.per_request)
 
+    def timing_breakdown(self) -> dict:
+        """Dispatch / device-wait / host-sync split of the engine's wall
+        time, absolute and as fractions — the superstep win is the
+        host_sync + dispatch fraction shrinking as rounds_per_sync grows.
+        Fractions fall back to the accounted component total when no
+        serve() wall has been recorded (e.g. a step()-driven open loop,
+        where the driver owns the wall clock)."""
+        wall = self.wall_time or (
+            self.dispatch_s + self.device_s + self.host_sync_s)
+        wall = max(wall, 1e-12)
+        return {
+            "supersteps": self.supersteps,
+            "rounds_per_superstep": self.rounds_total / max(self.supersteps, 1),
+            "dispatch_s": self.dispatch_s,
+            "device_s": self.device_s,
+            "host_sync_s": self.host_sync_s,
+            "dispatch_frac": self.dispatch_s / wall,
+            "device_frac": self.device_s / wall,
+            "host_sync_frac": self.host_sync_s / wall,
+        }
+
     def summary(self) -> dict:
         return {
             "requests": self.requests,
             "retired": self.retired,
             "dropped": self.dropped,
             "rounds_total": self.rounds_total,
+            "supersteps": self.supersteps,
             "head_calls_total": self.head_calls_total,
             "model_evals_total": self.model_evals_total,
             "accept_rate": self.accept_rate(),
@@ -149,4 +182,5 @@ class EngineStats:
             "slo_attainment": self.slo_attainment(),
             "wall_time_s": self.wall_time,
             "throughput_rps": self.throughput(),
+            "timing": self.timing_breakdown(),
         }

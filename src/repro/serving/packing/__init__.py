@@ -30,7 +30,7 @@ from repro.serving.packing.allocator import (
     make_allocator,
 )
 from repro.serving.packing.plan import PackedRoundPlan, build_pack_maps
-from repro.serving.packing.round import packed_round
+from repro.serving.packing.round import packed_round, packed_superstep
 
 __all__ = [
     "ALLOCATORS",
@@ -42,4 +42,5 @@ __all__ = [
     "PackedRoundPlan",
     "build_pack_maps",
     "packed_round",
+    "packed_superstep",
 ]

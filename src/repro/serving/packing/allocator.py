@@ -16,7 +16,12 @@ retired slots) and an integer budget ``B``, it returns integer grants with
 
 The demands are produced by the PR-2 ``ThetaController``s: the controller
 shapes each chain's wish, the allocator reconciles the wishes with the
-hardware budget.  Three policies:
+hardware budget.  Because every policy is pure jnp over traced arrays with
+static shapes (the waterfill level scan is sized by the static
+``theta_max``, the greedy fills by the slot count), ``allocate`` traces
+straight into a ``lax.scan`` body: ``packed_superstep`` re-allocates the
+budget EVERY scan iteration from the device-resident ``theta_live`` without
+a host round trip.  Three policies:
 
   ``proportional``  g_s ~ B * d_s / sum(d) with largest-remainder rounding —
       every window shrinks by the same factor under pressure.

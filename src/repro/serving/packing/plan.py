@@ -12,7 +12,8 @@ Padding positions (p >= total) carry slot_id/step_id 0 and valid False; the
 gather reads a harmless row for them and the scatter routes them to the drop
 row.  Everything is O(B log S) jnp (searchsorted over the grant prefix sums),
 shapes depend only on the static budget — the maps never trigger a recompile
-as the window mix moves.
+as the window mix moves, and they rebuild per iteration inside
+``packed_superstep``'s scan from that iteration's grants.
 """
 
 from __future__ import annotations

@@ -182,3 +182,49 @@ def packed_round(
     return jax.vmap(
         lambda st, plan, z, acc, tr: commit_one(st, plan, z, acc, None, tr)
     )(states, plans, z_seg, acc_seg, theta_r)
+
+
+def packed_superstep(
+    make_fn: Callable,
+    params,
+    schedule: Schedule,
+    states,
+    conds: Optional[jax.Array],
+    weights: jax.Array,
+    *,
+    rounds: int,
+    theta: int,
+    budget: int,
+    allocator,
+    eager_head: bool = True,
+    noise_mode: str = "buffer",
+    keep_trajectory: bool = False,
+    grs_impl: str = "core",
+    controller: ThetaController = _STATIC,
+    pack_impl: str = "ref",
+):
+    """``rounds`` packed verification rounds in ONE dispatch (a ``lax.scan``).
+
+    Each scan iteration re-runs the full plan -> allocate -> pack -> verify ->
+    commit pipeline of ``packed_round`` on the DEVICE-RESIDENT slot state: the
+    per-iteration budget allocation reads that iteration's ``theta_live`` /
+    ``a`` (the allocator is pure jnp, so the waterfill level scan etc. trace
+    straight into the scan body), and retired slots decay to masked no-ops
+    exactly as in the unpacked superstep.  ``weights`` and ``conds`` are
+    boundary constants: the host only re-prices slots between supersteps.
+
+    Bit-identical to ``rounds`` sequential ``packed_round`` calls, and — at
+    covering budgets — to ``asd_superstep`` per slot (tests/test_superstep.py).
+    Shapes depend only on the static (rounds, budget, slots, theta) tuple.
+    """
+    def body(ss, _):
+        return packed_round(
+            make_fn, params, schedule, ss, conds, weights,
+            theta=theta, budget=budget, allocator=allocator,
+            eager_head=eager_head, noise_mode=noise_mode,
+            keep_trajectory=keep_trajectory, grs_impl=grs_impl,
+            controller=controller, pack_impl=pack_impl,
+        ), None
+
+    states, _ = jax.lax.scan(body, states, None, length=int(rounds))
+    return states

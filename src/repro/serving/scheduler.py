@@ -9,12 +9,14 @@ speculation program.  The scheduler is the host-side bookkeeping around them:
                        may DROP (deadline
                        already unmeetable)
 
-Admission happens at round boundaries only (the device program is SPMD over
-slots, so a slot can only change occupants between rounds).  A chain that
-accepts its full speculation window retires early and frees its slot for the
-next queued request instead of blocking the batch until the slowest chain
-finishes — the standard continuous-batching move from LLM serving, applied to
-diffusion chains.
+Admission happens at SUPERSTEP boundaries only (the device program is SPMD
+over slots and runs ``rounds_per_sync`` fused rounds per dispatch, so a slot
+can only change occupants between dispatches; a chain finishing mid-superstep
+freezes in place until the boundary harvest).  A chain that accepts its full
+speculation window retires early and frees its slot for the next queued
+request instead of blocking the batch until the slowest chain finishes — the
+standard continuous-batching move from LLM serving, applied to diffusion
+chains.
 
 WHICH queued request takes a freed slot is a pluggable ``SchedulingPolicy``:
 
@@ -35,6 +37,7 @@ program never sees them, so every policy serves bit-identical samples.
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Any, List, Optional, Tuple
 
@@ -77,6 +80,11 @@ class AdmissionContext:
     # what ONE admission adds to demand: the controller's opening window
     # (<= theta_max; 0 means unknown — price at the cap)
     theta_open: int = 0
+    # superstep execution: rounds fused per device dispatch.  Admission and
+    # retirement only happen at superstep boundaries, so service times
+    # quantize to multiples of this (see expected_service_time) and a freed
+    # slot refills up to rounds_per_sync - 1 rounds late.
+    rounds_per_sync: int = 1
 
     @property
     def budget_pressure(self) -> float:
@@ -99,7 +107,13 @@ class AdmissionContext:
         return self.K / max(adv, 1.0)
 
     def expected_service_time(self, request) -> float:
-        return self.expected_rounds(request) * self.seconds_per_round
+        """Expected rounds priced in wall seconds, quantized UP to the next
+        superstep boundary: a chain that finishes mid-superstep still holds
+        its slot (frozen) until the boundary harvest, so the deadline policy
+        must budget whole supersteps, not raw rounds."""
+        rounds = self.expected_rounds(request)
+        R = max(self.rounds_per_sync, 1)
+        return math.ceil(rounds / R) * R * self.seconds_per_round
 
 
 class SchedulingPolicy:

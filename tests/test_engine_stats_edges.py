@@ -48,7 +48,6 @@ def test_all_dropped_through_engine(sl_model2, sched_tiny):
         lambda cond: sl_model2, sched_tiny, (2,), num_slots=2, theta=3,
         policy=DeadlineAware(drop_late=True))
     eng._spr_ewma = 10.0  # pretend rounds are slow: 10 s/round observed
-    eng._spr_seen = True
     reqs = [Request(i, key=jax.random.PRNGKey(i),
                     y0=np.zeros((2,), np.float32), deadline=0.0)
             for i in range(4)]  # deadlines in the past

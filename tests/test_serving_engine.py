@@ -3,8 +3,8 @@ bit-identical to the fused single-chain sampler for the same keys), slot
 retire/refill under mixed finish times, and metrics accounting.
 
 Compiled programs are shared module-wide: references come from ONE vmapped
-asd_sample, and every test engine clones the warm engine's jitted
-round/admit/peek programs (same statics => same executables)."""
+asd_sample, and every test engine adopts the warm engine's jitted
+superstep/admit programs (same statics => same executables)."""
 
 import jax
 import jax.numpy as jnp
@@ -45,9 +45,7 @@ def _engine(warm, sl_model2, sched_tiny, num_slots=4):
         theta=THETA, eager_head=True, keep_trajectory=True,
     )
     if num_slots == warm.num_slots:  # same shapes => reuse compiled programs
-        eng._round_fn = warm._round_fn
-        eng._admit_fn = warm._admit_fn
-        eng._peek_fn = warm._peek_fn
+        eng.adopt_programs(warm)
     return eng
 
 
@@ -59,15 +57,19 @@ def _requests(n, seed0=100):
     ]
 
 
-@pytest.mark.parametrize("pipelined", [False, True])
+@pytest.mark.parametrize("rounds_per_sync", [1, 3])
 def test_engine_output_matches_asd_sample_bitwise(
-    warm_engine, refs, sl_model2, sched_tiny, pipelined
+    warm_engine, refs, sl_model2, sched_tiny, rounds_per_sync
 ):
     """More requests than slots: every committed sample equals the
-    standalone asd_sample for that request's key, bit for bit."""
+    standalone asd_sample for that request's key, bit for bit — at one
+    round per dispatch and with fused supersteps."""
     n = 9
-    eng = _engine(warm_engine, sl_model2, sched_tiny)
-    eng.pipelined = pipelined
+    eng = ContinuousASDEngine(
+        lambda cond: sl_model2, sched_tiny, (2,), num_slots=4, theta=THETA,
+        eager_head=True, keep_trajectory=True,
+        rounds_per_sync=rounds_per_sync,
+    ).adopt_programs(warm_engine)
     out = eng.serve(_requests(n))
     assert sorted(out) == list(range(n))
     for i in range(n):
