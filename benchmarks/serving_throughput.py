@@ -89,6 +89,8 @@ from repro.core import (
 )
 from repro.serving.engine import ContinuousASDEngine, Request
 from repro.serving.packing import make_allocator
+from repro.serving.router import make_router
+from repro.serving.sharded import ShardedASDEngine
 
 
 def make_synthetic_model(d: int, key, width: int = 1024, depth: int = 8):
@@ -188,12 +190,12 @@ def run_open_loop(eng, reqs, arrivals):
     there is work.  Queue latency therefore includes real arrival waiting."""
     i, n = 0, len(reqs)
     t0 = time.perf_counter()
-    while i < n or eng.scheduler.has_work():
+    while i < n or eng.has_work():
         now = time.perf_counter() - t0
         while i < n and arrivals[i] <= now:
             eng.submit(reqs[i])
             i += 1
-        if eng.scheduler.has_work():
+        if eng.has_work():
             eng.step()
         elif i < n:  # idle gap before the next arrival
             time.sleep(min(max(arrivals[i] - now, 0.0), 0.005))
@@ -204,12 +206,11 @@ def run_open_loop(eng, reqs, arrivals):
 
 def build_continuous(params, factory, sched, theta, slots, d, controller=None,
                      execution="unpacked", round_budget=None, allocator=None,
-                     rounds_per_sync=1):
-    return ContinuousASDEngine(
+                     rounds_per_sync=1, shards=1, dispatch=None):
+    common = dict(
         model_fn_factory=factory,
         schedule=sched,
         event_shape=(d,),
-        num_slots=slots,
         theta=theta,
         d_cond=1,
         eager_head=True,
@@ -221,6 +222,17 @@ def build_continuous(params, factory, sched, theta, slots, d, controller=None,
         allocator=allocator,
         rounds_per_sync=rounds_per_sync,
     )
+    if shards > 1:
+        # slots is PER SHARD here (each worker keeps the same sub-batch and
+        # budget whatever the shard count); fused dispatch — one shard_map
+        # program over a slots mesh — needs one device per shard
+        if dispatch is None:
+            dispatch = ("fused" if len(jax.devices()) >= shards
+                        else "per-shard")
+        return ShardedASDEngine(
+            num_slots=slots * shards, shards=shards, dispatch=dispatch,
+            router=make_router("round-robin"), **common)
+    return ContinuousASDEngine(num_slots=slots, **common)
 
 
 def warm_continuous(eng, slots):
@@ -233,11 +245,11 @@ def warm_continuous(eng, slots):
 def run_continuous(params, factory, sched, reqs, theta, slots, d, repeats,
                    controller=None, execution="unpacked", round_budget=None,
                    allocator=None, arrivals=None, warm_engine=None,
-                   rounds_per_sync=1):
+                   rounds_per_sync=1, shards=1):
     def build():
         return build_continuous(params, factory, sched, theta, slots, d,
                                 controller, execution, round_budget, allocator,
-                                rounds_per_sync)
+                                rounds_per_sync, shards)
 
     warm = warm_engine
     if warm is None:
@@ -252,7 +264,7 @@ def run_continuous(params, factory, sched, reqs, theta, slots, d, repeats,
             wall = time.perf_counter() - t0
         else:
             wall = run_open_loop(eng, list(reqs), arrivals)
-            out, eng._results = eng._results, {}
+            out = eng.drain_results()
         if best is None or wall < best[0]:
             best = (wall, out, eng.stats)
     wall, out, s = best
@@ -266,6 +278,7 @@ def run_continuous(params, factory, sched, reqs, theta, slots, d, repeats,
         mean_queue_latency_s=s.mean_queue_latency(),
         model_evals_total=s.model_evals_total,
         slots=slots,
+        shards=shards,
         rounds_per_sync=rounds_per_sync,
         timing=s.timing_breakdown(),
     )
@@ -558,6 +571,121 @@ def run_superstep_sweep(params, factory, sched, reqs, theta, slots, d,
     )
 
 
+def run_shard_sweep(params, factory, sched, theta, slots_local, d, seed,
+                    cond_max, requests, repeats, shard_counts=(1, 2, 4),
+                    rounds_per_sync=2):
+    """Sharded serving scaling: n shard-local workers, each with the SAME
+    slot sub-batch (``slots_local``) and the SAME FIXED per-shard packed
+    budget (``slots_local * theta`` — covering, so grants always equal
+    demands and shard placement cannot bend any chain's windows), serving
+    ONE fixed request pool.
+
+    Growing n adds capacity at constant per-shard shape — the pool drains
+    in fewer waves, each boundary ONE fused ``shard_map`` dispatch whose
+    per-shard programs XLA runs concurrently across the (simulated)
+    devices (``ShardedASDEngine(dispatch="fused")``; arms fall back to
+    per-shard dispatch when devices < shards).  Because every arm serves
+    the identical key-carrying stream, the sweep asserts BITWISE sample
+    parity across shard counts in the same pass it times — routing and
+    sharding are host-side scheduling only.
+
+    Headline: samples/s non-decreasing from 1 shard to the deepest sweep
+    point.  Repeats are interleaved across arms, best-of walls; supersteps
+    (``rounds_per_sync``) amortize the per-shard boundary tax exactly as in
+    production.  The pool is HOMOGENEOUS (cond = 0): heterogeneous service
+    times turn the sweep into a straggler-imbalance measurement of the
+    router — a real effect, but the controller/poisson benchmarks own it —
+    whereas this sweep isolates what sharding itself costs and buys.
+    Simulate one device per shard on CPU with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    del cond_max  # the sweep pins cond = 0 (see docstring)
+    budget = slots_local * theta  # fixed per shard, covering
+    n_dev = len(jax.devices())
+    controller = StaticTheta()
+
+    def build(n):
+        return build_continuous(params, factory, sched, theta, slots_local,
+                                d, controller=controller, execution="packed",
+                                round_budget=budget,
+                                allocator=make_allocator(
+                                    "waterfill", theta_max=theta),
+                                rounds_per_sync=rounds_per_sync, shards=n)
+
+    def make_reqs():
+        return [
+            Request(i, key=jax.random.PRNGKey(seed * 10000 + i),
+                    cond=np.zeros((1,), np.float32),
+                    y0=np.zeros((d,), np.float32))
+            for i in range(requests)
+        ]
+
+    # every arm's workers have identical shapes (slots_local, budget), so
+    # all shard counts draw from ONE executable pool
+    warms, warm0 = {}, None
+    for n in shard_counts:
+        warm = build(n)
+        if warm0 is None:
+            warm0 = warm
+        else:
+            warm.adopt_programs(warm0)
+        warm.serve(make_reqs())
+        warms[n] = warm
+
+    golden = None
+    best = {}
+    for _ in range(repeats):
+        for n in shard_counts:
+            eng = build(n).adopt_programs(warms[n])
+            reqs_n = make_reqs()
+            t0 = time.perf_counter()
+            out = eng.serve(reqs_n)
+            wall = time.perf_counter() - t0
+            assert len(out) == requests
+            if golden is None:
+                golden = out
+            else:  # sharding is scheduling: the served bits cannot change
+                for r in reqs_n:
+                    np.testing.assert_array_equal(out[r.rid], golden[r.rid])
+            if n not in best or wall < best[n][0]:
+                routed = (eng.routed_counts.tolist()
+                          if hasattr(eng, "routed_counts") else [requests])
+                best[n] = (wall, eng.stats, routed)
+
+    arms = {}
+    for n, (wall, s, routed) in best.items():
+        arms[f"shards_{n}"] = dict(
+            shards=n,
+            slots_per_shard=slots_local,
+            round_budget_per_shard=budget,
+            requests=requests,
+            wall_time_s=wall,
+            samples_per_s=s.retired / wall,
+            fused_rounds=s.rounds_total,
+            supersteps=s.supersteps,
+            accept_rate=s.accept_rate(),
+            routed=routed,
+            timing=s.timing_breakdown(),
+        )
+        print(f"[shards={n}] {arms[f'shards_{n}']['samples_per_s']:.2f} "
+              f"samples/s ({requests} reqs on {n}x{slots_local} slots, "
+              f"budget {budget}/shard, routed {routed})")
+
+    tputs = [arms[f"shards_{n}"]["samples_per_s"] for n in shard_counts]
+    return dict(
+        arms=arms,
+        shard_counts=list(shard_counts),
+        devices=n_dev,
+        rounds_per_sync=rounds_per_sync,
+        parity_bitwise=True,  # asserted above, across every shard count
+        # the acceptance headline: added shards never lose throughput from
+        # 1 shard to the deepest sweep point
+        throughput_non_decreasing=bool(
+            all(tputs[i + 1] >= tputs[i] for i in range(len(tputs) - 1))),
+        max_vs_1_throughput=tputs[-1] / tputs[0],
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
@@ -598,6 +726,14 @@ def main():
                          'integer, "auto" (accept-rate-adaptive ladder), or '
                          '"sweep" to compare R in {1,2,4,8} + auto and write '
                          "results/superstep_sweep.json")
+    ap.add_argument("--shards", default="1",
+                    help="shard-local serving workers: an integer (the "
+                         "continuous arm becomes a ShardedASDEngine with "
+                         "--slots slots per shard), or \"sweep\" to compare "
+                         "shard counts {1,2,4} at fixed per-shard slots and "
+                         "budget and write results/sharded_serving.json "
+                         "(simulate devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=4)")
     ap.add_argument("--ballast-width", type=int, default=1024,
                     help="synthetic model compute-ballast width")
     ap.add_argument("--ballast-depth", type=int, default=8,
@@ -632,6 +768,27 @@ def main():
         "model": (f"gmm-posterior-mean + cond-bend + "
                   f"{args.ballast_depth}x{args.ballast_width} tanh ballast"),
     }
+
+    if args.shards == "sweep":
+        sweep = run_shard_sweep(params, factory, sched, args.theta,
+                                args.slots, args.d, args.seed,
+                                args.cond_max, args.requests, args.repeats)
+        # requests is the TOTAL fixed pool every arm serves; only the slot
+        # count is per shard
+        report = {"workload": {**workload, "slots": f"{args.slots}/shard"},
+                  **sweep}
+        out_path = args.out or "results/sharded_serving.json"
+        print(json.dumps(report, indent=2))
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"\nsharded weak scaling on {report['devices']} device(s): "
+              f"{report['max_vs_1_throughput']:.2f}x samples/s at "
+              f"{report['shard_counts'][-1]} shards vs 1; non-decreasing: "
+              f"{report['throughput_non_decreasing']}; parity bitwise: "
+              f"{report['parity_bitwise']} -> {out_path}")
+        return
+    shards = int(args.shards)
 
     if args.rounds_per_sync == "sweep":
         sweep = run_superstep_sweep(params, factory, sched, reqs, args.theta,
@@ -757,7 +914,8 @@ def main():
                                  controller=controller,
                                  execution=args.execution,
                                  round_budget=args.round_budget or None,
-                                 allocator=alloc, rounds_per_sync=rps)
+                                 allocator=alloc, rounds_per_sync=rps,
+                                 shards=shards)
     out_s, chunk = run_chunked(params, factory, sched, reqs, args.theta,
                                args.slots, args.d, args.repeats)
     assert len(out_c) == len(out_s) == args.requests

@@ -122,6 +122,44 @@ def main():
     print(f"       sample shape {sample.shape}, "
           f"finite={bool(np.isfinite(sample).all())}")
 
+    # --- sharded serving: the SAME workload split over 2 shard-local
+    # workers behind a least-loaded router (repro/serving/sharded).  Each
+    # shard owns half the slots, its own admission queue, and its own
+    # verification budget; packed gathers stay shard-local, so this is the
+    # layout that scales to a multi-host mesh.  Samples are bit-identical
+    # to the single-shard engine: routing is pure host-side scheduling.
+    # (Pin each shard to its own device by simulating devices:
+    #  XLA_FLAGS=--xla_force_host_platform_device_count=2.)
+    from repro.serving.router import make_router
+    from repro.serving.sharded import ShardedASDEngine
+
+    seng = ShardedASDEngine(
+        lambda p, cond: make_sl_model_fn(p, dc),
+        params=params,
+        schedule=sched,
+        event_shape=(dc.seq_len, dc.d_data),
+        num_slots=args.batch,
+        shards=2,
+        router=make_router("least-loaded"),
+        theta=args.theta,
+        eager_head=True,
+    )
+    t0 = time.perf_counter()
+    out = seng.serve([Request(i, key=jax.random.PRNGKey(2000 + i))
+                      for i in range(args.requests)])
+    dt = time.perf_counter() - t0
+    s = seng.stats
+    print(
+        f"[asd  sharded x2] served {s.retired} requests in {dt:.1f}s "
+        f"({s.rounds_total} rounds across 2 shards of "
+        f"{args.batch // 2} slots); routed "
+        f"{'/'.join(str(n) for n in seng.routed_counts)}, "
+        f"{s.throughput():.2f} samples/s"
+    )
+    for w in seng.workers:
+        print(f"       shard {w.shard_id}: {w.stats.retired} retired, "
+              f"{w.stats.rounds_total} rounds on {w.device or 'default'}")
+
 
 if __name__ == "__main__":
     main()

@@ -100,6 +100,61 @@ def param_pspecs(boxed_tree, mesh: Mesh | None = None,
     return jax.tree_util.tree_map(fit, boxed_tree, is_leaf=is_boxed)
 
 
+def get_shard_map():
+    """The manual-SPMD entry point across jax versions: ``jax.shard_map``
+    (>= 0.6) or ``jax.experimental.shard_map.shard_map`` — the one shim
+    both the sharded serving engine and the packed superstep use."""
+    try:
+        from jax import shard_map  # type: ignore[attr-defined]
+        return shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+        return shard_map
+
+
+def slots_mesh(num_shards: int, devices=None) -> Mesh:
+    """1-D mesh over the shard devices, axis name ``"slots"`` — the serving
+    topology axis.  Each device of the mesh hosts exactly one shard's slot
+    sub-batch; ``shard_map`` over this axis is how the packed superstep runs
+    every shard in ONE dispatch with shard-LOCAL pack maps (see
+    ``repro.serving.packing.round.sharded_packed_superstep``).  On CPU,
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` simulates the
+    devices."""
+    devs = list(dict.fromkeys(  # ordered dedupe: placements may wrap
+        devices if devices is not None else jax.devices()))
+    if len(devs) < num_shards:
+        raise ValueError(
+            f"slots_mesh needs {num_shards} distinct devices, have "
+            f"{len(devs)} "
+            "(on CPU set XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return Mesh(np.asarray(devs[:num_shards]), ("slots",))
+
+
+def shard_pspecs(mesh: Mesh, states=None, axis: str = "slots"):
+    """Stacked-shard layout: every leaf of a (num_shards, slots_local, ...)
+    slot batch shards its leading SHARD axis over the mesh ``slots`` axis —
+    one shard's sub-batch per device, slot and event dims local.  The
+    topology contract of sharded serving: any gather/scatter built from
+    shard-local pack maps then stays device-local by construction.
+
+    With ``states`` returns a matching pytree of shardings; without, the
+    single ``NamedSharding`` (device_put broadcasts it over a pytree)."""
+    sh = NamedSharding(mesh, P(axis))
+    if states is None:
+        return sh
+    return jax.tree_util.tree_map(lambda _: sh, states)
+
+
+def shard_placements(num_shards: int, devices=None) -> list:
+    """Per-worker device list for the per-shard-dispatch serving path: shard
+    i's slot batch, allocator weights, and superstep dispatches are pinned
+    to ``devices[i % len(devices)]``.  With fewer devices than shards the
+    assignment wraps (shards co-locate); with one device everything lands
+    there — the degenerate single-host layout."""
+    devs = list(devices if devices is not None else jax.devices())
+    return [devs[i % len(devs)] for i in range(num_shards)]
+
+
 def chain_state_shardings(mesh: Mesh, states=None):
     """Slot-batch layout for the continuous serving engine: every leaf of a
     vmapped ``ASDChainState`` (leading axis = slots) shards that axis over

@@ -41,6 +41,23 @@ critical path):
 
   --rounds-per-sync 4      fixed superstep length
   --rounds-per-sync auto   accept-rate-adaptive R on a power-of-two ladder
+
+Sharded serving (repro/serving/sharded): shard-local workers behind a
+request router — each shard owns a slot sub-batch pinned to its own device,
+its own admission queue, and its own verification budget, so packed gathers
+never cross shards (and on a pod, never cross hosts):
+
+  --shards 4                                   shard-local workers
+  --router least-loaded|round-robin|deadline   request routing policy
+  --dispatch per-shard|fused                   per-shard: one program per
+                                               worker (per-shard budget
+                                               tiers); fused: ONE shard_map
+                                               program over a slots mesh
+                                               (scales across devices)
+  --round-budget auto                          per-shard budget tiers,
+                                               rebalanced from live demand
+  --overcommit 1.5                             BudgetAware admits up to
+                                               1.5x the budget's demand
 """
 
 from __future__ import annotations
@@ -62,13 +79,16 @@ from repro.distributed.sharding import (
     batch_pspec,
     chain_state_shardings,
     param_pspecs,
+    shard_placements,
     shardings_from_pspecs,
 )
 from repro.models.diffusion import denoiser_init, make_ddpm_model_fn
 from repro.nn.param import unbox
 from repro.serving.engine import ContinuousASDEngine, Request
 from repro.serving.packing import ALLOCATORS, make_allocator
+from repro.serving.router import ROUTERS, make_router
 from repro.serving.scheduler import POLICIES, make_policy
+from repro.serving.sharded import ShardedASDEngine
 
 
 def _build(args):
@@ -129,26 +149,31 @@ def run_continuous(args):
         slots = max(args.chains // 2, batch_world)
         slots = ((slots + batch_world - 1) // batch_world) * batch_world
 
+    if args.shards > 1 and slots % args.shards:
+        raise SystemExit(
+            f"--slots {slots} must divide evenly over --shards {args.shards}")
     # round_budget reaches the engine only on the packed path: the unpacked
     # engine must keep reporting budget == slots * theta so the budget-aware
-    # admission policy's pressure signal stays truthful
+    # admission policy's pressure signal stays truthful.  With shards the
+    # budget is PER SHARD (each shard's round is one budget-shaped call over
+    # its own slot sub-batch); "auto" turns on per-shard tier rebalancing.
+    slots_local = slots // max(args.shards, 1)
     budget = None
     allocator = None
     if args.execution == "packed":
-        budget = args.round_budget or slots * args.theta
+        if args.round_budget == "auto":
+            budget = "auto"
+        else:
+            budget = int(args.round_budget) or slots_local * args.theta
         allocator = make_allocator(args.allocator, theta_max=args.theta)
-    eng = ContinuousASDEngine(
-        model_fn_factory=lambda p, cond: make_ddpm_model_fn(p, dc),
-        params=params,  # jit argument: keeps the mesh sharding of weights
+    common = dict(
         schedule=sched,
         event_shape=(dc.seq_len, dc.d_data),
-        num_slots=slots,
         theta=args.theta,
         eager_head=True,
         noise_mode="counter",
         keep_trajectory=False,
         grs_impl=args.grs_impl,
-        state_sharding=chain_state_shardings(mesh),
         controller=make_controller(args.theta_controller),
         policy=make_policy(args.policy),
         execution=args.execution,
@@ -157,17 +182,43 @@ def run_continuous(args):
         pack_impl=args.pack_impl,
         rounds_per_sync=(args.rounds_per_sync if args.rounds_per_sync == "auto"
                          else int(args.rounds_per_sync)),
+        overcommit=args.overcommit,
     )
+    if args.shards > 1:
+        # shard-local workers: each pinned to its own device of the mesh's
+        # device set (round-robin when shards > devices), requests routed
+        # above the compute layer — no cross-shard gathers by construction
+        eng = ShardedASDEngine(
+            lambda p, cond: make_ddpm_model_fn(p, dc),
+            params=params,
+            num_slots=slots,
+            shards=args.shards,
+            router=make_router(args.router),
+            dispatch=args.dispatch,
+            devices=shard_placements(
+                args.shards, list(mesh.devices.flat)),
+            **common,
+        )
+    else:
+        eng = ContinuousASDEngine(
+            lambda p, cond: make_ddpm_model_fn(p, dc),
+            params=params,  # jit argument: keeps the mesh sharding of weights
+            num_slots=slots,
+            state_sharding=chain_state_shardings(mesh),
+            **common,
+        )
     reqs = [Request(i, key=jax.random.PRNGKey(1000 + i)) for i in range(args.chains)]
     t0 = time.perf_counter()
     out = eng.serve(reqs)
     dt = time.perf_counter() - t0
     s = eng.stats
-    exec_desc = (f"packed B={budget}/{slots * args.theta} "
+    exec_desc = (f"packed B={budget}/{slots_local * args.theta} "
                  f"alloc={args.allocator}"
                  if args.execution == "packed" else "unpacked")
+    shard_desc = (f", shards={args.shards} router={args.router}"
+                  if args.shards > 1 else "")
     print(f"[continuous] served {s.retired} requests on {slots} slots "
-          f"({exec_desc}, K={args.K}, policy={args.policy}, "
+          f"({exec_desc}{shard_desc}, K={args.K}, policy={args.policy}, "
           f"controller={args.theta_controller}, grs={args.grs_impl}, "
           f"R={args.rounds_per_sync}) "
           f"in {dt:.1f}s (includes compile): "
@@ -177,6 +228,14 @@ def run_continuous(args):
           f"mean queue latency {s.mean_queue_latency()*1e3:.0f}ms, "
           f"SLO attainment {s.slo_attainment():.2f}, "
           f"{s.throughput():.2f} samples/s")
+    if args.shards > 1:
+        devs = (list(eng._mesh.devices.flat) if args.dispatch == "fused"
+                else [w.device for w in eng.workers])
+        for w, n, dev in zip(eng.workers, eng.routed_counts, devs):
+            print(f"  shard {w.shard_id}: {n} routed, "
+                  f"{w.stats.retired} retired, "
+                  f"{w.stats.rounds_total} rounds, "
+                  f"budget {w.round_budget}, device {dev}")
     sample = next(iter(out.values()))
     print(f"output {sample.shape} per request, "
           f"finite={bool(np.isfinite(sample).all())}")
@@ -208,9 +267,10 @@ def main():
                     choices=("unpacked", "packed"),
                     help="packed: gather only live verification points into "
                          "a fixed --round-budget model call per round")
-    ap.add_argument("--round-budget", type=int, default=0,
-                    help="packed verification points per round "
-                         "(default: slots * theta, i.e. never binding)")
+    ap.add_argument("--round-budget", default="0",
+                    help="packed verification points per round PER SHARD "
+                         "(default: shard slots * theta, i.e. never "
+                         'binding), or "auto" for live-demand budget tiers')
     ap.add_argument("--allocator", default="waterfill",
                     choices=sorted(ALLOCATORS),
                     help="packed budget split across slots")
@@ -221,6 +281,22 @@ def main():
                     help="speculation rounds fused per device dispatch: an "
                          "integer, or 'auto' to adapt to the observed "
                          "accept rate on a power-of-two ladder")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard-local serving workers; each owns "
+                         "slots/shards lanes pinned to its own device, with "
+                         "requests routed above the compute layer")
+    ap.add_argument("--router", default="least-loaded",
+                    choices=sorted(ROUTERS),
+                    help="sharded serving request router")
+    ap.add_argument("--dispatch", default="per-shard",
+                    choices=("per-shard", "fused"),
+                    help="sharded execution: one program per worker (allows "
+                         "per-shard budget tiers) or ONE fused shard_map "
+                         "program over a slots mesh (one device per shard)")
+    ap.add_argument("--overcommit", type=float, default=1.0,
+                    help="BudgetAware admission multiplexing factor (>= 1): "
+                         "admit until live demand reaches overcommit * "
+                         "round_budget, trading window depth for occupancy")
     args = ap.parse_args()
     if args.engine == "continuous":
         run_continuous(args)

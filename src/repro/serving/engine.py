@@ -7,21 +7,22 @@ fixed-size batches and each batch runs the *fused* batched-ASD program
 (``asd_sample`` under vmap) to completion: every batch is paced by its
 slowest chain and padded lanes burn compute.
 
-``ContinuousASDEngine`` — the continuous-batching engine.  It owns a fixed
-set of *slots* holding vmapped ``ASDChainState``s and drives them in
-device-resident SUPERSTEPS: each dispatch runs ``rounds_per_sync`` fused
-speculation rounds under a ``lax.scan`` (chains that finish mid-superstep
-become masked no-ops, bit-for-bit frozen), with the slot-state pytree
-DONATED to XLA so buffers are reused in place instead of copied per round.
-The host is a lazy scheduler that only intervenes at superstep boundaries:
-it dispatches superstep s+1 immediately, then harvests superstep s's compact
-sync packet (retire flags, counters, samples — one small transfer, no
-per-slot peeks) while the device runs — ``block_until_ready`` never sits on
-the critical path.  A chain that commits its final step retires at the next
-boundary and its slot is refilled from the queue (FCFS, see
-``repro.serving.scheduler``).  Each round is ONE fused (slots x theta)-point
-verification forward — on a mesh it is pjit-sharded over the `data` axis
-(see repro/launch/serve.py).
+``ContinuousASDEngine`` — the continuous-batching engine: ONE
+``repro.serving.worker.ShardWorker`` (which owns the slot batch, the donated
+superstep executables, the sync-packet harvest, and the admission queue)
+plus the host serve loop.  The worker drives device-resident SUPERSTEPS:
+each dispatch runs ``rounds_per_sync`` fused speculation rounds under a
+``lax.scan`` (chains that finish mid-superstep become masked no-ops,
+bit-for-bit frozen), with the slot-state pytree DONATED to XLA so buffers
+are reused in place instead of copied per round.  The host is a lazy
+scheduler that only intervenes at superstep boundaries: it dispatches
+superstep s+1 immediately, then harvests superstep s's compact sync packet
+(retire flags, counters, samples — one small transfer, no per-slot peeks)
+while the device runs — ``block_until_ready`` never sits on the critical
+path.  A chain that commits its final step retires at the next boundary and
+its slot is refilled from the queue (FCFS, see ``repro.serving.scheduler``).
+Each round is ONE fused (slots x theta)-point verification forward — on a
+mesh it is pjit-sharded over the `data` axis (see repro/launch/serve.py).
 
 The continuous engine is parameterized on two pluggable axes:
 
@@ -32,6 +33,11 @@ The continuous engine is parameterized on two pluggable axes:
     queued request takes a freed slot (FCFS / priority / SJF-on-expected-
     rounds / earliest-deadline-first with SLO admission control).
 
+Multi-shard serving — N workers behind a pluggable request router with
+per-shard admission queues and budget rebalancing — lives in
+``repro.serving.sharded.ShardedASDEngine``; with ``shards=1`` it is
+bit-identical to this engine.
+
 Both engines produce per-request ``RequestMetrics`` and an ``EngineStats``
 aggregate (rounds, head calls, accept rate, queue latency, throughput,
 SLO attainment).
@@ -39,52 +45,21 @@ SLO attainment).
 
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.asd import (
-    ASDChainState,
-    asd_sample,
-    asd_superstep,
-    chain_sample,
-    init_chain_state,
-)
-from repro.core.controller import StaticTheta, ThetaController
+from repro.core.asd import asd_sample
 from repro.core.schedules import Schedule
 from repro.core.sequential import sequential_sample, init_y0
 from repro.models.diffusion import DenoiserConfig
-from repro.serving.metrics import EngineStats, RequestMetrics
-from repro.serving.scheduler import (
-    AdmissionContext,
-    SchedulingPolicy,
-    SlotScheduler,
-)
+from repro.serving.metrics import EngineStats
+from repro.serving.worker import Request, ShardWorker
 
-# sync-packet row layout: the (7, S) int32 array each superstep returns next
-# to the new slot states — retire flags, live windows, and the per-chain
-# speculation counters, harvested with ONE host transfer per boundary
-_SYNC_ROWS = ("a", "theta_live", "rounds", "head_calls", "model_evals",
-              "accepts", "proposals")
-
-# the power-of-two ladder auto rounds_per_sync picks from: O(log) compiled
-# superstep variants instead of one per observed value
-_AUTO_MAX_R = 16
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    cond: Optional[np.ndarray] = None  # (d_cond,) or None
-    key: Optional[jax.Array] = None  # per-request PRNG key (else derived)
-    y0: Optional[np.ndarray] = None  # explicit start state (else init_y0)
-    priority: float = 0.0  # Priority policy: higher admits first
-    deadline: Optional[float] = None  # absolute SLO deadline (perf_counter s)
-    expected_accept_rate: Optional[float] = None  # SERR/deadline estimate hint
+__all__ = ["ASDServingEngine", "ContinuousASDEngine", "Request"]
 
 
 # ---------------------------------------------------------------------------
@@ -92,457 +67,20 @@ class Request:
 # ---------------------------------------------------------------------------
 
 
-class ContinuousASDEngine:
-    """Slot-based continuous-batching ASD server.
+class ContinuousASDEngine(ShardWorker):
+    """Slot-based continuous-batching ASD server: one ``ShardWorker`` plus
+    the double-buffered host serve loop.
 
-    Args:
-      model_fn_factory: ``cond -> model_fn`` (or ``(params, cond) ->
-        model_fn`` when ``params`` is given); ``cond`` is a traced (d_cond,)
-        array when ``d_cond > 0``, else ``None``.
-      schedule: the affine step schedule shared by all requests.
-      event_shape: per-chain sample shape.
-      num_slots: vmapped lanes of the per-round program; on a mesh this is
-        the dimension sharded over `data`.
-      theta: speculation window.
-      params: optional model weight pytree, threaded through the per-round
-        jit as an ARGUMENT.  Closure-captured weights would be baked into
-        the executable as constants — re-processed on every standalone
-        round dispatch (a measurable per-round tax on CPU) and forced
-        replicated on a mesh; passing them as an argument keeps their
-        sharding and makes the round program reuse device buffers.
-      state_sharding: optional sharding pytree (matching ``ASDChainState``
-        leaves with a leading slot axis) applied to the slot batch, e.g. from
-        ``repro.distributed.sharding.chain_state_shardings``.
-      controller: per-chain speculation-window controller (theta_live <=
-        theta); a static config closed over by the jitted round, its state
-        rides inside each slot's ``ASDChainState``.  Default: StaticTheta —
-        the constant full-width window, bit-identical to PR-1 behavior.
-      policy: host-side admission policy (``repro.serving.scheduler``):
-        which queued request takes a freed slot, and whether a deadline-
-        carrying request is admitted at all.  Default: FCFS.
-      grs_impl: "core" (pure-jnp verifier) or "kernel" (the Pallas GRS
-        kernel; interpret-mode off-TPU, so CPU serving still works).
-      execution: "unpacked" (one theta_max-shaped lane per slot — the PR-1/2
-        round) or "packed" (``repro.serving.packing``: each round gathers
-        only the LIVE verification points across slots into one
-        ``round_budget``-shaped model call, so small windows free real
-        compute for large ones).  With ``round_budget >= slots * theta``
-        the packed engine is bit-identical to the unpacked one.
-      round_budget: packed execution's verification points per round (>=
-        num_slots; default slots * theta, i.e. never binding).
-      allocator: ``BudgetAllocator`` splitting the budget across slots
-        (default: waterfilling).  Its priority weights come from
-        ``Request.priority`` at admission.
-      pack_impl: "ref" (jnp gather/scatter) or "kernel" (the Pallas pack
-        kernel; interpret-mode off-TPU).
-      rounds_per_sync: speculation rounds fused per device dispatch (the
-        SUPERSTEP length R).  R=1 reproduces the classic one-round-per-
-        dispatch engine; larger R amortizes dispatch + host-sync overhead
-        over R rounds at the cost of retiring (and refilling) slots up to
-        R-1 rounds late.  "auto" picks R per boundary from the observed
-        accept-rate EWMA on a power-of-two ladder: high accept => chains
-        finish fast => small R keeps slot occupancy; low accept => chains
-        run many rounds => large R amortizes the dispatch tax.  Each ladder
-        value compiles once (one executable per (R, budget) pair).
-        Superstep dispatches DONATE the slot-state pytree to XLA, so the
-        full ``ASDChainState`` batch is updated in place instead of copied
-        every round.
-      pipelined: deprecated alias kept for compatibility — ``serve()`` is
-        now always double-buffered (dispatch superstep s+1, then harvest
-        superstep s's sync packet while the device runs); the flag is
-        ignored.
+    All constructor arguments are the worker's — see
+    ``repro.serving.worker.ShardWorker`` for the full reference
+    (controllers, policies, packed execution, budgets, supersteps,
+    overcommit, auto budget tiers).
     """
-
-    def __init__(
-        self,
-        model_fn_factory: Callable,
-        schedule: Schedule,
-        event_shape: tuple,
-        num_slots: int = 8,
-        theta: int = 8,
-        d_cond: int = 0,
-        eager_head: bool = True,
-        noise_mode: str = "buffer",
-        keep_trajectory: bool = False,
-        grs_impl: str = "core",
-        params=None,
-        state_sharding=None,
-        pipelined: bool = False,
-        seed: int = 0,
-        controller: Optional[ThetaController] = None,
-        policy: Optional[SchedulingPolicy] = None,
-        execution: str = "unpacked",
-        round_budget: Optional[int] = None,
-        allocator=None,
-        pack_impl: str = "ref",
-        rounds_per_sync=1,
-    ):
-        self.schedule = schedule
-        self.event_shape = tuple(event_shape)
-        self.num_slots = num_slots
-        self.theta = int(min(theta, schedule.K))
-        self.d_cond = d_cond
-        self.eager_head = eager_head
-        self.noise_mode = noise_mode
-        self.keep_trajectory = keep_trajectory
-        self.grs_impl = grs_impl
-        self.pipelined = pipelined
-        self.controller = controller if controller is not None else StaticTheta()
-        if execution not in ("unpacked", "packed"):
-            raise ValueError(f"unknown execution mode {execution!r}")
-        self.execution = execution
-        self.round_budget = (
-            num_slots * self.theta if round_budget is None else int(round_budget)
-        )
-        if execution == "packed" and self.round_budget < num_slots:
-            raise ValueError(
-                f"round_budget {self.round_budget} < num_slots {num_slots}: "
-                "every live chain needs at least one verification point per "
-                "round to make progress")
-        if rounds_per_sync == "auto":
-            self._auto_rps = True
-            self._rps = 1  # last picked R; refreshed per boundary
-        else:
-            self._auto_rps = False
-            self._rps = int(rounds_per_sync)
-            if self._rps < 1:
-                raise ValueError(
-                    f"rounds_per_sync must be >= 1 or 'auto', got "
-                    f"{rounds_per_sync!r}")
-        self.scheduler = SlotScheduler(num_slots, policy=policy)
-        self.stats = EngineStats()
-        self._key = jax.random.PRNGKey(seed)
-        self._results: dict[int, np.ndarray] = {}
-        self.dropped_rids: list[int] = []
-        # admission-context estimates: EWMAs of accept rate over retired
-        # chains and of observed wall seconds per fused round.  Per-round
-        # EWMA (not total-elapsed / rounds) so compile time and idle gaps
-        # between serve() calls decay out instead of permanently inflating
-        # the deadline policy's service-time estimates.
-        self._accept_ewma = 1.0
-        self._spr_ewma = 0.0
-        # live verification-point demand of the slot batch, refreshed from
-        # the same device sync the retirement scan already pays; feeds the
-        # budget-pressure signal of the admission policies
-        self._live_demand = 0
-        # a fresh chain's opening window (what one admission adds to demand)
-        self._theta_open = int(self.controller.init(self.theta)[1])
-
-        statics = dict(
-            theta=self.theta,
-            eager_head=eager_head,
-            noise_mode=noise_mode,
-            keep_trajectory=keep_trajectory,
-            grs_impl=grs_impl,
-            controller=self.controller,
-        )
-        self._params = params
-        if params is None:
-            make_fn = lambda p, cond: model_fn_factory(cond)
-        else:
-            make_fn = model_fn_factory  # (params, cond) -> model_fn
-
-        if execution == "packed":
-            from repro.serving.packing import (
-                WaterfillingAllocator,
-                packed_superstep,
-            )
-
-            self.allocator = (
-                allocator if allocator is not None
-                else WaterfillingAllocator(theta_max=self.theta)
-            )
-            # bind budget/allocator as locals: adopted programs (see
-            # adopt_programs) must keep the donor's compiled configuration
-            budget, alloc = self.round_budget, self.allocator
-
-            def _run_rounds(states, conds, p, weights, R):
-                return packed_superstep(
-                    make_fn, p, schedule, states, conds, weights,
-                    rounds=R, budget=budget, allocator=alloc,
-                    pack_impl=pack_impl, **statics,
-                )
-
-        else:
-            self.allocator = allocator
-
-            def _run_rounds(states, conds, p, weights, R):
-                def one(st, cond):
-                    return asd_superstep(
-                        make_fn(p, cond), schedule, st, rounds=R, **statics)
-
-                if conds is None:
-                    return jax.vmap(lambda st: one(st, None))(states)
-                return jax.vmap(one)(states, conds)
-
-        K, keep = schedule.K, keep_trajectory
-
-        def _make_superstep(R: int):
-            # R fused rounds per dispatch + the boundary sync packet, built
-            # on the public superstep API (asd_superstep / packed_superstep)
-            # so the engine runs exactly the semantics the bit-exactness
-            # tests pin.  The slot-state pytree is DONATED: XLA aliases the
-            # output state buffers onto the inputs, so a superstep updates
-            # the batch in place instead of allocating a fresh ASDChainState
-            # copy per round.  The sync packet (fresh buffers: stack/gather
-            # outputs) is everything the host needs at the boundary — retire
-            # flags, live windows, counters, and each slot's final sample —
-            # so no separate peek dispatch ever touches the (possibly
-            # already donated-away) states.
-            def _superstep(states, conds, p, weights):
-                states = _run_rounds(states, conds, p, weights, R)
-                info = jnp.stack(
-                    [getattr(states, f).astype(jnp.int32) for f in _SYNC_ROWS]
-                )
-                samples = jax.vmap(
-                    lambda st: chain_sample(st, K, keep))(states)
-                return states, (info, samples)
-
-            return jax.jit(_superstep, donate_argnums=(0,))
-
-        self._make_superstep = _make_superstep
-        # one executable per (R, budget) pair; auto mode draws R from a
-        # power-of-two ladder so this stays O(log) entries
-        self._superstep_fns: dict[int, Callable] = {}
-        self._weights = np.ones((num_slots,), np.float32)
-        # device copy of the allocator weights: updated IN PLACE one lane at
-        # a time when an admission/retire changes a slot's priority — never
-        # re-uploaded wholesale from the host
-        self._weights_dev = jnp.asarray(self._weights)
-
-        def _admit(states, y0s, keys, idxs):
-            # init + scatter for a whole boundary's admissions in ONE
-            # dispatch; states donated — the scatter reuses the slot buffers
-            new_sts = jax.vmap(
-                lambda y0, k: init_chain_state(
-                    schedule, y0, k, self.theta, noise_mode, keep_trajectory,
-                    self.controller,
-                )
-            )(y0s, keys)
-            return jax.tree_util.tree_map(
-                lambda b, n: b.at[idxs].set(n), states, new_sts
-            )
-
-        self._admit_fn = jax.jit(_admit, donate_argnums=(0,))
-
-        # All slots start as already-finished dummy chains: frozen under
-        # asd_round until a real request is admitted over them.
-        K = schedule.K
-        self._states = jax.vmap(
-            lambda k: init_chain_state(
-                schedule, jnp.zeros(self.event_shape), k, self.theta,
-                noise_mode, keep_trajectory, self.controller,
-            )
-        )(jax.random.split(jax.random.PRNGKey(seed), num_slots))
-        self._states = dataclasses.replace(
-            self._states, a=jnp.full((num_slots,), K, jnp.int32)
-        )
-        self._conds = (
-            jnp.zeros((num_slots, d_cond), jnp.float32) if d_cond else None
-        )
-        if state_sharding is not None:
-            self._states = jax.device_put(self._states, state_sharding)
 
     # -- request lifecycle --------------------------------------------------
 
     def submit(self, request: Request) -> None:
         self.scheduler.submit(request, time.perf_counter())
-
-    def _next_key(self) -> jax.Array:
-        self._key, sub = jax.random.split(self._key)
-        return sub
-
-    def _admission_context(self, now: float) -> AdmissionContext:
-        return AdmissionContext(
-            K=self.schedule.K,
-            theta_max=self.theta,
-            accept_rate=self._accept_ewma,
-            seconds_per_round=self._spr_ewma,
-            now=now,
-            round_budget=self.round_budget,
-            live_demand=self._live_demand,
-            theta_open=self._theta_open,
-            rounds_per_sync=self._rps,
-        )
-
-    # -- superstep machinery -------------------------------------------------
-
-    def _get_superstep(self, R: int):
-        fn = self._superstep_fns.get(R)
-        if fn is None:
-            fn = self._superstep_fns[R] = self._make_superstep(R)
-        return fn
-
-    def _pick_rounds(self) -> int:
-        """The superstep length for the next dispatch.
-
-        Fixed mode returns the configured R.  Auto mode sizes R to the
-        accept-rate EWMA: a fresh chain is expected to run about
-        K / E[advance] rounds (geometric accept model, the same estimate the
-        deadline policy uses); R is chosen so a chain that retires
-        mid-superstep idles its slot for at most ~1/8 of that service time,
-        then snapped DOWN to the power-of-two ladder so only O(log) superstep
-        programs ever compile.
-        """
-        if not self._auto_rps:
-            return self._rps
-        p = min(max(self._accept_ewma, 0.0), 0.999)
-        adv = (1.0 - p ** self.theta) / max(1.0 - p, 1e-3)
-        exp_rounds = self.schedule.K / max(adv, 1.0)
-        target = max(1, int(exp_rounds / 8.0))
-        R = 1
-        while R * 2 <= min(target, _AUTO_MAX_R):
-            R *= 2
-        self._rps = R
-        return R
-
-    def _set_weight(self, slot: int, w: float) -> None:
-        """One-lane device update of the allocator priority weights — no
-        full host->device re-upload on the admission/retire paths."""
-        if self._weights[slot] != w:
-            self._weights[slot] = w
-            self._weights_dev = self._weights_dev.at[slot].set(w)
-
-    def _observe_round_time(self, dt: float) -> None:
-        # cold (compiling) dispatches never reach here — see
-        # _dispatch_superstep — so the EWMA only sees real round walls
-        self._spr_ewma = dt if self._spr_ewma == 0.0 else (
-            0.7 * self._spr_ewma + 0.3 * dt)
-
-    def _admit_pending(self) -> None:
-        now = time.perf_counter()
-        placed = self.scheduler.admit(
-            now, self.stats.rounds_total, self._admission_context(now)
-        )
-        for entry in self.scheduler.drain_dropped():
-            self.stats.observe_drop()
-            self.dropped_rids.append(entry.request.rid)
-        if not placed:
-            return
-        idxs, y0s, keys = [], [], []
-        conds = np.array(self._conds) if self.d_cond else None
-        for slot, req in placed:
-            key = req.key if req.key is not None else self._next_key()
-            if req.y0 is not None:
-                y0 = jnp.asarray(req.y0, jnp.float32)
-            else:
-                key, k0 = jax.random.split(key)
-                y0 = init_y0(self.schedule, k0, self.event_shape)
-            idxs.append(slot)
-            y0s.append(y0)
-            keys.append(key)
-            if self.d_cond:
-                conds[slot] = 0.0 if req.cond is None else np.asarray(
-                    req.cond, np.float32)
-            # allocator priority weight: 1 + the request's priority (>= a
-            # small floor so zero/negative priorities still get budget)
-            self._set_weight(
-                slot,
-                max(1.0 + float(getattr(req, "priority", 0.0) or 0.0), 0.1))
-            # a fresh chain opens at the controller's initial window: count
-            # it into the live demand the budget-pressure signal sees
-            self._live_demand += self._theta_open
-            self.stats.requests += 1
-        # pad the admission batch to a power of two (duplicate scatter of the
-        # same record is a no-op) so the jitted program has O(log S) variants
-        n = len(idxs)
-        width = 1
-        while width < n:
-            width *= 2
-        while len(idxs) < width:
-            idxs.append(idxs[0])
-            y0s.append(y0s[0])
-            keys.append(keys[0])
-        self._states = self._admit_fn(
-            self._states, jnp.stack(y0s), jnp.stack(keys),
-            jnp.asarray(idxs, jnp.int32),
-        )
-        if self.d_cond:
-            self._conds = jnp.asarray(conds)
-
-    def _dispatch_superstep(self):
-        """Admit at the boundary, launch one superstep, return its pending
-        harvest record (sync packet + the round count it reflects)."""
-        self._admit_pending()
-        R = self._pick_rounds()
-        fn = self._get_superstep(R)
-        # a cold executable means THIS call pays the jit compile: keep that
-        # one-off out of dispatch_s and the seconds-per-round EWMA, or (in
-        # auto mode especially, which compiles ladder entries mid-traffic)
-        # the deadline policy's service-time estimate balloons and drops
-        # meetable requests — and drops are final.  _cache_size is a private
-        # jax accessor: degrade to "warm" if an upgrade drops it
-        cold = getattr(fn, "_cache_size", lambda: 1)() == 0
-        t0 = time.perf_counter()
-        self._states, sync = fn(
-            self._states, self._conds, self._params, self._weights_dev)
-        if not cold:
-            self.stats.dispatch_s += time.perf_counter() - t0
-        self.stats.rounds_total += R
-        self.stats.supersteps += 1
-        return (sync, self.stats.rounds_total, R, t0, cold)
-
-    def _harvest(self, pending) -> None:
-        """Consume one superstep's sync packet: retire every chain that
-        finished during it (flags, counters, AND samples ride in the packet
-        — no peek dispatch against possibly-donated state buffers), refresh
-        the budget-pressure signal, and update the service-time EWMAs.
-
-        ``snapshot_rounds`` is the engine round count the packet reflects:
-        slots admitted at or after it hold a chain NOT yet present in the
-        packet (whose lane still shows the previous, finished occupant) and
-        must not be retired against it — the double-buffered loop harvests
-        packets one superstep behind the dispatch frontier.
-        """
-        sync, snapshot_rounds, R, t_dispatch, cold = pending
-        info_dev, samples_dev = sync
-        t0 = time.perf_counter()
-        jax.block_until_ready(info_dev)  # waits on the device, off-path in
-        t1 = time.perf_counter()         # serve()'s double-buffered loop
-        self.stats.device_s += t1 - t0
-        info = np.asarray(jax.device_get(info_dev))
-        row = {name: info[i] for i, name in enumerate(_SYNC_ROWS)}
-        a, theta_live = row["a"], row["theta_live"]
-        now = time.perf_counter()
-        K = self.schedule.K
-        # refresh the budget-pressure signal off the sync we already pay:
-        # live demand = sum over active slots of min(theta_live, K - a)
-        occupied = np.zeros((self.num_slots,), bool)
-        occupied[self.scheduler.active_slots()] = True
-        live = occupied & (a < K)
-        self._live_demand = int(
-            np.minimum(theta_live[live], (K - a)[live]).sum())
-        finished = [
-            slot for slot in self.scheduler.active_slots()
-            if self.scheduler.slot_info(slot).admit_round < snapshot_rounds
-            and a[slot] >= K
-        ]
-        if finished:
-            samples = np.asarray(jax.device_get(samples_dev))
-            for slot in finished:
-                sinfo = self.scheduler.retire(slot)
-                self._set_weight(slot, 1.0)
-                self._results[sinfo.request.rid] = np.asarray(samples[slot])
-                deadline = getattr(sinfo.request, "deadline", None)
-                rm = RequestMetrics(
-                    rid=sinfo.request.rid,
-                    queue_latency=sinfo.admit_time - sinfo.submit_time,
-                    service_time=now - sinfo.admit_time,
-                    rounds=int(row["rounds"][slot]),
-                    head_calls=int(row["head_calls"][slot]),
-                    model_evals=int(row["model_evals"][slot]),
-                    accepts=int(row["accepts"][slot]),
-                    proposals=int(row["proposals"][slot]),
-                    deadline=deadline,
-                    slo_met=None if deadline is None else now <= deadline,
-                )
-                self.stats.observe(rm)
-                # EWMA over retired chains feeds SERR/deadline estimates
-                self._accept_ewma = (
-                    0.8 * self._accept_ewma + 0.2 * rm.accept_rate)
-        self.stats.host_sync_s += time.perf_counter() - t1
-        if not cold:  # a cold dispatch's elapsed time is mostly jit compile
-            self._observe_round_time((time.perf_counter() - t_dispatch) / R)
 
     def step(self) -> bool:
         """Admit, run ONE superstep (``rounds_per_sync`` fused rounds) over
@@ -595,20 +133,7 @@ class ContinuousASDEngine:
             pending = nxt
         jax.block_until_ready(self._states.a)
         self.stats.wall_time += time.perf_counter() - t0
-        out, self._results = self._results, {}
-        return out
-
-    def adopt_programs(self, warm: "ContinuousASDEngine") -> "ContinuousASDEngine":
-        """Share a warm engine's compiled programs (same statics/shapes):
-        benchmarks build fresh engines per repeat without re-paying jit."""
-        self._make_superstep = warm._make_superstep
-        self._superstep_fns = warm._superstep_fns
-        self._admit_fn = warm._admit_fn
-        return self
-
-    def chain_state(self, slot: int) -> ASDChainState:
-        """Debug view of one slot's resumable state."""
-        return jax.tree_util.tree_map(lambda x: x[slot], self._states)
+        return self.drain_results()
 
 
 # ---------------------------------------------------------------------------

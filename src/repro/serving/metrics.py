@@ -7,13 +7,18 @@ chain's counters while its slot waits to be retired.
 
 ``EngineStats`` aggregates across requests and keeps the engine-level counters
 (fused rounds driven, wall time) that the throughput benchmark and the
-system tests read.
+system tests read.  In a sharded deployment each ``ShardWorker`` keeps its
+own ``EngineStats`` (stamped with its ``shard`` id) and the front end
+presents ``EngineStats.merged(...)`` — counters and timing components SUM
+across shards (shards burn host/device time independently), while
+``wall_time`` is the front end's single wall clock (shards run
+concurrently, so summing their walls would double-count real time).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 
 @dataclasses.dataclass
@@ -75,7 +80,34 @@ class EngineStats:
     dropped: int = 0  # rejected at admission (SLO admission control)
     slo_tracked: int = 0  # retired requests that carried a deadline
     slo_met_count: int = 0
+    shard: Optional[int] = None  # worker's shard id (None: unsharded/merged)
     per_request: List[RequestMetrics] = dataclasses.field(default_factory=list)
+
+    # every additive counter/timer `merged` sums across shards; wall_time is
+    # deliberately absent (concurrent shards share one wall clock)
+    _MERGE_SUM = (
+        "requests", "retired", "batches", "rounds_total", "supersteps",
+        "dispatch_s", "device_s", "host_sync_s", "head_calls_total",
+        "model_evals_total", "accepts_total", "proposals_total",
+        "queue_latency_total", "dropped", "slo_tracked", "slo_met_count",
+    )
+
+    @classmethod
+    def merged(cls, shards: Sequence["EngineStats"],
+               wall_time: Optional[float] = None) -> "EngineStats":
+        """Cross-shard view: counters and timing components sum, per-request
+        metrics concatenate, ``wall_time`` is the caller's single front-end
+        wall (default: the max over shards — concurrent workers overlap, so
+        their walls must not be added)."""
+        m = cls()
+        for s in shards:
+            for f in cls._MERGE_SUM:
+                setattr(m, f, getattr(m, f) + getattr(s, f))
+            m.per_request.extend(s.per_request)
+        m.wall_time = (
+            wall_time if wall_time is not None
+            else max((s.wall_time for s in shards), default=0.0))
+        return m
 
     def observe(self, rm: RequestMetrics) -> None:
         self.retired += 1

@@ -29,8 +29,16 @@ from repro.serving.packing.allocator import (
     WaterfillingAllocator,
     make_allocator,
 )
-from repro.serving.packing.plan import PackedRoundPlan, build_pack_maps
-from repro.serving.packing.round import packed_round, packed_superstep
+from repro.serving.packing.plan import (
+    PackedRoundPlan,
+    build_pack_maps,
+    build_sharded_pack_maps,
+)
+from repro.serving.packing.round import (
+    packed_round,
+    packed_superstep,
+    sharded_packed_superstep,
+)
 
 __all__ = [
     "ALLOCATORS",
@@ -41,6 +49,8 @@ __all__ = [
     "make_allocator",
     "PackedRoundPlan",
     "build_pack_maps",
+    "build_sharded_pack_maps",
     "packed_round",
     "packed_superstep",
+    "sharded_packed_superstep",
 ]

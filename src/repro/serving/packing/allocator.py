@@ -70,6 +70,20 @@ class BudgetAllocator:
         """demand: (S,) i32 >= 0; weights: (S,) f32 > 0 -> grants (S,) i32."""
         raise NotImplementedError
 
+    def allocate_sharded(self, demand: jax.Array, budgets: jax.Array,
+                         weights: jax.Array) -> jax.Array:
+        """Shard axis: demand/weights (num_shards, S_local), budgets
+        (num_shards,) -> grants (num_shards, S_local).
+
+        A pure vmap of ``allocate`` over the leading shard axis: each
+        shard's grants depend ONLY on its own demands, weights, and its own
+        per-shard budget — the front end can rebalance the budget vector at
+        a superstep boundary without coupling shards inside the jitted
+        round, and under ``shard_map`` each device allocates exactly its
+        local shard.  All three policies are pure jnp in the budget, so a
+        traced per-shard budget scalar vmaps like any other operand."""
+        return jax.vmap(self.allocate)(demand, budgets, weights)
+
 
 @dataclasses.dataclass(frozen=True)
 class ProportionalAllocator(BudgetAllocator):

@@ -65,3 +65,21 @@ def build_pack_maps(grants: jax.Array, budget: int) -> PackedRoundPlan:
         step_id=step_id,
         valid=valid,
     )
+
+
+def build_sharded_pack_maps(grants: jax.Array, budget: int) -> PackedRoundPlan:
+    """Shard axis: grants (num_shards, S_local) -> a ``PackedRoundPlan``
+    whose every leaf carries a leading shard axis.
+
+    Each shard's maps are built independently over ITS OWN grant row, so
+    ``slot_id`` is SHARD-LOCAL — always in [0, S_local) — and a gather
+    driven by these maps can only address rows of its own shard's window
+    table.  That is the topology contract of sharded serving: pack maps
+    provably never index across a shard boundary (asserted in
+    tests/test_sharded_serving.py), so on a mesh where each shard's slots
+    live on one device the packed gather never becomes a cross-device (or
+    cross-host) collective.  Pure vmap of ``build_pack_maps``: under
+    ``shard_map`` over a ``slots`` mesh axis the vmap dimension disappears
+    and each device builds exactly its local map.
+    """
+    return jax.vmap(lambda g: build_pack_maps(g, budget))(grants)

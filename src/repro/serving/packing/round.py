@@ -228,3 +228,75 @@ def packed_superstep(
 
     states, _ = jax.lax.scan(body, states, None, length=int(rounds))
     return states
+
+
+def sharded_packed_superstep(
+    make_fn: Callable,
+    params,
+    schedule: Schedule,
+    states,  # stacked (num_shards, S_local, ...) on every leaf
+    conds: Optional[jax.Array],  # (num_shards, S_local, d_cond) or None
+    weights: jax.Array,  # (num_shards, S_local)
+    *,
+    mesh,
+    rounds: int,
+    theta: int,
+    budget: int,
+    allocator,
+    eager_head: bool = True,
+    noise_mode: str = "buffer",
+    keep_trajectory: bool = False,
+    grs_impl: str = "core",
+    controller: ThetaController = _STATIC,
+    pack_impl: str = "ref",
+    axis_name: str = "slots",
+):
+    """Every shard's packed superstep in ONE dispatch, via ``shard_map``
+    over a ``slots``-sharded mesh (``repro.distributed.sharding.slots_mesh``
+    / ``shard_pspecs``).
+
+    The stacked slot batch (leading shard axis) is mapped over the mesh's
+    ``slots`` axis: each device sees only ITS shard's (S_local, ...) block
+    and runs the ordinary ``packed_superstep`` on it — the allocator splits
+    the PER-SHARD ``budget`` over local demands and the pack maps address
+    only local rows.  Because the body is manual-mode SPMD with no
+    collectives, cross-shard communication is impossible by construction:
+    growing the mesh can never turn the packed gather into a cross-device
+    (or cross-host) all-gather.  ``params`` are replicated (spec ``P()``).
+
+    Bit-identical to looping ``packed_superstep`` over the shard axis on one
+    device (tests/test_sharded_serving.py), with ``shard_map``'s constraint
+    that all shards share one static (rounds, budget, S_local, theta) tuple
+    — per-shard budget TIERS need the per-worker dispatch path
+    (``repro.serving.sharded.ShardedASDEngine``).  On CPU, simulate devices
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import get_shard_map
+
+    shard_map = get_shard_map()
+
+    def one_shard(p, st, w, cond):
+        # inside shard_map the shard axis has local size 1: peel it, run the
+        # ordinary per-shard superstep, and put it back for the out_spec
+        st1 = jax.tree_util.tree_map(lambda x: x[0], st)
+        out = packed_superstep(
+            make_fn, p, schedule, st1,
+            None if cond is None else cond[0], w[0],
+            rounds=rounds, theta=theta, budget=budget, allocator=allocator,
+            eager_head=eager_head, noise_mode=noise_mode,
+            keep_trajectory=keep_trajectory, grs_impl=grs_impl,
+            controller=controller, pack_impl=pack_impl,
+        )
+        return jax.tree_util.tree_map(lambda x: x[None], out)
+
+    sh, rep = P(axis_name), P()
+    if conds is None:
+        fn = shard_map(
+            lambda p, st, w: one_shard(p, st, w, None), mesh=mesh,
+            in_specs=(rep, sh, sh), out_specs=sh, check_rep=False)
+        return fn(params, states, weights)
+    fn = shard_map(one_shard, mesh=mesh, in_specs=(rep, sh, sh, sh),
+                   out_specs=sh, check_rep=False)
+    return fn(params, states, weights, conds)

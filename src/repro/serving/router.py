@@ -1,0 +1,106 @@
+"""Request routers: which shard's admission queue a request joins.
+
+A sharded deployment (``repro.serving.sharded.ShardedASDEngine``) runs N
+shard-local workers, each with its own slot sub-batch, verification budget,
+and ``SlotScheduler`` queue.  Routing sits ABOVE the compute layer: a router
+only picks a shard index at submit time — it never reorders a shard's queue
+(that is the per-shard ``SchedulingPolicy``'s job) and never touches the
+device program, so every router serves bit-identical samples for
+key-carrying requests.
+
+Routers are pluggable exactly like scheduling policies:
+
+  ``RoundRobin``    cycle shards in submit order — the stateless baseline;
+      perfectly fair on homogeneous traffic, oblivious to skew.
+  ``LeastLoaded``   send each request to the shard with the lowest load
+      (busy slots + queued requests, in units of full slot batches).  The
+      default: a stream of long-running chains skewing one shard gets
+      rebalanced request by request.
+  ``DeadlineAware`` deadline-carrying requests go least-loaded (shortest
+      expected wait); best-effort traffic packs onto the busiest shard that
+      still has free slots, keeping lightly-loaded shards clear so the next
+      urgent arrival finds a short queue.
+
+The worker interface a router sees is duck-typed: anything with a ``load``
+float (0 = idle, 1 = all slots busy, > 1 = queueing) and a ``scheduler``
+exposing ``queue_depth``/``free_slots()`` — ``repro.serving.worker
+.ShardWorker`` in production, plain stubs in tests.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+
+class Router:
+    """Picks the shard whose admission queue a request joins."""
+
+    name = "base"
+
+    def route(self, request: Any, workers: Sequence[Any]) -> int:
+        raise NotImplementedError
+
+
+class RoundRobin(Router):
+    """Cycle shards in submit order (stateful cursor, O(1))."""
+
+    name = "round-robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def route(self, request, workers):
+        shard = self._next % len(workers)
+        self._next = (shard + 1) % len(workers)
+        return shard
+
+
+class LeastLoaded(Router):
+    """Lowest (busy slots + queue depth) / num_slots first; ties break to
+    the lowest shard index, keeping shards=1 routing trivially stable."""
+
+    name = "least-loaded"
+
+    def route(self, request, workers):
+        return min(range(len(workers)), key=lambda i: (workers[i].load, i))
+
+
+class DeadlineAware(Router):
+    """Reserve headroom for urgent traffic.
+
+    Deadline-carrying requests route least-loaded (their expected wait is
+    the queue they join).  Best-effort requests pack onto the most-loaded
+    shard that is not yet saturated (load < 1: slots or same-boundary
+    admissions still available) — concentrating slack traffic so at least
+    one shard stays shallow for the next deadline arrival; once every shard
+    is saturated they fall back to least-loaded (shortest queue).
+    """
+
+    name = "deadline"
+
+    def route(self, request, workers):
+        order = sorted(range(len(workers)),
+                       key=lambda i: (workers[i].load, i))
+        if getattr(request, "deadline", None) is not None:
+            return order[0]
+        for i in reversed(order):  # most-loaded first
+            if workers[i].load < 1.0:
+                return i
+        return order[0]
+
+
+ROUTERS = {
+    "round-robin": RoundRobin,
+    "least-loaded": LeastLoaded,
+    "deadline": DeadlineAware,
+}
+
+
+def make_router(name: str, **kwargs) -> Router:
+    """CLI-facing factory: ``make_router("least-loaded")``."""
+    try:
+        return ROUTERS[name](**kwargs)
+    except KeyError:
+        raise ValueError(
+            f"unknown router {name!r}; have {sorted(ROUTERS)}"
+        ) from None

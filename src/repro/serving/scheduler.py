@@ -85,6 +85,13 @@ class AdmissionContext:
     # quantize to multiples of this (see expected_service_time) and a freed
     # slot refills up to rounds_per_sync - 1 rounds late.
     rounds_per_sync: int = 1
+    # slot overcommit factor (>= 1): how far past the budget's nominal
+    # concurrency (round_budget // theta_max full-width chains) the engine
+    # wants admission to multiplex.  Only BudgetAware reads it — at 1 the
+    # policy keeps live demand within the budget; at c it admits until
+    # demand reaches c * budget, trading per-chain window depth for slot
+    # occupancy (a queueing win under bursty arrivals).
+    overcommit: float = 1.0
 
     @property
     def budget_pressure(self) -> float:
@@ -217,6 +224,13 @@ class BudgetAware(SchedulingPolicy):
     remaining headroom covers.  Deferred requests stay queued (never
     dropped), and an idle engine always admits at least one request, so the
     engine cannot stall.
+
+    The engine's ``overcommit`` factor (``AdmissionContext.overcommit``)
+    scales the target: at overcommit c the policy admits until live demand
+    reaches ``c * pressure_target * budget``, letting ``num_slots`` exceed
+    the budget's nominal full-width concurrency (``round_budget //
+    theta_max``) — the allocator then multiplexes the admitted chains over
+    the fixed budget with trimmed windows instead of leaving slots idle.
     """
 
     name = "budget"
@@ -227,8 +241,9 @@ class BudgetAware(SchedulingPolicy):
     def admit_quota(self, n_free, ctx):
         if ctx.round_budget <= 0:  # unpacked engine without budget info
             return n_free
-        headroom = (self.pressure_target - ctx.budget_pressure
-                    ) * ctx.round_budget
+        target = self.pressure_target * max(
+            getattr(ctx, "overcommit", 1.0), 1.0)
+        headroom = (target - ctx.budget_pressure) * ctx.round_budget
         # price each admission at the controller's opening window, not the
         # cap — a small-opening controller admits proportionally more
         quota = int(headroom // max(ctx.theta_open or ctx.theta_max, 1))

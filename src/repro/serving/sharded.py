@@ -1,0 +1,509 @@
+"""Sharded continuous-batching ASD serving: shard-local workers behind a
+request router, with per-shard admission queues and budget rebalancing.
+
+Topology::
+
+            submit(request)
+                  |
+               Router          (round-robin / least-loaded / deadline —
+                  |             repro.serving.router; host-side only)
+        +---------+---------+
+        |         |         |
+    ShardWorker ShardWorker ShardWorker      repro.serving.worker
+     queue 0     queue 1     queue 2         per-shard SlotScheduler
+     slots 0     slots 1     slots 2         per-shard ASDChainState batch
+     budget 0    budget 1    budget 2        per-shard round_budget tier
+        |         |         |
+     device 0  device 1  device 2            shard_placements(...)
+
+Every worker is a self-contained shard: its packed rounds gather
+verification points only across ITS OWN slots (pack maps are shard-local by
+construction — no cross-shard, and on a real mesh no cross-host, gathers),
+and its admission queue defers or drops under ITS OWN budget pressure.
+
+Two dispatch shapes drive the shards:
+
+  ``dispatch="per-shard"``   each worker launches its own superstep program
+      (the serve loop dispatches all shards back-to-back before harvesting
+      any); shards may run DIFFERENT budget tiers and superstep lengths and
+      live on any device layout.
+  ``dispatch="fused"``       every shard's superstep runs in ONE
+      ``shard_map`` program over a ``slots``-sharded mesh (one device per
+      shard): the slot state lives stacked and sharded, XLA executes the
+      per-shard programs concurrently across devices, and the boundary
+      costs ONE dispatch + ONE sync however many shards there are — the
+      shape that scales on a pod and under CPU multi-device simulation.
+      Requires a common (rounds_per_sync, round_budget) across shards.
+
+Exactness: routing and sharding are pure host-side scheduling.  A chain's
+trajectory depends only on its own ``ASDChainState`` (per-request key), so a
+key-carrying request serves the SAME bits whatever shard it lands on —
+``ShardedASDEngine(shards=1)`` is bit-identical to ``ContinuousASDEngine``
+(same worker core, same loop), and shards=2/4 reproduce the single-shard
+samples per request whenever grants equal demands (unpacked execution, or
+packed at covering budgets; a BINDING budget couples a chain's effective
+windows to its co-resident chains, which shard placement changes).
+
+Budget rebalancing: each worker re-picks its ``round_budget`` at superstep
+boundaries from its own live-demand EWMA on a power-of-two ladder with
+hysteresis (``round_budget="auto"`` — see ``ShardWorker._pick_budget``), so
+a shard whose chains are closing their windows hands compute back without
+any cross-shard coordination; executables are shared across shards from one
+per-(R, budget) cache.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.metrics import EngineStats
+from repro.serving.router import LeastLoaded, Router
+from repro.serving.worker import _SYNC_ROWS, Request, ShardWorker
+
+__all__ = ["ShardedASDEngine"]
+
+
+class ShardedASDEngine:
+    """N shard-local ``ShardWorker``s behind a pluggable ``Router``.
+
+    Arguments mirror ``ContinuousASDEngine`` (they are forwarded to every
+    worker) plus the sharding front end:
+
+      shards: number of shard-local workers.  ``num_slots`` is the TOTAL
+        slot count and must divide evenly (each worker gets
+        ``num_slots // shards`` lanes).
+      router: ``repro.serving.router.Router`` picking the shard a submitted
+        request joins (default: least-loaded).
+      dispatch: ``"per-shard"`` (default) launches each worker's superstep
+        as its own device program — shards may run different budget tiers
+        and superstep lengths, and live on any device layout.
+        ``"fused"`` runs EVERY shard's superstep in ONE ``shard_map``
+        dispatch over a ``slots``-sharded mesh (one device per shard,
+        needs ``len(devices) >= shards``): the slot state lives stacked
+        (shards, slots_local, ...) and XLA executes the per-shard programs
+        concurrently across devices — the dispatch shape that actually
+        scales on a pod (and on CPU multi-device simulation), at the cost
+        of one common (rounds_per_sync, round_budget) across shards
+        (``round_budget="auto"`` therefore requires per-shard dispatch).
+        Both modes run the identical per-shard math — bit-identical
+        samples (asserted in tests).
+      devices: optional explicit per-shard device list (e.g. from
+        ``repro.distributed.sharding.shard_placements``).  Default: with
+        multiple shards and multiple local devices, shard i is pinned to
+        device i (round-robin); single-shard engines stay unpinned so
+        ``shards=1`` is bit-identical to ``ContinuousASDEngine``.
+      round_budget: PER-SHARD verification budget (packed execution): each
+        shard's round is one budget-shaped model call over its own slots.
+        ``"auto"`` turns on per-shard tier rebalancing.
+      seed: worker i derives its PRNG stream from ``seed + 1000003 * i`` (so
+        shard 0 matches the single-shard engine bit for bit); requests that
+        carry their own key are unaffected.
+
+    Compiled programs are shared: workers 1.. adopt worker 0's
+    per-(R, budget) executable cache, so N shards with identical shapes
+    compile once.
+    """
+
+    def __init__(
+        self,
+        model_fn_factory,
+        schedule,
+        event_shape,
+        num_slots: int = 8,
+        *,
+        shards: int = 1,
+        router: Optional[Router] = None,
+        dispatch: str = "per-shard",
+        devices: Optional[list] = None,
+        seed: int = 0,
+        **worker_kwargs,
+    ):
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if num_slots % shards:
+            raise ValueError(
+                f"num_slots {num_slots} must divide evenly over {shards} "
+                f"shards (each worker owns an equal slot sub-batch)")
+        if dispatch not in ("per-shard", "fused"):
+            raise ValueError(f"unknown dispatch mode {dispatch!r}")
+        self.num_shards = shards
+        self.num_slots = num_slots
+        self.dispatch = dispatch
+        slots_local = num_slots // shards
+        self.router = router if router is not None else LeastLoaded()
+        fused = dispatch == "fused"
+        if fused and worker_kwargs.get("round_budget") == "auto":
+            raise ValueError(
+                'round_budget="auto" (per-shard budget tiers) requires '
+                'dispatch="per-shard": one fused shard_map program cannot '
+                "give shards different static budgets")
+        if devices is None and shards > 1 and not fused:
+            local = jax.devices()
+            if len(local) > 1:
+                devices = [local[i % len(local)] for i in range(shards)]
+        if devices is not None and len(devices) < shards:
+            raise ValueError(
+                f"devices list ({len(devices)}) shorter than shards ({shards})")
+
+        self.workers: List[ShardWorker] = []
+        for i in range(shards):
+            w = ShardWorker(
+                model_fn_factory, schedule, event_shape,
+                num_slots=slots_local,
+                seed=seed if i == 0 else seed + 1000003 * i,
+                device=None if (devices is None or fused) else devices[i],
+                shard_id=i,
+                **worker_kwargs,
+            )
+            if i > 0:  # one per-(R, budget) executable pool for all shards
+                w.adopt_programs(self.workers[0])
+            self.workers.append(w)
+        self.schedule = schedule
+        self.theta = self.workers[0].theta
+        self.dropped_rids: list[int] = []
+        self._wall_time = 0.0
+        self._routed = np.zeros((shards,), np.int64)  # router audit trail
+        if fused:
+            self._init_fused(devices)
+
+    # -- fused dispatch: all shards in ONE shard_map program ----------------
+
+    def _init_fused(self, devices) -> None:
+        """Stack the workers' slot states into one (shards, slots_local, ...)
+        pytree sharded over a ``slots`` mesh; workers keep all HOST state
+        (queues, stats, weights, results) while the engine owns the device
+        state and the fused executables."""
+        from repro.distributed.sharding import shard_pspecs, slots_mesh
+
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        w0 = self.workers[0]
+        self._mesh = slots_mesh(self.num_shards, devices)
+        self._sharding = shard_pspecs(self._mesh)
+        if w0._params is not None:
+            # the fused program declares params replicated over the slots
+            # mesh (in_specs P()); weights arriving on a DIFFERENT device
+            # set (e.g. model-sharded over a bigger serving mesh) would be
+            # incompatible inside one jit — re-place them here.  Sharding
+            # weights WITHIN a shard needs a (slots, model) mesh: ROADMAP.
+            rep_params = jax.device_put(
+                w0._params, NamedSharding(self._mesh, P()))
+            for w in self.workers:
+                w._params = rep_params
+        stacked = jax.tree_util.tree_map(
+            lambda *x: jnp.stack(x), *[w._states for w in self.workers])
+        self._states = jax.device_put(
+            stacked, shard_pspecs(self._mesh, stacked))
+        self._conds = None
+        self._conds_host = None
+        if w0.d_cond:
+            self._conds_host = np.zeros(
+                (self.num_shards, w0.num_slots, w0.d_cond), np.float32)
+            self._conds = jax.device_put(
+                jnp.asarray(self._conds_host), self._sharding)
+        for w in self.workers:  # fused reads only the host weight copies
+            w._device_weights_live = False
+        self._weights_versions = [-1] * self.num_shards
+        self._weights_stacked = None
+        self._refresh_weights()
+        self._fused_fns: dict = {}
+
+        from repro.core.asd import init_chain_state
+
+        S_local, shards = w0.num_slots, self.num_shards
+        schedule, theta = w0.schedule, w0.theta
+        noise_mode, keep = w0.noise_mode, w0.keep_trajectory
+        controller = w0.controller
+
+        def _admit(states, y0s, keys, flat_idxs):
+            # one boundary's admissions for ALL shards: flatten the shard
+            # axis, scatter, restore — states donated, sharding re-pinned
+            # by out_shardings so the scatter cannot silently replicate
+            new = jax.vmap(
+                lambda y0, k: init_chain_state(
+                    schedule, y0, k, theta, noise_mode, keep, controller)
+            )(y0s, keys)
+            flat = jax.tree_util.tree_map(
+                lambda x: x.reshape((shards * S_local,) + x.shape[2:]), states)
+            upd = jax.tree_util.tree_map(
+                lambda b, n: b.at[flat_idxs].set(n), flat, new)
+            return jax.tree_util.tree_map(
+                lambda x: x.reshape((shards, S_local) + x.shape[1:]), upd)
+
+        self._fused_admit = jax.jit(
+            _admit, donate_argnums=(0,),
+            out_shardings=jax.tree_util.tree_map(
+                lambda _: self._sharding, self._states))
+
+    def _refresh_weights(self) -> None:
+        """Restack the per-shard allocator weights when any worker changed
+        one — a tiny (shards, slots_local) upload, only on change."""
+        versions = [w._weights_version for w in self.workers]
+        if versions != self._weights_versions:
+            self._weights_versions = versions
+            self._weights_stacked = jax.device_put(
+                jnp.asarray(np.stack([w._weights for w in self.workers])),
+                self._sharding)
+
+    def _get_fused_superstep(self, R: int, budget):
+        key = (R, budget)
+        fn = self._fused_fns.get(key)
+        if fn is not None:
+            return fn
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.asd import chain_sample
+
+        from repro.distributed.sharding import get_shard_map
+
+        w0 = self.workers[0]
+        K, keep = w0.schedule.K, w0.keep_trajectory
+        shard_map = get_shard_map()
+
+        def one_shard(st, cond, w, p):
+            # inside shard_map the shard axis has local size 1: peel it,
+            # run this shard's superstep via the worker's ONE parameterized
+            # body (_run_rounds — the same packed_superstep/asd_superstep
+            # code the per-shard dispatch and the standalone
+            # sharded_packed_superstep run, so all three stay bit-aligned),
+            # re-stack for the out_specs.  Pack maps address only this
+            # shard's rows.
+            st1 = jax.tree_util.tree_map(lambda x: x[0], st)
+            c1 = None if cond is None else cond[0]
+            out = w0._run_rounds(st1, c1, p, w[0], R, budget)
+            info = jnp.stack(
+                [getattr(out, f).astype(jnp.int32) for f in _SYNC_ROWS])
+            samples = jax.vmap(lambda s: chain_sample(s, K, keep))(out)
+            add = jax.tree_util.tree_map(lambda x: x[None], out)
+            return add, info[None], samples[None]
+
+        sh, rep = P("slots"), P()
+        if self._conds is None:
+            body = shard_map(
+                lambda st, w, p: one_shard(st, None, w, p), mesh=self._mesh,
+                in_specs=(sh, sh, rep), out_specs=(sh, sh, sh),
+                check_rep=False)
+
+            def fused(states, conds, p, weights):
+                return body(states, weights, p)
+        else:
+            body = shard_map(
+                one_shard, mesh=self._mesh,
+                in_specs=(sh, sh, sh, rep), out_specs=(sh, sh, sh),
+                check_rep=False)
+
+            def fused(states, conds, p, weights):
+                return body(states, conds, weights, p)
+
+        fn = self._fused_fns[key] = jax.jit(fused, donate_argnums=(0,))
+        return fn
+
+    def _dispatch_fused(self):
+        """One boundary for every shard: run each worker's admission policy,
+        scatter ALL placed chains in one fused dispatch, then launch ONE
+        shard_map superstep covering every shard."""
+        now = time.perf_counter()
+        idxs, y0s, keys = [], [], []
+        S_local = self.workers[0].num_slots
+        conds_touched = False
+        for i, w in enumerate(self.workers):
+            for slot, y0, key, cond_row in w._collect_admissions(now):
+                idxs.append(i * S_local + slot)
+                y0s.append(y0)
+                keys.append(key)
+                if cond_row is not None:
+                    self._conds_host[i, slot] = cond_row
+                    conds_touched = True
+        if idxs:
+            idxs, y0s, keys = ShardWorker._pad_pow2(idxs, y0s, keys)
+            self._states = self._fused_admit(
+                self._states, jnp.stack(y0s), jnp.stack(keys),
+                jnp.asarray(idxs, jnp.int32))
+            if conds_touched:
+                self._conds = jax.device_put(
+                    jnp.asarray(self._conds_host), self._sharding)
+        self._refresh_weights()
+        # one common (R, budget) across shards: worker 0 picks, siblings
+        # follow (their admission contexts must quantize consistently)
+        R = self.workers[0]._pick_rounds()
+        budget = self.workers[0]._pick_budget()
+        for w in self.workers[1:]:
+            w._rps = R
+        fn = self._get_fused_superstep(R, budget)
+        cold = getattr(fn, "_cache_size", lambda: 1)() == 0
+        t0 = time.perf_counter()
+        self._states, info, samples = fn(
+            self._states, self._conds, self.workers[0]._params,
+            self._weights_stacked)
+        dt = time.perf_counter() - t0
+        snapshots = []
+        for w in self.workers:
+            if not cold:
+                w.stats.dispatch_s += dt / self.num_shards
+            w.stats.rounds_total += R
+            w.stats.supersteps += 1
+            snapshots.append(w.stats.rounds_total)
+        return ((info, samples), snapshots, R, t0, cold)
+
+    def _harvest_fused(self, pending) -> None:
+        """Block once on the fused sync packet, then run every worker's
+        ordinary harvest on its shard's slice (numpy views pass straight
+        through the worker's device_get calls)."""
+        (info, samples), snapshots, R, t0, cold = pending
+        t_wait = time.perf_counter()
+        jax.block_until_ready(info)
+        done_at = time.perf_counter()
+        wait = done_at - t_wait
+        info_np = np.asarray(jax.device_get(info))
+        samples_np = np.asarray(jax.device_get(samples))
+        for i, w in enumerate(self.workers):
+            # one completion stamp for the whole boundary: worker i's
+            # seconds-per-round EWMA must not absorb workers 0..i-1's
+            # harvest bookkeeping (deadline admission reads that EWMA)
+            w._harvest(((info_np[i], samples_np[i]),
+                        snapshots[i], R, t0, cold), done_at=done_at)
+            # the engine already paid the single blocking wait above (the
+            # workers saw ready numpy views); spread it so the merged
+            # timing stays the true total
+            w.stats.device_s += wait / self.num_shards
+
+    # -- views ---------------------------------------------------------------
+
+    @property
+    def stats(self) -> EngineStats:
+        """Merged cross-shard view; per-shard stats at ``shard_stats``."""
+        return EngineStats.merged(
+            [w.stats for w in self.workers], wall_time=self._wall_time)
+
+    @property
+    def shard_stats(self) -> List[EngineStats]:
+        return [w.stats for w in self.workers]
+
+    @property
+    def round_budget(self):
+        """Shard 0's current per-shard budget (tier) — the benchmark/report
+        convenience view; per-shard tiers live on ``workers[i].round_budget``."""
+        return self.workers[0].round_budget
+
+    @property
+    def routed_counts(self) -> np.ndarray:
+        """Requests routed per shard (copy) — the router-contract metric."""
+        return self._routed.copy()
+
+    def has_work(self) -> bool:
+        return any(w.has_work() for w in self.workers)
+
+    def chain_state(self, shard: int, slot: int):
+        if self.dispatch == "fused":  # the engine owns the stacked state
+            return jax.tree_util.tree_map(
+                lambda x: x[shard, slot], self._states)
+        return self.workers[shard].chain_state(slot)
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        shard = int(self.router.route(request, self.workers))
+        if not 0 <= shard < self.num_shards:
+            raise ValueError(
+                f"router {self.router.name!r} returned shard {shard} "
+                f"outside [0, {self.num_shards})")
+        self._routed[shard] += 1
+        self.workers[shard].scheduler.submit(request, time.perf_counter())
+
+    def step(self) -> bool:
+        """One superstep boundary across every shard with work: dispatch all
+        (their device programs overlap), then harvest all synchronously.
+        Returns True while any shard still has work — the open-loop drive."""
+        if self.dispatch == "fused":
+            if not self.has_work():
+                return False
+            self._harvest_fused(self._dispatch_fused())
+            return self.has_work()
+        pending = [(w, w._dispatch_superstep())
+                   for w in self.workers if w.has_work()]
+        for w, rec in pending:
+            w._harvest(rec)
+        return self.has_work()
+
+    def serve(self, requests: List[Request], key=None) -> dict:
+        """Submit everything through the router, drive all shards until
+        drained, return {rid: sample}.
+
+        The loop generalizes the single-shard double-buffering: at each
+        boundary every working shard's superstep s+1 is dispatched (in shard
+        order, so the N device programs are all in flight) BEFORE any shard's
+        superstep-s packet is harvested; a shard with queued requests
+        harvests first so freed slots refill at this boundary (occupancy over
+        overlap when someone waits).  With shards=1 this is exactly
+        ``ContinuousASDEngine.serve``.
+        """
+        if key is not None:
+            for i, w in enumerate(self.workers):
+                w._key = key if i == 0 else jax.random.fold_in(key, i)
+        self.dropped_rids = []
+        for w in self.workers:
+            w.dropped_rids = []
+        t0 = time.perf_counter()
+        for r in requests:
+            self.submit(r)
+        if self.dispatch == "fused":
+            # one pending record covers every shard: the fused program IS
+            # the boundary, double-buffered exactly like the single engine
+            fpending = None
+            while self.has_work() or fpending is not None:
+                if fpending is not None and any(
+                        w.scheduler.queue_depth > 0 for w in self.workers):
+                    self._harvest_fused(fpending)
+                    fpending = None
+                nxt = self._dispatch_fused() if self.has_work() else None
+                if fpending is not None:
+                    self._harvest_fused(fpending)
+                fpending = nxt
+            jax.block_until_ready(self._states.a)
+        else:
+            pending: dict[int, tuple] = {}
+            while self.has_work() or pending:
+                for i, w in enumerate(self.workers):
+                    if i in pending and w.scheduler.queue_depth > 0:
+                        w._harvest(pending.pop(i))
+                nxt = {}
+                for i, w in enumerate(self.workers):
+                    if w.has_work():
+                        nxt[i] = w._dispatch_superstep()
+                for i in sorted(pending):
+                    self.workers[i]._harvest(pending.pop(i))
+                pending = nxt
+            for w in self.workers:
+                jax.block_until_ready(w._states.a)
+        self._wall_time += time.perf_counter() - t0
+        out = {}
+        for w in self.workers:
+            out.update(w.drain_results())
+            self.dropped_rids.extend(w.dropped_rids)
+        return out
+
+    def drain_results(self) -> dict:
+        out = {}
+        for w in self.workers:
+            out.update(w.drain_results())
+        return out
+
+    def adopt_programs(self, warm) -> "ShardedASDEngine":
+        """Share a warm engine's compiled programs (same statics and
+        PER-SHARD shapes): benchmark repeats — and sweep arms with different
+        shard counts but identical slots-per-shard — skip re-jit.  ``warm``
+        may be another ``ShardedASDEngine`` (all of whose workers already
+        share one executable pool) or a bare worker/engine."""
+        donors = warm.workers if hasattr(warm, "workers") else [warm]
+        for i, w in enumerate(self.workers):
+            w.adopt_programs(donors[i % len(donors)])
+        if self.dispatch == "fused" and getattr(warm, "dispatch", "") == (
+                "fused") and warm.num_shards == self.num_shards:
+            self._fused_fns = warm._fused_fns
+            self._fused_admit = warm._fused_admit
+        return self

@@ -1,0 +1,689 @@
+"""Shard-local serving worker: the device-side core of the ASD engines.
+
+A ``ShardWorker`` owns everything ONE shard of a serving deployment needs:
+
+  * a slot sub-batch of vmapped ``ASDChainState``s (optionally pinned to a
+    single device or laid out by an explicit sharding),
+  * the donated superstep executables that drive it, cached per
+    ``(rounds_per_sync, round_budget)`` pair,
+  * the boundary sync-packet harvest (retire flags, counters, samples in
+    ONE transfer),
+  * its own ``SlotScheduler`` admission queue and ``EngineStats``, and
+  * the budget-allocator state (per-slot priority weights, live-demand
+    EWMA, and — in auto mode — the power-of-two budget tier).
+
+The worker is host-agnostic: it never routes requests and never talks to
+other shards.  Everything cross-shard (request routing, per-shard budget
+rebalancing, merged metrics) lives in the front ends —
+``repro.serving.engine.ContinuousASDEngine`` (one worker, the classic
+single-shard engine) and ``repro.serving.sharded.ShardedASDEngine`` (N
+workers behind a pluggable ``Router``).  Because each worker packs its
+verification points only across ITS OWN slots, pack maps are shard-local by
+construction: growing the mesh never turns the packed gather into a
+cross-host all-gather (ROADMAP "Multi-host serving").
+
+Budget auto-tiering (``round_budget="auto"``, packed execution): the worker
+tracks an EWMA of its live verification-point demand and re-picks its
+``round_budget`` at superstep boundaries from a power-of-two ladder —
+upshifts are immediate (demand is being trimmed NOW), downshifts take one
+rung at a time and only once demand sits below ``budget_hysteresis`` of the
+next tier down, so the tier never flaps around a noisy demand level.  Each
+tier reuses the per-(R, budget) executable cache, which stays O(log * log)
+entries (asserted).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.asd import (
+    ASDChainState,
+    asd_superstep,
+    chain_sample,
+    init_chain_state,
+)
+from repro.core.controller import StaticTheta, ThetaController
+from repro.core.schedules import Schedule
+from repro.core.sequential import init_y0
+from repro.serving.metrics import EngineStats, RequestMetrics
+from repro.serving.scheduler import (
+    AdmissionContext,
+    SchedulingPolicy,
+    SlotScheduler,
+)
+
+# sync-packet row layout: the (7, S) int32 array each superstep returns next
+# to the new slot states — retire flags, live windows, and the per-chain
+# speculation counters, harvested with ONE host transfer per boundary
+_SYNC_ROWS = ("a", "theta_live", "rounds", "head_calls", "model_evals",
+              "accepts", "proposals")
+
+# the power-of-two ladder auto rounds_per_sync picks from: O(log) compiled
+# superstep variants instead of one per observed value
+_AUTO_MAX_R = 16
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    cond: Optional[np.ndarray] = None  # (d_cond,) or None
+    key: Optional[jax.Array] = None  # per-request PRNG key (else derived)
+    y0: Optional[np.ndarray] = None  # explicit start state (else init_y0)
+    priority: float = 0.0  # Priority policy: higher admits first
+    deadline: Optional[float] = None  # absolute SLO deadline (perf_counter s)
+    expected_accept_rate: Optional[float] = None  # SERR/deadline estimate hint
+
+
+def _pow2_ladder(lo: int, hi: int) -> tuple:
+    """Power-of-two rungs from the smallest pow2 >= lo, topped by ``hi``
+    itself (the covering budget) where the next pow2 would overshoot —
+    the top tier must cover every possible demand without padding the
+    packed call past it (e.g. 8 slots x theta 6 tops at 48, not 64)."""
+    tier = 1
+    while tier < lo:
+        tier *= 2
+    ladder = [min(tier, hi)]
+    while ladder[-1] < hi:
+        ladder.append(min(ladder[-1] * 2, hi))
+    return tuple(ladder)
+
+
+class ShardWorker:
+    """One shard's slot batch, superstep executables, and admission queue.
+
+    Args:
+      model_fn_factory: ``cond -> model_fn`` (or ``(params, cond) ->
+        model_fn`` when ``params`` is given); ``cond`` is a traced (d_cond,)
+        array when ``d_cond > 0``, else ``None``.
+      schedule: the affine step schedule shared by all requests.
+      event_shape: per-chain sample shape.
+      num_slots: vmapped lanes of the per-round program ON THIS SHARD.
+      theta: speculation window cap theta_max.
+      params: optional model weight pytree, threaded through the per-round
+        jit as an ARGUMENT.  Closure-captured weights would be baked into
+        the executable as constants — re-processed on every standalone
+        round dispatch (a measurable per-round tax on CPU) and forced
+        replicated on a mesh; passing them as an argument keeps their
+        sharding and makes the round program reuse device buffers.
+      state_sharding: optional sharding pytree (matching ``ASDChainState``
+        leaves with a leading slot axis) applied to the slot batch, e.g. from
+        ``repro.distributed.sharding.chain_state_shardings``.  Takes
+        precedence over ``device``.
+      device: optional single device this shard's state, weights, and
+        dispatches are pinned to — the topology handle the sharded engine
+        uses to give each worker its own device
+        (``repro.distributed.sharding.shard_placements``).
+      controller: per-chain speculation-window controller (theta_live <=
+        theta); a static config closed over by the jitted round, its state
+        rides inside each slot's ``ASDChainState``.  Default: StaticTheta.
+      policy: host-side admission policy (``repro.serving.scheduler``) for
+        THIS shard's queue.  Default: FCFS.
+      grs_impl: "core" (pure-jnp verifier) or "kernel" (the Pallas GRS
+        kernel; interpret-mode off-TPU, so CPU serving still works).
+      execution: "unpacked" (one theta_max-shaped lane per slot) or "packed"
+        (``repro.serving.packing``: each round gathers only the LIVE
+        verification points across THIS SHARD'S slots into one
+        ``round_budget``-shaped model call).
+      round_budget: packed execution's verification points per round for
+        this shard (>= num_slots; default slots * theta, i.e. never
+        binding), or ``"auto"`` to re-pick the budget per superstep boundary
+        from the live-demand EWMA on a power-of-two ladder with hysteresis.
+      allocator: ``BudgetAllocator`` splitting the budget across slots
+        (default: waterfilling).  Its priority weights come from
+        ``Request.priority`` at admission.
+      pack_impl: "ref" (jnp gather/scatter) or "kernel" (the Pallas pack
+        kernel; interpret-mode off-TPU).
+      rounds_per_sync: speculation rounds fused per device dispatch (the
+        SUPERSTEP length R), or "auto" for the accept-rate ladder.
+        Superstep dispatches DONATE the slot-state pytree to XLA, so the
+        full ``ASDChainState`` batch is updated in place.
+      overcommit: admission multiplexing factor (>= 1).  With packed
+        execution, the nominal concurrency a budget supports is
+        ``round_budget // theta_max`` full-width chains; ``overcommit > 1``
+        lets ``BudgetAware`` admission fill slots up to ``overcommit`` times
+        the budget's nominal demand — the allocator then multiplexes the
+        admitted chains over the fixed budget (each runs a trimmed window)
+        instead of leaving slots idle while requests queue.
+      budget_hysteresis: auto-budget downshift threshold — the demand EWMA
+        must sit at or below this fraction of the NEXT TIER DOWN before the
+        tier drops a rung (upshifts are immediate).
+      shard_id: this worker's index in a sharded deployment (0 for the
+        single-shard engine); stamped on the worker's ``EngineStats``.
+      pipelined: deprecated alias kept for compatibility — the serve loops
+        are always double-buffered; the flag is ignored.
+    """
+
+    def __init__(
+        self,
+        model_fn_factory: Callable,
+        schedule: Schedule,
+        event_shape: tuple,
+        num_slots: int = 8,
+        theta: int = 8,
+        d_cond: int = 0,
+        eager_head: bool = True,
+        noise_mode: str = "buffer",
+        keep_trajectory: bool = False,
+        grs_impl: str = "core",
+        params=None,
+        state_sharding=None,
+        pipelined: bool = False,
+        seed: int = 0,
+        controller: Optional[ThetaController] = None,
+        policy: Optional[SchedulingPolicy] = None,
+        execution: str = "unpacked",
+        round_budget=None,
+        allocator=None,
+        pack_impl: str = "ref",
+        rounds_per_sync=1,
+        overcommit: float = 1.0,
+        budget_hysteresis: float = 0.75,
+        device=None,
+        shard_id: int = 0,
+    ):
+        self.schedule = schedule
+        self.event_shape = tuple(event_shape)
+        self.num_slots = num_slots
+        self.theta = int(min(theta, schedule.K))
+        self.d_cond = d_cond
+        self.eager_head = eager_head
+        self.noise_mode = noise_mode
+        self.keep_trajectory = keep_trajectory
+        self.grs_impl = grs_impl
+        self.pipelined = pipelined
+        self.pack_impl = pack_impl
+        self.shard_id = shard_id
+        self.device = device
+        self.controller = controller if controller is not None else StaticTheta()
+        if execution not in ("unpacked", "packed"):
+            raise ValueError(f"unknown execution mode {execution!r}")
+        self.execution = execution
+        if overcommit < 1.0:
+            raise ValueError(f"overcommit must be >= 1, got {overcommit}")
+        self.overcommit = float(overcommit)
+        self.budget_hysteresis = float(budget_hysteresis)
+        # the budget tier ladder: powers of two from the min viable budget
+        # (>= num_slots: every live chain needs a point to make progress) up
+        # to full coverage (slots * theta).  Fixed budgets stay off-ladder.
+        self._budget_ladder = _pow2_ladder(num_slots, num_slots * self.theta)
+        if round_budget == "auto":
+            if execution != "packed":
+                raise ValueError(
+                    'round_budget="auto" requires execution="packed" (the '
+                    "unpacked engine has no budget-shaped call to re-tier)")
+            self._budget_auto = True
+            # open at the covering tier: adapting DOWN from safe is cheap,
+            # opening undersized would trim every chain in the first wave
+            self.round_budget = self._budget_ladder[-1]
+        else:
+            self._budget_auto = False
+            self.round_budget = (
+                num_slots * self.theta if round_budget is None
+                else int(round_budget)
+            )
+        if execution == "packed" and self.round_budget < num_slots:
+            raise ValueError(
+                f"round_budget {self.round_budget} < num_slots {num_slots}: "
+                "every live chain needs at least one verification point per "
+                "round to make progress")
+        if rounds_per_sync == "auto":
+            self._auto_rps = True
+            self._rps = 1  # last picked R; refreshed per boundary
+        else:
+            self._auto_rps = False
+            self._rps = int(rounds_per_sync)
+            if self._rps < 1:
+                raise ValueError(
+                    f"rounds_per_sync must be >= 1 or 'auto', got "
+                    f"{rounds_per_sync!r}")
+        self.scheduler = SlotScheduler(num_slots, policy=policy)
+        self.stats = EngineStats(shard=shard_id)
+        self._key = jax.random.PRNGKey(seed)
+        self._results: dict[int, np.ndarray] = {}
+        self.dropped_rids: list[int] = []
+        # admission-context estimates: EWMAs of accept rate over retired
+        # chains and of observed wall seconds per fused round.  Per-round
+        # EWMA (not total-elapsed / rounds) so compile time and idle gaps
+        # between serve() calls decay out instead of permanently inflating
+        # the deadline policy's service-time estimates.
+        self._accept_ewma = 1.0
+        self._spr_ewma = 0.0
+        # live verification-point demand of the slot batch, refreshed from
+        # the same device sync the retirement scan already pays; feeds the
+        # budget-pressure signal of the admission policies and (EWMA'd) the
+        # auto budget tier
+        self._live_demand = 0
+        self._demand_ewma = 0.0
+        # a fresh chain's opening window (what one admission adds to demand)
+        self._theta_open = int(self.controller.init(self.theta)[1])
+
+        self._statics = dict(
+            theta=self.theta,
+            eager_head=eager_head,
+            noise_mode=noise_mode,
+            keep_trajectory=keep_trajectory,
+            grs_impl=grs_impl,
+            controller=self.controller,
+        )
+        self._params = params
+        if params is None:
+            self._make_fn = lambda p, cond: model_fn_factory(cond)
+        else:
+            self._make_fn = model_fn_factory  # (params, cond) -> model_fn
+
+        if execution == "packed":
+            from repro.serving.packing import WaterfillingAllocator
+
+            self.allocator = (
+                allocator if allocator is not None
+                else WaterfillingAllocator(theta_max=self.theta)
+            )
+        else:
+            self.allocator = allocator
+
+        K, keep = schedule.K, keep_trajectory
+
+        def _make_superstep(R: int, budget: Optional[int]):
+            # R fused rounds per dispatch + the boundary sync packet, built
+            # on the public superstep API (asd_superstep / packed_superstep)
+            # so the engine runs exactly the semantics the bit-exactness
+            # tests pin.  The slot-state pytree is DONATED: XLA aliases the
+            # output state buffers onto the inputs, so a superstep updates
+            # the batch in place instead of allocating a fresh ASDChainState
+            # copy per round.  The sync packet (fresh buffers: stack/gather
+            # outputs) is everything the host needs at the boundary — retire
+            # flags, live windows, counters, and each slot's final sample —
+            # so no separate peek dispatch ever touches the (possibly
+            # already donated-away) states.
+            def _superstep(states, conds, p, weights):
+                states = self._run_rounds(states, conds, p, weights, R, budget)
+                info = jnp.stack(
+                    [getattr(states, f).astype(jnp.int32) for f in _SYNC_ROWS]
+                )
+                samples = jax.vmap(
+                    lambda st: chain_sample(st, K, keep))(states)
+                return states, (info, samples)
+
+            return jax.jit(_superstep, donate_argnums=(0,))
+
+        self._make_superstep = _make_superstep
+        # one executable per (R, budget) pair; the auto modes draw both
+        # coordinates from power-of-two ladders so this stays O(log * log)
+        self._superstep_fns: dict[tuple, Callable] = {}
+        self._weights = np.ones((num_slots,), np.float32)
+        self._weights_version = 0  # bumped per change: fused-mode restack cue
+        # device copy of the allocator weights: updated IN PLACE one lane at
+        # a time when an admission/retire changes a slot's priority — never
+        # re-uploaded wholesale from the host.  A fused front end reads only
+        # the host copy (it restacks across shards) and clears this flag so
+        # the per-lane device update isn't paid for nothing.
+        self._device_weights_live = True
+        self._weights_dev = jnp.asarray(self._weights)
+        if device is not None:
+            self._weights_dev = jax.device_put(self._weights_dev, device)
+
+        def _admit(states, y0s, keys, idxs):
+            # init + scatter for a whole boundary's admissions in ONE
+            # dispatch; states donated — the scatter reuses the slot buffers
+            new_sts = jax.vmap(
+                lambda y0, k: init_chain_state(
+                    schedule, y0, k, self.theta, noise_mode, keep_trajectory,
+                    self.controller,
+                )
+            )(y0s, keys)
+            return jax.tree_util.tree_map(
+                lambda b, n: b.at[idxs].set(n), states, new_sts
+            )
+
+        self._admit_fn = jax.jit(_admit, donate_argnums=(0,))
+
+        # All slots start as already-finished dummy chains: frozen under
+        # asd_round until a real request is admitted over them.
+        K = schedule.K
+        self._states = jax.vmap(
+            lambda k: init_chain_state(
+                schedule, jnp.zeros(self.event_shape), k, self.theta,
+                noise_mode, keep_trajectory, self.controller,
+            )
+        )(jax.random.split(jax.random.PRNGKey(seed), num_slots))
+        self._states = dataclasses.replace(
+            self._states, a=jnp.full((num_slots,), K, jnp.int32)
+        )
+        self._conds = (
+            jnp.zeros((num_slots, d_cond), jnp.float32) if d_cond else None
+        )
+        if state_sharding is not None:
+            self._states = jax.device_put(self._states, state_sharding)
+        elif device is not None:
+            self._states = jax.device_put(self._states, device)
+
+    # -- the ONE superstep body both execution modes share -------------------
+
+    def _run_rounds(self, states, conds, p, weights, R: int, budget):
+        """R fused rounds over the slot batch — the single parameterized
+        superstep body.  Packed execution budgets the per-round model call
+        (shapes depend on the static (R, budget) pair); unpacked vmaps the
+        theta_max-shaped per-slot superstep and ignores the budget."""
+        if self.execution == "packed":
+            from repro.serving.packing import packed_superstep
+
+            return packed_superstep(
+                self._make_fn, p, self.schedule, states, conds, weights,
+                rounds=R, budget=budget, allocator=self.allocator,
+                pack_impl=self.pack_impl, **self._statics,
+            )
+
+        def one(st, cond):
+            return asd_superstep(
+                self._make_fn(p, cond), self.schedule, st, rounds=R,
+                **self._statics)
+
+        if conds is None:
+            return jax.vmap(lambda st: one(st, None))(states)
+        return jax.vmap(one)(states, conds)
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _admission_context(self, now: float) -> AdmissionContext:
+        return AdmissionContext(
+            K=self.schedule.K,
+            theta_max=self.theta,
+            accept_rate=self._accept_ewma,
+            seconds_per_round=self._spr_ewma,
+            now=now,
+            round_budget=self.round_budget,
+            live_demand=self._live_demand,
+            theta_open=self._theta_open,
+            rounds_per_sync=self._rps,
+            overcommit=self.overcommit,
+        )
+
+    @property
+    def load(self) -> float:
+        """Occupancy + queue pressure on this shard, in units of full slot
+        batches: 0 = idle, 1 = every slot busy, > 1 = requests queueing.
+        The routing signal ``LeastLoaded`` balances on."""
+        busy = self.num_slots - len(self.scheduler.free_slots())
+        return (busy + self.scheduler.queue_depth) / max(self.num_slots, 1)
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    # -- superstep machinery -------------------------------------------------
+
+    def _get_superstep(self, R: int, budget: Optional[int]):
+        key = (R, budget)
+        fn = self._superstep_fns.get(key)
+        if fn is None:
+            fn = self._superstep_fns[key] = self._make_superstep(R, budget)
+            # the auto ladders bound the program count: O(log R * log budget)
+            max_r = (_AUTO_MAX_R.bit_length() if self._auto_rps else 1)
+            max_b = (len(self._budget_ladder) if self._budget_auto else 1)
+            assert len(self._superstep_fns) <= max_r * max_b + 1, (
+                f"superstep cache grew past the ladder bound: "
+                f"{sorted(self._superstep_fns)}")
+        return fn
+
+    def _pick_rounds(self) -> int:
+        """The superstep length for the next dispatch.
+
+        Fixed mode returns the configured R.  Auto mode sizes R to the
+        accept-rate EWMA: a fresh chain is expected to run about
+        K / E[advance] rounds (geometric accept model, the same estimate the
+        deadline policy uses); R is chosen so a chain that retires
+        mid-superstep idles its slot for at most ~1/8 of that service time,
+        then snapped DOWN to the power-of-two ladder so only O(log) superstep
+        programs ever compile.
+        """
+        if not self._auto_rps:
+            return self._rps
+        p = min(max(self._accept_ewma, 0.0), 0.999)
+        adv = (1.0 - p ** self.theta) / max(1.0 - p, 1e-3)
+        exp_rounds = self.schedule.K / max(adv, 1.0)
+        target = max(1, int(exp_rounds / 8.0))
+        R = 1
+        while R * 2 <= min(target, _AUTO_MAX_R):
+            R *= 2
+        self._rps = R
+        return R
+
+    def _pick_budget(self) -> Optional[int]:
+        """The verification budget for the next dispatch.
+
+        Fixed mode returns the configured budget (None on the unpacked
+        path, where no call is budget-shaped).  Auto mode tracks the
+        live-demand EWMA on the power-of-two ladder: upshift straight to
+        the covering tier (demand above the tier means every chain's window
+        is being trimmed RIGHT NOW), downshift one rung at a time and only
+        once demand sits at or below ``budget_hysteresis`` of the next tier
+        down — the hysteresis band keeps a noisy demand level from flapping
+        the tier (and recompiling nothing, but re-warming caches) every
+        boundary.
+        """
+        if self.execution != "packed":
+            return None
+        if not self._budget_auto:
+            return self.round_budget
+        demand = max(self._demand_ewma, 1.0)
+        target = self._budget_ladder[-1]
+        for tier in self._budget_ladder:
+            if tier >= demand:
+                target = tier
+                break
+        cur = self.round_budget
+        if target > cur:
+            self.round_budget = target
+        elif target < cur and cur > self._budget_ladder[0]:
+            lower = max(t for t in self._budget_ladder if t < cur)
+            if self._demand_ewma <= self.budget_hysteresis * lower:
+                self.round_budget = lower
+        return self.round_budget
+
+    def _set_weight(self, slot: int, w: float) -> None:
+        """One-lane device update of the allocator priority weights — no
+        full host->device re-upload on the admission/retire paths."""
+        if self._weights[slot] != w:
+            self._weights[slot] = w
+            self._weights_version += 1
+            if self._device_weights_live:
+                self._weights_dev = self._weights_dev.at[slot].set(w)
+
+    def _observe_round_time(self, dt: float) -> None:
+        # cold (compiling) dispatches never reach here — see
+        # _dispatch_superstep — so the EWMA only sees real round walls
+        self._spr_ewma = dt if self._spr_ewma == 0.0 else (
+            0.7 * self._spr_ewma + 0.3 * dt)
+
+    def _collect_admissions(self, now: float):
+        """One boundary's admission POLICY + host bookkeeping, device-free:
+        run the scheduler, account drops/weights/demand, and return the
+        scatter batch ``[(slot, y0, key, cond_row)]`` (empty when nothing
+        was placed).  The caller owns the device scatter — per-worker
+        (``_admit_pending``) or fused across shards
+        (``ShardedASDEngine._dispatch_fused``)."""
+        placed = self.scheduler.admit(
+            now, self.stats.rounds_total, self._admission_context(now)
+        )
+        for entry in self.scheduler.drain_dropped():
+            self.stats.observe_drop()
+            self.dropped_rids.append(entry.request.rid)
+        batch = []
+        for slot, req in placed:
+            key = req.key if req.key is not None else self._next_key()
+            if req.y0 is not None:
+                y0 = jnp.asarray(req.y0, jnp.float32)
+            else:
+                key, k0 = jax.random.split(key)
+                y0 = init_y0(self.schedule, k0, self.event_shape)
+            cond_row = None
+            if self.d_cond:
+                cond_row = (np.zeros((self.d_cond,), np.float32)
+                            if req.cond is None
+                            else np.asarray(req.cond, np.float32))
+            # allocator priority weight: 1 + the request's priority (>= a
+            # small floor so zero/negative priorities still get budget)
+            self._set_weight(
+                slot,
+                max(1.0 + float(getattr(req, "priority", 0.0) or 0.0), 0.1))
+            # a fresh chain opens at the controller's initial window: count
+            # it into the live demand the budget-pressure signal sees
+            self._live_demand += self._theta_open
+            self.stats.requests += 1
+            batch.append((slot, y0, key, cond_row))
+        return batch
+
+    @staticmethod
+    def _pad_pow2(idxs, y0s, keys):
+        """Pad an admission batch to a power of two (duplicate scatter of
+        the same record is a no-op) so the jitted program has O(log S)
+        variants."""
+        n = len(idxs)
+        width = 1
+        while width < n:
+            width *= 2
+        while len(idxs) < width:
+            idxs.append(idxs[0])
+            y0s.append(y0s[0])
+            keys.append(keys[0])
+        return idxs, y0s, keys
+
+    def _admit_pending(self) -> None:
+        batch = self._collect_admissions(time.perf_counter())
+        if not batch:
+            return
+        idxs = [slot for slot, _, _, _ in batch]
+        y0s = [y0 for _, y0, _, _ in batch]
+        keys = [key for _, _, key, _ in batch]
+        if self.d_cond:
+            conds = np.array(self._conds)
+            for slot, _, _, cond_row in batch:
+                conds[slot] = cond_row
+        idxs, y0s, keys = self._pad_pow2(idxs, y0s, keys)
+        self._states = self._admit_fn(
+            self._states, jnp.stack(y0s), jnp.stack(keys),
+            jnp.asarray(idxs, jnp.int32),
+        )
+        if self.d_cond:
+            self._conds = jnp.asarray(conds)
+
+    def _dispatch_superstep(self):
+        """Admit at the boundary, launch one superstep, return its pending
+        harvest record (sync packet + the round count it reflects)."""
+        self._admit_pending()
+        R = self._pick_rounds()
+        B = self._pick_budget()
+        fn = self._get_superstep(R, B)
+        # a cold executable means THIS call pays the jit compile: keep that
+        # one-off out of dispatch_s and the seconds-per-round EWMA, or (in
+        # auto mode especially, which compiles ladder entries mid-traffic)
+        # the deadline policy's service-time estimate balloons and drops
+        # meetable requests — and drops are final.  _cache_size is a private
+        # jax accessor: degrade to "warm" if an upgrade drops it
+        cold = getattr(fn, "_cache_size", lambda: 1)() == 0
+        t0 = time.perf_counter()
+        self._states, sync = fn(
+            self._states, self._conds, self._params, self._weights_dev)
+        if not cold:
+            self.stats.dispatch_s += time.perf_counter() - t0
+        self.stats.rounds_total += R
+        self.stats.supersteps += 1
+        return (sync, self.stats.rounds_total, R, t0, cold)
+
+    def _harvest(self, pending, done_at: Optional[float] = None) -> None:
+        """Consume one superstep's sync packet: retire every chain that
+        finished during it (flags, counters, AND samples ride in the packet
+        — no peek dispatch against possibly-donated state buffers), refresh
+        the budget-pressure signal, and update the service-time EWMAs.
+
+        ``snapshot_rounds`` is the engine round count the packet reflects:
+        slots admitted at or after it hold a chain NOT yet present in the
+        packet (whose lane still shows the previous, finished occupant) and
+        must not be retired against it — the double-buffered loops harvest
+        packets one superstep behind the dispatch frontier.
+        """
+        sync, snapshot_rounds, R, t_dispatch, cold = pending
+        info_dev, samples_dev = sync
+        t0 = time.perf_counter()
+        jax.block_until_ready(info_dev)  # waits on the device, off-path in
+        t1 = time.perf_counter()         # the double-buffered serve loops
+        self.stats.device_s += t1 - t0
+        info = np.asarray(jax.device_get(info_dev))
+        row = {name: info[i] for i, name in enumerate(_SYNC_ROWS)}
+        a, theta_live = row["a"], row["theta_live"]
+        now = time.perf_counter()
+        K = self.schedule.K
+        # refresh the budget-pressure signal off the sync we already pay:
+        # live demand = sum over active slots of min(theta_live, K - a)
+        occupied = np.zeros((self.num_slots,), bool)
+        occupied[self.scheduler.active_slots()] = True
+        live = occupied & (a < K)
+        self._live_demand = int(
+            np.minimum(theta_live[live], (K - a)[live]).sum())
+        # the auto budget tier tracks demand through an EWMA, not the raw
+        # sample: one empty boundary must not collapse the tier
+        self._demand_ewma = (
+            float(self._live_demand) if self._demand_ewma == 0.0
+            else 0.5 * self._demand_ewma + 0.5 * self._live_demand)
+        finished = [
+            slot for slot in self.scheduler.active_slots()
+            if self.scheduler.slot_info(slot).admit_round < snapshot_rounds
+            and a[slot] >= K
+        ]
+        if finished:
+            samples = np.asarray(jax.device_get(samples_dev))
+            for slot in finished:
+                sinfo = self.scheduler.retire(slot)
+                self._set_weight(slot, 1.0)
+                self._results[sinfo.request.rid] = np.asarray(samples[slot])
+                deadline = getattr(sinfo.request, "deadline", None)
+                rm = RequestMetrics(
+                    rid=sinfo.request.rid,
+                    queue_latency=sinfo.admit_time - sinfo.submit_time,
+                    service_time=now - sinfo.admit_time,
+                    rounds=int(row["rounds"][slot]),
+                    head_calls=int(row["head_calls"][slot]),
+                    model_evals=int(row["model_evals"][slot]),
+                    accepts=int(row["accepts"][slot]),
+                    proposals=int(row["proposals"][slot]),
+                    deadline=deadline,
+                    slo_met=None if deadline is None else now <= deadline,
+                )
+                self.stats.observe(rm)
+                # EWMA over retired chains feeds SERR/deadline estimates
+                self._accept_ewma = (
+                    0.8 * self._accept_ewma + 0.2 * rm.accept_rate)
+        self.stats.host_sync_s += time.perf_counter() - t1
+        if not cold:  # a cold dispatch's elapsed time is mostly jit compile
+            # ``done_at``: a fused front end passes ONE completion stamp for
+            # the whole boundary, so later shards' EWMAs aren't inflated by
+            # their siblings' harvest bookkeeping running first
+            end = done_at if done_at is not None else time.perf_counter()
+            self._observe_round_time((end - t_dispatch) / R)
+
+    def drain_results(self) -> dict:
+        out, self._results = self._results, {}
+        return out
+
+    def adopt_programs(self, warm: "ShardWorker") -> "ShardWorker":
+        """Share a warm worker's compiled programs (same statics/shapes):
+        sibling shards and benchmark repeats reuse executables instead of
+        re-paying jit — the cache is keyed per (R, budget), so every shard
+        of a sharded engine draws from ONE pool."""
+        self._make_superstep = warm._make_superstep
+        self._superstep_fns = warm._superstep_fns
+        self._admit_fn = warm._admit_fn
+        return self
+
+    def chain_state(self, slot: int) -> ASDChainState:
+        """Debug view of one slot's resumable state."""
+        return jax.tree_util.tree_map(lambda x: x[slot], self._states)
