@@ -60,6 +60,16 @@ time came from.  An ``auto`` arm runs the accept-rate-adaptive ladder.
 Headline: samples/s is monotone non-decreasing from R=1 to the best R and
 the host-sync fraction of wall time strictly shrinks with R.
 
+``--round-impl sweep`` compares the per-phase packed round body against the
+FUSED round body (repro.kernels.superstep: one gather kernel + one
+verify/commit kernel per round, budget tiers as data) across the superstep
+R ladder, all at the covering budget so every fixed arm serves bit-identical
+samples (asserted), plus a ``fused-auto`` arm running the production
+auto-tier + budget-as-data composition.  REFRESHES
+results/superstep_sweep.json.  Headlines: the fused body's best arm keeps
+(or beats) the packed ladder's best samples/sec, and the per-arm
+dispatch_frac shows the launch tax the fusion removes.
+
     PYTHONPATH=src:. python benchmarks/serving_throughput.py [--requests 48]
     PYTHONPATH=src:. python benchmarks/serving_throughput.py --controller sweep
     PYTHONPATH=src:. python benchmarks/serving_throughput.py --execution budget-sweep
@@ -206,7 +216,8 @@ def run_open_loop(eng, reqs, arrivals):
 
 def build_continuous(params, factory, sched, theta, slots, d, controller=None,
                      execution="unpacked", round_budget=None, allocator=None,
-                     rounds_per_sync=1, shards=1, dispatch=None):
+                     rounds_per_sync=1, shards=1, dispatch=None,
+                     round_impl="packed"):
     common = dict(
         model_fn_factory=factory,
         schedule=sched,
@@ -221,6 +232,7 @@ def build_continuous(params, factory, sched, theta, slots, d, controller=None,
         round_budget=round_budget,
         allocator=allocator,
         rounds_per_sync=rounds_per_sync,
+        round_impl=round_impl,
     )
     if shards > 1:
         # slots is PER SHARD here (each worker keeps the same sub-batch and
@@ -245,11 +257,12 @@ def warm_continuous(eng, slots):
 def run_continuous(params, factory, sched, reqs, theta, slots, d, repeats,
                    controller=None, execution="unpacked", round_budget=None,
                    allocator=None, arrivals=None, warm_engine=None,
-                   rounds_per_sync=1, shards=1):
+                   rounds_per_sync=1, shards=1, round_impl="packed"):
     def build():
         return build_continuous(params, factory, sched, theta, slots, d,
                                 controller, execution, round_budget, allocator,
-                                rounds_per_sync, shards)
+                                rounds_per_sync, shards,
+                                round_impl=round_impl)
 
     warm = warm_engine
     if warm is None:
@@ -571,6 +584,110 @@ def run_superstep_sweep(params, factory, sched, reqs, theta, slots, d,
     )
 
 
+def run_round_impl_sweep(params, factory, sched, reqs, theta, slots, d,
+                         repeats, r_values=(1, 2, 4, 8)):
+    """Fused vs per-phase packed round bodies across the superstep ladder —
+    the refreshed superstep sweep (results/superstep_sweep.json).
+
+    Every fixed arm runs the SAME packed engine at the covering budget
+    (slots * theta, StaticTheta: grants always equal demands), so all
+    ``{packed,fused} x R`` arms serve bit-identical samples (asserted) and
+    samples/sec + the dispatch/device/host-sync split isolate what the
+    round body costs: ``fused`` collapses the round's seven non-model
+    launches into the two kernels of ``repro.kernels.superstep``, and its
+    budget-as-data executables are shared across tiers.  A ``fused-auto``
+    arm adds the production composition — auto budget tiers riding the ONE
+    cap-shaped executable — excluded from the bitwise golden (binding tiers
+    legitimately re-window chains).  Repeats interleave across arms,
+    best-of walls; program pools are shared per round-impl only (an
+    adopted ``_make_superstep`` closes over its warm engine's impl)."""
+    budget = slots * theta  # covering: grants == demands, bits invariant
+    arms_spec = {}
+    for impl in ("packed", "fused"):
+        for r in r_values:
+            arms_spec[f"{impl}-R{r}"] = (impl, r, budget)
+    arms_spec["fused-auto"] = ("fused", max(r_values) // 2, "auto")
+
+    def build(impl, rps, rb):
+        return build_continuous(
+            params, factory, sched, theta, slots, d,
+            controller=StaticTheta(), execution="packed", round_budget=rb,
+            allocator=make_allocator("waterfill", theta_max=theta),
+            rounds_per_sync=rps, round_impl=impl)
+
+    warms, warm_by_impl = {}, {}
+    for name, (impl, rps, rb) in arms_spec.items():
+        warm = build(impl, rps, rb)
+        if impl in warm_by_impl:
+            warm.adopt_programs(warm_by_impl[impl])
+        else:
+            warm_by_impl[impl] = warm
+        warm_continuous(warm, slots)
+        warms[name] = warm
+
+    golden = None
+    best = {}
+    for _ in range(repeats):
+        for name, (impl, rps, rb) in arms_spec.items():
+            eng = _clone_programs(build(impl, rps, rb), warms[name])
+            t0 = time.perf_counter()
+            out = eng.serve(list(reqs))
+            wall = time.perf_counter() - t0
+            assert len(out) == len(reqs)
+            if rb != "auto":  # covering arms: the body cannot move the bits
+                if golden is None:
+                    golden = out
+                else:
+                    for r in reqs:
+                        np.testing.assert_array_equal(out[r.rid],
+                                                      golden[r.rid])
+            if name not in best or wall < best[name][0]:
+                best[name] = (wall, eng.stats)
+
+    arms = {}
+    for name, (wall, s) in best.items():
+        impl, rps, rb = arms_spec[name]
+        t = s.timing_breakdown()
+        arms[name] = dict(
+            round_impl=impl,
+            rounds_per_sync=rps,
+            round_budget=rb if rb == "auto" else int(rb),
+            wall_time_s=wall,
+            samples_per_s=s.retired / wall,
+            fused_rounds=s.rounds_total,
+            supersteps=s.supersteps,
+            accept_rate=s.accept_rate(),
+            timing=t,
+        )
+        print(f"[{name:11s}] {arms[name]['samples_per_s']:.2f} samples/s, "
+              f"{s.rounds_total} rounds / {s.supersteps} supersteps, "
+              f"dispatch {1e3 * t['dispatch_s']:.1f}ms "
+              f"({100 * t['dispatch_frac']:.1f}% of wall), "
+              f"host_sync {1e3 * t['host_sync_s']:.1f}ms")
+
+    def tput(n):
+        return arms[n]["samples_per_s"]
+
+    best_packed = max((f"packed-R{r}" for r in r_values), key=tput)
+    best_fused = max((f"fused-R{r}" for r in r_values), key=tput)
+    return dict(
+        arms=arms,
+        r_values=list(r_values),
+        best_packed=best_packed,
+        best_fused=best_fused,
+        parity_bitwise=True,  # asserted across every covering arm above
+        # the acceptance headlines: the fused body keeps (or beats) the
+        # packed ladder's best samples/s while the dispatch tax shrinks
+        fused_vs_packed_best_throughput=tput(best_fused) / tput(best_packed),
+        fused_best_dispatch_frac=(
+            arms[best_fused]["timing"]["dispatch_frac"]),
+        packed_best_dispatch_frac=(
+            arms[best_packed]["timing"]["dispatch_frac"]),
+        fused_auto_vs_packed_best_throughput=(
+            tput("fused-auto") / tput(best_packed)),
+    )
+
+
 def run_shard_sweep(params, factory, sched, theta, slots_local, d, seed,
                     cond_max, requests, repeats, shard_counts=(1, 2, 4),
                     rounds_per_sync=2):
@@ -721,6 +838,13 @@ def main():
                          "engines with queue/completion latency percentiles")
     ap.add_argument("--rate", type=float, default=4.0,
                     help="--arrival poisson mean arrival rate (req/s)")
+    ap.add_argument("--round-impl", default="packed",
+                    choices=("packed", "fused", "sweep"),
+                    help='packed-round body: per-phase programs or the fused '
+                         'kernel pair (budget-as-data); "sweep" compares '
+                         "both across the superstep R ladder (+ a "
+                         "fused-auto tier arm) and refreshes "
+                         "results/superstep_sweep.json")
     ap.add_argument("--rounds-per-sync", default="1",
                     help="speculation rounds fused per device dispatch: an "
                          'integer, "auto" (accept-rate-adaptive ladder), or '
@@ -789,6 +913,26 @@ def main():
               f"{report['parity_bitwise']} -> {out_path}")
         return
     shards = int(args.shards)
+
+    if args.round_impl == "sweep":
+        sweep = run_round_impl_sweep(params, factory, sched, reqs,
+                                     args.theta, args.slots, args.d,
+                                     args.repeats)
+        report = {"workload": workload, **sweep}
+        out_path = args.out or "results/superstep_sweep.json"
+        print(json.dumps(report, indent=2))
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"\nfused round body ({report['best_fused']}): "
+              f"{report['fused_vs_packed_best_throughput']:.2f}x the best "
+              f"packed arm's samples/s; dispatch fraction "
+              f"{report['fused_best_dispatch_frac']:.2f} (packed best "
+              f"{report['packed_best_dispatch_frac']:.2f}); fused-auto "
+              f"{report['fused_auto_vs_packed_best_throughput']:.2f}x; "
+              f"covering-arm parity bitwise: {report['parity_bitwise']} "
+              f"-> {out_path}")
+        return
 
     if args.rounds_per_sync == "sweep":
         sweep = run_superstep_sweep(params, factory, sched, reqs, args.theta,
@@ -915,7 +1059,7 @@ def main():
                                  execution=args.execution,
                                  round_budget=args.round_budget or None,
                                  allocator=alloc, rounds_per_sync=rps,
-                                 shards=shards)
+                                 shards=shards, round_impl=args.round_impl)
     out_s, chunk = run_chunked(params, factory, sched, reqs, args.theta,
                                args.slots, args.d, args.repeats)
     assert len(out_c) == len(out_s) == args.requests

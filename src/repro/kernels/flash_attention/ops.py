@@ -2,14 +2,10 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels._backend import resolve_interpret
 from repro.kernels.flash_attention.kernel import flash_attention
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def flash_mha(q, k, v, *, causal: bool = True, window: int = 0,
@@ -17,8 +13,7 @@ def flash_mha(q, k, v, *, causal: bool = True, window: int = 0,
               interpret: bool | None = None):
     """q: (B, Lq, H, hd); k, v: (B, Skv, H, hd) (KV already head-repeated).
     Returns (B, Lq, H, hd)."""
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     B, Lq, H, hd = q.shape
     Skv = k.shape[1]
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, Lq, hd)

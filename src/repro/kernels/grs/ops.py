@@ -5,15 +5,11 @@ from __future__ import annotations
 
 import math
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels._backend import resolve_interpret
 from repro.kernels._padding import LANE, pad_dim as _pad_dim
 from repro.kernels.grs.kernel import ROW_BLK, grs_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def grs(u, xi, m_hat, m, sigma, event_ndim: int = 1, interpret: bool | None = None):
@@ -23,8 +19,7 @@ def grs(u, xi, m_hat, m, sigma, event_ndim: int = 1, interpret: bool | None = No
     axis.  Padding columns are zeros in v and xi, so the reductions — and
     therefore the accept decision and the reflection — are unchanged.
     """
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
 
     batch_shape = xi.shape[: xi.ndim - event_ndim]
     event_shape = xi.shape[xi.ndim - event_ndim:]

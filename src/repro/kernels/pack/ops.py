@@ -10,6 +10,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._backend import resolve_interpret
 from repro.kernels._padding import LANE, pad_dim
 from repro.kernels.pack.kernel import (
     ROW_BLK,
@@ -17,10 +18,6 @@ from repro.kernels.pack.kernel import (
     scatter_rows_pallas,
 )
 from repro.kernels.pack.ref import gather_rows_ref, scatter_rows_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def _collapse(a: jax.Array):
@@ -39,8 +36,7 @@ def gather_rows(
     """out[p] = src[idx[p]] for a (N, *event) row table and (M,) indices."""
     if impl == "ref":
         return gather_rows_ref(src, idx)
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     src2, event_shape, D = _collapse(src)
     M = idx.shape[0]
     pad_m = (-M) % ROW_BLK
@@ -62,8 +58,7 @@ def scatter_rows(
     table; ``idx[p] >= num_rows`` drops row p (the pack's padding lanes)."""
     if impl == "ref":
         return scatter_rows_ref(vals, idx, num_rows)
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     vals2, event_shape, D = _collapse(vals)
     M = idx.shape[0]
     pad_m = (-M) % ROW_BLK

@@ -2,21 +2,16 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels._backend import resolve_interpret
 from repro.kernels.ssm_scan.kernel import ssm_scan
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def linear_scan(a, b, block_t: int = 256, block_d: int = 512,
                 interpret: bool | None = None):
     """a, b: (B, L, D) arbitrary sizes; returns the full state trajectory."""
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = resolve_interpret(interpret)
     B, L, D = a.shape
     bt = min(block_t, L)
     bd = min(block_d, D)

@@ -1,0 +1,6 @@
+"""Fused superstep round kernels: the packed round body's gather and
+verify/commit sides each collapsed into ONE Pallas program."""
+
+from repro.kernels.superstep.ops import fused_gather, fused_verify_commit
+
+__all__ = ["fused_gather", "fused_verify_commit"]

@@ -1,0 +1,49 @@
+"""Pure-jnp references for the fused round kernels.
+
+The engine's default fused path (``pack_impl="ref"``) runs THESE — they are
+composed from exactly the primitives the unfused packed round uses
+(``jnp.take`` row gathers, ``repro.core.grs.grs``, the drop-row scatter), so
+fused-ref output is bit-identical to the unfused packed round by
+construction, and the Pallas kernels in kernel.py are verified against them.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.grs import bcast_right, grs
+
+
+def fused_gather_ref(y_tbl, xi_tbl, mh_tbl, scal_tbl, idx):
+    """One logical gather over all four row tables (y/xi/m_hat (N, *event),
+    scalars (N, C)) at packed positions ``idx`` (M,)."""
+    return (
+        jnp.take(y_tbl, idx, axis=0),
+        jnp.take(xi_tbl, idx, axis=0),
+        jnp.take(mh_tbl, idx, axis=0),
+        jnp.take(scal_tbl, idx, axis=0),
+    )
+
+
+def fused_verify_commit_ref(y, g, xi, mh, A, B, u, sigma, idx,
+                            num_rows: int):
+    """Target mean + GRS + commit scatter, unfused: m = A y + B g, the
+    reference GRS pass, then z/accept routed to their slot-window rows
+    (idx[p] >= num_rows drops row p, unwritten rows zero)."""
+    ev_ndim = y.ndim - 1
+    m_tgt = (
+        bcast_right(A, ev_ndim + 1) * y + bcast_right(B, ev_ndim + 1) * g
+    )
+    z, acc = grs(u, xi, mh, m_tgt, sigma, event_ndim=ev_ndim)
+    safe = jnp.minimum(idx, num_rows)
+    z_tbl = (
+        jnp.zeros((num_rows + 1,) + z.shape[1:], z.dtype)
+        .at[safe].set(z)[:num_rows]
+    )
+    acc_tbl = (
+        jnp.zeros((num_rows + 1,), bool).at[safe].set(acc)[:num_rows]
+    )
+    return z_tbl, acc_tbl
+
+
+__all__ = ["fused_gather_ref", "fused_verify_commit_ref"]

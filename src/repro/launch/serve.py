@@ -33,6 +33,11 @@ adaptive windows save wall-clock, not just counted work:
   --execution packed --round-budget 96         e.g. ~0.85 * slots * theta
   --allocator proportional|waterfill|priority  budget split across slots
   --pack-impl ref|kernel                       ragged gather/scatter backend
+  --round-impl packed|fused                    fused: ONE kernel each for the
+                                               round's gather and
+                                               verify/commit sides, with the
+                                               budget tier carried as DATA
+                                               (one executable per R)
 
 Device-resident supersteps: fuse R speculation rounds per dispatch (the
 slot-state pytree is donated to XLA and updated in place; the host only
@@ -180,6 +185,7 @@ def run_continuous(args):
         round_budget=budget,
         allocator=allocator,
         pack_impl=args.pack_impl,
+        round_impl=args.round_impl,
         rounds_per_sync=(args.rounds_per_sync if args.rounds_per_sync == "auto"
                          else int(args.rounds_per_sync)),
         overcommit=args.overcommit,
@@ -277,6 +283,13 @@ def main():
     ap.add_argument("--pack-impl", default="ref", choices=("ref", "kernel"),
                     help="ragged gather/scatter backend (the Pallas pack "
                          "kernel runs interpret-mode off-TPU)")
+    ap.add_argument("--round-impl", default="packed",
+                    choices=("packed", "fused"),
+                    help="packed-round body: per-phase programs, or the "
+                         "fused kernel pair (repro.kernels.superstep) with "
+                         "the budget tier as data — one executable per R, "
+                         'composes round_budget="auto" with '
+                         'dispatch="fused"')
     ap.add_argument("--rounds-per-sync", default="1",
                     help="speculation rounds fused per device dispatch: an "
                          "integer, or 'auto' to adapt to the observed "

@@ -18,6 +18,8 @@ concurrently, so summing their walls would double-count real time).
 from __future__ import annotations
 
 import dataclasses
+import math
+from collections import Counter
 from typing import List, Optional, Sequence
 
 
@@ -98,12 +100,24 @@ class EngineStats:
         """Cross-shard view: counters and timing components sum, per-request
         metrics concatenate, ``wall_time`` is the caller's single front-end
         wall (default: the max over shards — concurrent workers overlap, so
-        their walls must not be added)."""
+        their walls must not be added).
+
+        Router-assigned request ids must be GLOBALLY unique: a duplicate
+        rid across shards means two chains served the same request (or a
+        router double-routed one) and every per-request aggregate here
+        would silently double-count it — so it raises."""
         m = cls()
         for s in shards:
             for f in cls._MERGE_SUM:
                 setattr(m, f, getattr(m, f) + getattr(s, f))
             m.per_request.extend(s.per_request)
+        counts = Counter(rm.rid for rm in m.per_request)
+        dupes = sorted(rid for rid, n in counts.items() if n > 1)
+        if dupes:
+            raise ValueError(
+                f"duplicate request ids across merged shards: {dupes[:10]}"
+                f"{' ...' if len(dupes) > 10 else ''} — router-assigned "
+                "rids must be globally unique")
         m.wall_time = (
             wall_time if wall_time is not None
             else max((s.wall_time for s in shards), default=0.0))
@@ -154,17 +168,23 @@ class EngineStats:
     def latency_percentiles(self, qs=(50, 95, 99)) -> dict:
         """Nearest-rank percentiles of queue and completion (submit ->
         retire) latency over retired requests — the open-loop traffic
-        numbers.  Empty engines report zeros."""
+        numbers.
+
+        Explicit edge handling: an empty engine reports zeros, a single
+        sample IS every percentile, and the nearest-rank
+        ``rank = ceil(q * n / 100)`` is clamped to [1, n] so q <= 0 or
+        q >= 100 can never index out of range."""
 
         def pcts(values):
             if not values:
                 return {f"p{q}": 0.0 for q in qs}
             ordered = sorted(values)
             n = len(ordered)
-            return {
-                f"p{q}": ordered[min(n - 1, max(0, -(-q * n // 100) - 1))]
-                for q in qs
-            }
+            out = {}
+            for q in qs:
+                rank = min(max(math.ceil(q * n / 100.0), 1), n)
+                out[f"p{q}"] = ordered[rank - 1]
+            return out
 
         return {
             "queue": pcts([m.queue_latency for m in self.per_request]),
@@ -181,21 +201,26 @@ class EngineStats:
         """Dispatch / device-wait / host-sync split of the engine's wall
         time, absolute and as fractions — the superstep win is the
         host_sync + dispatch fraction shrinking as rounds_per_sync grows.
-        Fractions fall back to the accounted component total when no
-        serve() wall has been recorded (e.g. a step()-driven open loop,
-        where the driver owns the wall clock)."""
-        wall = self.wall_time or (
-            self.dispatch_s + self.device_s + self.host_sync_s)
-        wall = max(wall, 1e-12)
+
+        Fractions are always well-defined: the denominator is the LARGER of
+        the recorded wall and the accounted component total.  Under the
+        double-buffered overlap (and in merged cross-shard views, where
+        components sum over concurrent workers) the components can exceed
+        the single wall clock — dividing by the wall alone would report
+        fractions summing past 1.  When no serve() wall has been recorded
+        at all (e.g. a step()-driven open loop, where the driver owns the
+        wall clock) the accounted total is the denominator."""
+        accounted = self.dispatch_s + self.device_s + self.host_sync_s
+        denom = max(self.wall_time, accounted, 1e-12)
         return {
             "supersteps": self.supersteps,
             "rounds_per_superstep": self.rounds_total / max(self.supersteps, 1),
             "dispatch_s": self.dispatch_s,
             "device_s": self.device_s,
             "host_sync_s": self.host_sync_s,
-            "dispatch_frac": self.dispatch_s / wall,
-            "device_frac": self.device_s / wall,
-            "host_sync_frac": self.host_sync_s / wall,
+            "dispatch_frac": self.dispatch_s / denom,
+            "device_frac": self.device_s / denom,
+            "host_sync_frac": self.host_sync_s / denom,
         }
 
     def summary(self) -> dict:

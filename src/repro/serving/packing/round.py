@@ -28,6 +28,26 @@ bit for bit (asserted in tests/test_packed_round.py).
 
 Compile-once: every shape in the program depends only on the static
 ``(budget, slots, theta_max)`` triple — grants, maps, and windows are data.
+
+Two orthogonal knobs refine the round body:
+
+  ``round_impl="fused"``  runs the non-model work through the fused Pallas
+     round pair (``repro.kernels.superstep``): the ragged gather + all five
+     scalar-window gathers collapse into ONE program, and the target mean,
+     GRS pass, and both commit scatters collapse into ONE program — 7
+     launches per round become 2 (+ plan/verify model calls).  The default
+     ``pack_impl="ref"`` lane composes exactly the unfused primitives
+     (``jnp.take``, ``core.grs.grs``, the drop-row scatter), so fused ≡
+     packed bit for bit by construction.
+
+  ``budget_data``  (budget-as-data) keeps ``budget`` as the STATIC pack
+     shape (the cap — e.g. the auto-tier ladder top) while the tier actually
+     granted this round arrives as a TRACED scalar: the allocator splits
+     ``budget_data`` points, lanes past the granted total are dropped
+     padding, and the executable no longer specializes per tier — budget
+     tiers become data, exactly like the window mix.  Requires
+     ``budget_data <= budget``; the verify call stays cap-shaped (the
+     explicit tradeoff for one executable per R).
 """
 
 from __future__ import annotations
@@ -69,8 +89,17 @@ def packed_round(
     grs_impl: str = "core",
     controller: ThetaController = _STATIC,
     pack_impl: str = "ref",
+    round_impl: str = "packed",
+    budget_data=None,
 ):
-    """One packed verification round over all slots; returns the new states."""
+    """One packed verification round over all slots; returns the new states.
+
+    ``budget`` is the static pack shape; ``budget_data`` (optional traced
+    scalar <= budget) is the tier the allocator actually splits this round.
+    ``round_impl="fused"`` routes the gather and verify/commit through the
+    fused kernel pair (``pack_impl`` picks its ref/kernel lane; ``grs_impl``
+    only applies to the unfused body — fused runs GRS inside the kernel).
+    """
     K = schedule.K
     S = states.a.shape[0]
     ev_ndim = states.v_cache.ndim - 1
@@ -90,7 +119,11 @@ def packed_round(
     # --- 2. pack: allocate the budget, build maps, gather live points -------
     active = states.a < K
     demand = jnp.where(active, plans.n_valid, 0).astype(jnp.int32)
-    grants = allocator.allocate(demand, budget, weights)
+    # budget-as-data: the allocator splits the (possibly traced) tier, the
+    # maps below are built at the static cap — lanes past the granted total
+    # are padding and drop at the commit scatter
+    grants = allocator.allocate(
+        demand, budget if budget_data is None else budget_data, weights)
     grants = jnp.minimum(grants, demand)  # contract guard: g <= d always
     # a fully-granted slot runs its true live window (head index included);
     # a trimmed slot runs the grant as its effective window this round.  A
@@ -105,14 +138,29 @@ def packed_round(
     def flat(x):  # (S, theta, *ev) -> (S*theta, *ev)
         return x.reshape((S * theta,) + x.shape[2:])
 
-    y_pt = gather_rows(flat(plans.y_prev), src_rows, impl=pack_impl)
-    xi_pt = gather_rows(flat(plans.xi_w), src_rows, impl=pack_impl)
-    mh_pt = gather_rows(flat(plans.m_hats), src_rows, impl=pack_impl)
-    t_pt = _gather_scalar(plans.t_w1[:, :theta], maps.slot_id, maps.step_id)
-    u_pt = _gather_scalar(plans.u_w, maps.slot_id, maps.step_id)
-    A_pt = _gather_scalar(plans.A_w, maps.slot_id, maps.step_id)
-    B_pt = _gather_scalar(plans.B_w, maps.slot_id, maps.step_id)
-    sig_pt = _gather_scalar(plans.sig_w, maps.slot_id, maps.step_id)
+    if round_impl == "fused":
+        from repro.kernels.superstep import fused_gather
+
+        # the five per-point scalars ride as lanes of ONE (S*theta, 5)
+        # table, so the fused gather moves event rows and scalars together
+        scal_tbl = jnp.stack(
+            [flat(plans.t_w1[:, :theta]), flat(plans.u_w),
+             flat(plans.A_w), flat(plans.B_w), flat(plans.sig_w)], axis=-1)
+        y_pt, xi_pt, mh_pt, scal_pt = fused_gather(
+            flat(plans.y_prev), flat(plans.xi_w), flat(plans.m_hats),
+            scal_tbl, src_rows, impl=pack_impl)
+        t_pt, u_pt, A_pt, B_pt, sig_pt = (
+            scal_pt[:, i] for i in range(5))
+    else:
+        y_pt = gather_rows(flat(plans.y_prev), src_rows, impl=pack_impl)
+        xi_pt = gather_rows(flat(plans.xi_w), src_rows, impl=pack_impl)
+        mh_pt = gather_rows(flat(plans.m_hats), src_rows, impl=pack_impl)
+        t_pt = _gather_scalar(plans.t_w1[:, :theta], maps.slot_id,
+                              maps.step_id)
+        u_pt = _gather_scalar(plans.u_w, maps.slot_id, maps.step_id)
+        A_pt = _gather_scalar(plans.A_w, maps.slot_id, maps.step_id)
+        B_pt = _gather_scalar(plans.B_w, maps.slot_id, maps.step_id)
+        sig_pt = _gather_scalar(plans.sig_w, maps.slot_id, maps.step_id)
 
     if eager_head:
         # one fixed head lane per slot: the point the chain lands on when it
@@ -144,31 +192,41 @@ def packed_round(
     else:
         g_pt, g_head = g_all, None
 
-    m_tgt_pt = (
-        bcast_right(A_pt, ev_ndim + 1) * y_pt
-        + bcast_right(B_pt, ev_ndim + 1) * g_pt
-    )
-    if grs_impl == "kernel":
-        from repro.kernels.grs.ops import grs as grs_k
-
-        z_pt, acc_pt = grs_k(u_pt, xi_pt, mh_pt, m_tgt_pt, sig_pt,
-                             event_ndim=ev_ndim)
-    else:
-        z_pt, acc_pt = grs(u_pt, xi_pt, mh_pt, m_tgt_pt, sig_pt,
-                           event_ndim=ev_ndim)
-
-    # --- 4. commit: scatter back and close each slot's round ----------------
-    from repro.kernels.pack import scatter_rows
-
     drop_rows = maps.row_id(theta)  # padding lanes -> the drop row
-    z_seg = scatter_rows(z_pt, drop_rows, S * theta, impl=pack_impl).reshape(
-        (S, theta) + z_pt.shape[1:]
-    )
-    acc_seg = (
-        jnp.zeros((S * theta + 1,), bool)
-        .at[drop_rows].set(acc_pt)[: S * theta]
-        .reshape(S, theta)
-    )
+    if round_impl == "fused":
+        from repro.kernels.superstep import fused_verify_commit
+
+        # target mean + GRS + both commit scatters in ONE program
+        z_tbl, acc_tbl = fused_verify_commit(
+            y_pt, g_pt, xi_pt, mh_pt, A_pt, B_pt, u_pt, sig_pt,
+            drop_rows, S * theta, impl=pack_impl)
+        z_seg = z_tbl.reshape((S, theta) + z_tbl.shape[1:])
+        acc_seg = acc_tbl.reshape(S, theta)
+    else:
+        m_tgt_pt = (
+            bcast_right(A_pt, ev_ndim + 1) * y_pt
+            + bcast_right(B_pt, ev_ndim + 1) * g_pt
+        )
+        if grs_impl == "kernel":
+            from repro.kernels.grs.ops import grs as grs_k
+
+            z_pt, acc_pt = grs_k(u_pt, xi_pt, mh_pt, m_tgt_pt, sig_pt,
+                                 event_ndim=ev_ndim)
+        else:
+            z_pt, acc_pt = grs(u_pt, xi_pt, mh_pt, m_tgt_pt, sig_pt,
+                               event_ndim=ev_ndim)
+
+        # --- 4. commit: scatter back and close each slot's round ------------
+        from repro.kernels.pack import scatter_rows
+
+        z_seg = scatter_rows(
+            z_pt, drop_rows, S * theta, impl=pack_impl
+        ).reshape((S, theta) + z_pt.shape[1:])
+        acc_seg = (
+            jnp.zeros((S * theta + 1,), bool)
+            .at[drop_rows].set(acc_pt)[: S * theta]
+            .reshape(S, theta)
+        )
 
     def commit_one(st, plan, z, acc, gh, tr):
         return commit_round(
@@ -202,6 +260,9 @@ def packed_superstep(
     grs_impl: str = "core",
     controller: ThetaController = _STATIC,
     pack_impl: str = "ref",
+    round_impl: str = "packed",
+    fused_round: bool = False,
+    budget_data=None,
 ):
     """``rounds`` packed verification rounds in ONE dispatch (a ``lax.scan``).
 
@@ -216,7 +277,14 @@ def packed_superstep(
     Bit-identical to ``rounds`` sequential ``packed_round`` calls, and — at
     covering budgets — to ``asd_superstep`` per slot (tests/test_superstep.py).
     Shapes depend only on the static (rounds, budget, slots, theta) tuple.
+
+    ``fused_round=True`` (sugar for ``round_impl="fused"``) runs every scan
+    iteration through the fused kernel pair; ``budget_data`` (traced tier
+    <= the static ``budget`` cap) makes the tier data instead of shape —
+    see ``packed_round``.
     """
+    impl = "fused" if fused_round else round_impl
+
     def body(ss, _):
         return packed_round(
             make_fn, params, schedule, ss, conds, weights,
@@ -224,6 +292,7 @@ def packed_superstep(
             eager_head=eager_head, noise_mode=noise_mode,
             keep_trajectory=keep_trajectory, grs_impl=grs_impl,
             controller=controller, pack_impl=pack_impl,
+            round_impl=impl, budget_data=budget_data,
         ), None
 
     states, _ = jax.lax.scan(body, states, None, length=int(rounds))
@@ -249,6 +318,9 @@ def sharded_packed_superstep(
     grs_impl: str = "core",
     controller: ThetaController = _STATIC,
     pack_impl: str = "ref",
+    round_impl: str = "packed",
+    fused_round: bool = False,
+    budget_data=None,  # (num_shards,) i32 per-shard tiers, or None
     axis_name: str = "slots",
 ):
     """Every shard's packed superstep in ONE dispatch, via ``shard_map``
@@ -266,18 +338,23 @@ def sharded_packed_superstep(
 
     Bit-identical to looping ``packed_superstep`` over the shard axis on one
     device (tests/test_sharded_serving.py), with ``shard_map``'s constraint
-    that all shards share one static (rounds, budget, S_local, theta) tuple
-    — per-shard budget TIERS need the per-worker dispatch path
-    (``repro.serving.sharded.ShardedASDEngine``).  On CPU, simulate devices
-    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    that all shards share one static (rounds, budget, S_local, theta) tuple.
+    Per-shard budget TIERS fit inside that constraint via budget-as-data:
+    pass the per-shard tiers as ``budget_data`` (a (num_shards,) i32 vector,
+    sharded like the slot batch) with ``budget`` as the common static cap —
+    each shard's allocator splits ITS tier while every shard runs the same
+    program.  Without ``budget_data``, differing tiers need the per-worker
+    dispatch path (``repro.serving.sharded.ShardedASDEngine``).  On CPU,
+    simulate devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
     """
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed.sharding import get_shard_map
 
     shard_map = get_shard_map()
+    impl = "fused" if fused_round else round_impl
 
-    def one_shard(p, st, w, cond):
+    def one_shard(p, st, w, cond, b):
         # inside shard_map the shard axis has local size 1: peel it, run the
         # ordinary per-shard superstep, and put it back for the out_spec
         st1 = jax.tree_util.tree_map(lambda x: x[0], st)
@@ -288,15 +365,29 @@ def sharded_packed_superstep(
             eager_head=eager_head, noise_mode=noise_mode,
             keep_trajectory=keep_trajectory, grs_impl=grs_impl,
             controller=controller, pack_impl=pack_impl,
+            round_impl=impl,
+            budget_data=None if b is None else b[0],
         )
         return jax.tree_util.tree_map(lambda x: x[None], out)
 
     sh, rep = P(axis_name), P()
+    if budget_data is None:
+        if conds is None:
+            fn = shard_map(
+                lambda p, st, w: one_shard(p, st, w, None, None), mesh=mesh,
+                in_specs=(rep, sh, sh), out_specs=sh, check_rep=False)
+            return fn(params, states, weights)
+        fn = shard_map(
+            lambda p, st, w, c: one_shard(p, st, w, c, None), mesh=mesh,
+            in_specs=(rep, sh, sh, sh), out_specs=sh, check_rep=False)
+        return fn(params, states, weights, conds)
+    budget_data = jnp.asarray(budget_data, jnp.int32)
     if conds is None:
         fn = shard_map(
-            lambda p, st, w: one_shard(p, st, w, None), mesh=mesh,
-            in_specs=(rep, sh, sh), out_specs=sh, check_rep=False)
-        return fn(params, states, weights)
-    fn = shard_map(one_shard, mesh=mesh, in_specs=(rep, sh, sh, sh),
-                   out_specs=sh, check_rep=False)
-    return fn(params, states, weights, conds)
+            lambda p, st, w, b: one_shard(p, st, w, None, b), mesh=mesh,
+            in_specs=(rep, sh, sh, sh), out_specs=sh, check_rep=False)
+        return fn(params, states, weights, budget_data)
+    fn = shard_map(
+        lambda p, st, w, c, b: one_shard(p, st, w, c, b), mesh=mesh,
+        in_specs=(rep, sh, sh, sh, sh), out_specs=sh, check_rep=False)
+    return fn(params, states, weights, conds, budget_data)

@@ -33,7 +33,9 @@ Two dispatch shapes drive the shards:
       per-shard programs concurrently across devices, and the boundary
       costs ONE dispatch + ONE sync however many shards there are — the
       shape that scales on a pod and under CPU multi-device simulation.
-      Requires a common (rounds_per_sync, round_budget) across shards.
+      Requires a common rounds_per_sync across shards; budgets must be
+      common too unless ``round_impl="fused"`` (budget-as-data), where
+      per-shard tiers ride into the one program as a sharded vector.
 
 Exactness: routing and sharding are pure host-side scheduling.  A chain's
 trajectory depends only on its own ``ASDChainState`` (per-request key), so a
@@ -88,10 +90,12 @@ class ShardedASDEngine:
         (shards, slots_local, ...) and XLA executes the per-shard programs
         concurrently across devices — the dispatch shape that actually
         scales on a pod (and on CPU multi-device simulation), at the cost
-        of one common (rounds_per_sync, round_budget) across shards
-        (``round_budget="auto"`` therefore requires per-shard dispatch).
-        Both modes run the identical per-shard math — bit-identical
-        samples (asserted in tests).
+        of one common rounds_per_sync across shards.  A common round_budget
+        is required too UNLESS ``round_impl="fused"``: budget-as-data keeps
+        the pack shape at the static cap, so per-shard auto tiers travel as
+        a sharded data vector and ``round_budget="auto"`` composes with
+        fused dispatch.  Both modes run the identical per-shard math —
+        bit-identical samples (asserted in tests).
       devices: optional explicit per-shard device list (e.g. from
         ``repro.distributed.sharding.shard_placements``).  Default: with
         multiple shards and multiple local devices, shard i is pinned to
@@ -137,11 +141,14 @@ class ShardedASDEngine:
         slots_local = num_slots // shards
         self.router = router if router is not None else LeastLoaded()
         fused = dispatch == "fused"
-        if fused and worker_kwargs.get("round_budget") == "auto":
+        if (fused and worker_kwargs.get("round_budget") == "auto"
+                and worker_kwargs.get("round_impl") != "fused"):
             raise ValueError(
                 'round_budget="auto" (per-shard budget tiers) requires '
                 'dispatch="per-shard": one fused shard_map program cannot '
-                "give shards different static budgets")
+                "give shards different static budgets.  Use "
+                'round_impl="fused" (budget-as-data) to carry per-shard '
+                "tiers as data inside one fused program.")
         if devices is None and shards > 1 and not fused:
             local = jax.devices()
             if len(local) > 1:
@@ -236,7 +243,7 @@ class ShardedASDEngine:
                 lambda x: x.reshape((shards, S_local) + x.shape[1:]), upd)
 
         self._fused_admit = jax.jit(
-            _admit, donate_argnums=(0,),
+            _admit, donate_argnums=(0,) if w0._donate else (),
             out_shardings=jax.tree_util.tree_map(
                 lambda _: self._sharding, self._states))
 
@@ -251,7 +258,11 @@ class ShardedASDEngine:
                 self._sharding)
 
     def _get_fused_superstep(self, R: int, budget):
-        key = (R, budget)
+        # budget-as-data (round_impl="fused"): one program per R; the
+        # per-shard tiers arrive as a (shards,) vector, each shard peeling
+        # its own scalar — different tiers inside ONE shard_map program
+        as_data = self.workers[0]._budget_as_data
+        key = (R, "data" if as_data else budget)
         fn = self._fused_fns.get(key)
         if fn is not None:
             return fn
@@ -265,7 +276,7 @@ class ShardedASDEngine:
         K, keep = w0.schedule.K, w0.keep_trajectory
         shard_map = get_shard_map()
 
-        def one_shard(st, cond, w, p):
+        def one_shard(st, cond, w, p, b):
             # inside shard_map the shard axis has local size 1: peel it,
             # run this shard's superstep via the worker's ONE parameterized
             # body (_run_rounds — the same packed_superstep/asd_superstep
@@ -275,7 +286,8 @@ class ShardedASDEngine:
             # shard's rows.
             st1 = jax.tree_util.tree_map(lambda x: x[0], st)
             c1 = None if cond is None else cond[0]
-            out = w0._run_rounds(st1, c1, p, w[0], R, budget)
+            out = w0._run_rounds(
+                st1, c1, p, w[0], R, budget if b is None else b[0])
             info = jnp.stack(
                 [getattr(out, f).astype(jnp.int32) for f in _SYNC_ROWS])
             samples = jax.vmap(lambda s: chain_sample(s, K, keep))(out)
@@ -283,24 +295,43 @@ class ShardedASDEngine:
             return add, info[None], samples[None]
 
         sh, rep = P("slots"), P()
-        if self._conds is None:
-            body = shard_map(
-                lambda st, w, p: one_shard(st, None, w, p), mesh=self._mesh,
-                in_specs=(sh, sh, rep), out_specs=(sh, sh, sh),
-                check_rep=False)
+        has_conds = self._conds is not None
+        if as_data:
+            if has_conds:
+                body = shard_map(
+                    lambda st, c, w, p, b: one_shard(st, c, w, p, b),
+                    mesh=self._mesh, in_specs=(sh, sh, sh, rep, sh),
+                    out_specs=(sh, sh, sh), check_rep=False)
 
-            def fused(states, conds, p, weights):
-                return body(states, weights, p)
-        else:
+                def fused(states, conds, p, weights, budgets):
+                    return body(states, conds, weights, p, budgets)
+            else:
+                body = shard_map(
+                    lambda st, w, p, b: one_shard(st, None, w, p, b),
+                    mesh=self._mesh, in_specs=(sh, sh, rep, sh),
+                    out_specs=(sh, sh, sh), check_rep=False)
+
+                def fused(states, conds, p, weights, budgets):
+                    return body(states, weights, p, budgets)
+        elif has_conds:
             body = shard_map(
-                one_shard, mesh=self._mesh,
-                in_specs=(sh, sh, sh, rep), out_specs=(sh, sh, sh),
-                check_rep=False)
+                lambda st, c, w, p: one_shard(st, c, w, p, None),
+                mesh=self._mesh, in_specs=(sh, sh, sh, rep),
+                out_specs=(sh, sh, sh), check_rep=False)
 
             def fused(states, conds, p, weights):
                 return body(states, conds, weights, p)
+        else:
+            body = shard_map(
+                lambda st, w, p: one_shard(st, None, w, p, None),
+                mesh=self._mesh, in_specs=(sh, sh, rep),
+                out_specs=(sh, sh, sh), check_rep=False)
 
-        fn = self._fused_fns[key] = jax.jit(fused, donate_argnums=(0,))
+            def fused(states, conds, p, weights):
+                return body(states, weights, p)
+
+        donate = (0,) if w0._donate else ()
+        fn = self._fused_fns[key] = jax.jit(fused, donate_argnums=donate)
         return fn
 
     def _dispatch_fused(self):
@@ -328,8 +359,11 @@ class ShardedASDEngine:
                 self._conds = jax.device_put(
                     jnp.asarray(self._conds_host), self._sharding)
         self._refresh_weights()
-        # one common (R, budget) across shards: worker 0 picks, siblings
-        # follow (their admission contexts must quantize consistently)
+        # one common R across shards: worker 0 picks, siblings follow
+        # (their admission contexts must quantize consistently).  The
+        # budget is common too — UNLESS budget-as-data (round_impl=
+        # "fused"), where each worker re-tiers independently and the
+        # per-shard tiers ride into the one program as a sharded vector.
         R = self.workers[0]._pick_rounds()
         budget = self.workers[0]._pick_budget()
         for w in self.workers[1:]:
@@ -337,9 +371,17 @@ class ShardedASDEngine:
         fn = self._get_fused_superstep(R, budget)
         cold = getattr(fn, "_cache_size", lambda: 1)() == 0
         t0 = time.perf_counter()
-        self._states, info, samples = fn(
-            self._states, self._conds, self.workers[0]._params,
-            self._weights_stacked)
+        if self.workers[0]._budget_as_data:
+            budgets = np.asarray(
+                [budget] + [w._pick_budget() for w in self.workers[1:]],
+                np.int32)
+            self._states, info, samples = fn(
+                self._states, self._conds, self.workers[0]._params,
+                self._weights_stacked, jnp.asarray(budgets))
+        else:
+            self._states, info, samples = fn(
+                self._states, self._conds, self.workers[0]._params,
+                self._weights_stacked)
         dt = time.perf_counter() - t0
         snapshots = []
         for w in self.workers:

@@ -27,9 +27,13 @@ tracks an EWMA of its live verification-point demand and re-picks its
 ``round_budget`` at superstep boundaries from a power-of-two ladder —
 upshifts are immediate (demand is being trimmed NOW), downshifts take one
 rung at a time and only once demand sits below ``budget_hysteresis`` of the
-next tier down, so the tier never flaps around a noisy demand level.  Each
-tier reuses the per-(R, budget) executable cache, which stays O(log * log)
-entries (asserted).
+next tier down, so the tier never flaps around a noisy demand level.  The
+EWMA also DECAYS at empty boundaries (zero live demand), so a drained burst
+releases its tier instead of pinning the top rung forever.  Each tier
+reuses the per-(R, budget) executable cache, which stays O(log * log)
+entries (asserted) — and with ``round_impl="fused"`` the tier becomes DATA
+(budget-as-data: the pack shape is the ladder cap, the tier a traced
+scalar), collapsing the cache to one executable per R.
 """
 
 from __future__ import annotations
@@ -138,7 +142,20 @@ class ShardWorker:
         (default: waterfilling).  Its priority weights come from
         ``Request.priority`` at admission.
       pack_impl: "ref" (jnp gather/scatter) or "kernel" (the Pallas pack
-        kernel; interpret-mode off-TPU).
+        kernel; backend-resolved via ``repro.kernels._backend``).
+      round_impl: "packed" (default: the per-phase packed round body) or
+        "fused" (packed execution only: each round's gather and
+        verify/commit run through the fused kernel pair in
+        ``repro.kernels.superstep``, and the round budget becomes DATA —
+        the pack shape is the static cap, the tier a traced scalar, so the
+        executable cache is keyed per R alone and auto-tiering never
+        compiles per tier).  ``pack_impl`` picks the fused pair's
+        ref/kernel lane.
+      donate: donate the slot-state pytree to the superstep/admit dispatches
+        (in-place buffer reuse).  Default (None): on for every backend
+        EXCEPT cpu — the CPU PJRT runtime runs donated executions
+        synchronously, which serializes the double-buffered serve loop and
+        books device execution time as dispatch time.
       rounds_per_sync: speculation rounds fused per device dispatch (the
         SUPERSTEP length R), or "auto" for the accept-rate ladder.
         Superstep dispatches DONATE the slot-state pytree to XLA, so the
@@ -181,9 +198,11 @@ class ShardWorker:
         round_budget=None,
         allocator=None,
         pack_impl: str = "ref",
+        round_impl: str = "packed",
         rounds_per_sync=1,
         overcommit: float = 1.0,
         budget_hysteresis: float = 0.75,
+        donate: Optional[bool] = None,
         device=None,
         shard_id: int = 0,
     ):
@@ -204,6 +223,21 @@ class ShardWorker:
         if execution not in ("unpacked", "packed"):
             raise ValueError(f"unknown execution mode {execution!r}")
         self.execution = execution
+        if round_impl not in ("packed", "fused"):
+            raise ValueError(f"unknown round_impl {round_impl!r}")
+        if round_impl == "fused" and execution != "packed":
+            raise ValueError(
+                'round_impl="fused" requires execution="packed" (the fused '
+                "kernels run the packed round body)")
+        self.round_impl = round_impl
+        # donation makes the CPU runtime execute dispatches synchronously
+        # (the aliased input buffer must be finalized before the call
+        # returns), so the double-buffered loops lose their overlap and the
+        # dispatch timer absorbs the whole device execution — default it off
+        # there, on everywhere else (TPU/GPU dispatch stays async)
+        self._donate = (
+            bool(donate) if donate is not None
+            else jax.default_backend() != "cpu")
         if overcommit < 1.0:
             raise ValueError(f"overcommit must be >= 1, got {overcommit}")
         self.overcommit = float(overcommit)
@@ -232,6 +266,13 @@ class ShardWorker:
                 f"round_budget {self.round_budget} < num_slots {num_slots}: "
                 "every live chain needs at least one verification point per "
                 "round to make progress")
+        # budget-as-data (fused round): the pack shape is this static cap
+        # (the ladder top in auto mode, the fixed budget otherwise); the
+        # tier actually granted arrives at each dispatch as a traced scalar
+        self._budget_as_data = round_impl == "fused"
+        self._budget_cap = (
+            self._budget_ladder[-1] if self._budget_auto
+            else self.round_budget)
         if rounds_per_sync == "auto":
             self._auto_rps = True
             self._rps = 1  # last picked R; refreshed per boundary
@@ -301,8 +342,7 @@ class ShardWorker:
             # flags, live windows, counters, and each slot's final sample —
             # so no separate peek dispatch ever touches the (possibly
             # already donated-away) states.
-            def _superstep(states, conds, p, weights):
-                states = self._run_rounds(states, conds, p, weights, R, budget)
+            def _pack_sync(states):
                 info = jnp.stack(
                     [getattr(states, f).astype(jnp.int32) for f in _SYNC_ROWS]
                 )
@@ -310,12 +350,25 @@ class ShardWorker:
                     lambda st: chain_sample(st, K, keep))(states)
                 return states, (info, samples)
 
-            return jax.jit(_superstep, donate_argnums=(0,))
+            donate = (0,) if self._donate else ()
+            if budget == "data":
+                # budget-as-data: the tier is a TRACED call argument; one
+                # executable serves the whole auto ladder
+                def _superstep(states, conds, p, weights, budget_t):
+                    return _pack_sync(self._run_rounds(
+                        states, conds, p, weights, R, budget_t))
+            else:
+                def _superstep(states, conds, p, weights):
+                    return _pack_sync(self._run_rounds(
+                        states, conds, p, weights, R, budget))
+
+            return jax.jit(_superstep, donate_argnums=donate)
 
         self._make_superstep = _make_superstep
         # one executable per (R, budget) pair; the auto modes draw both
         # coordinates from power-of-two ladders so this stays O(log * log)
         self._superstep_fns: dict[tuple, Callable] = {}
+        self._compiled_supersteps = 0  # this worker's own cache misses
         self._weights = np.ones((num_slots,), np.float32)
         self._weights_version = 0  # bumped per change: fused-mode restack cue
         # device copy of the allocator weights: updated IN PLACE one lane at
@@ -341,7 +394,8 @@ class ShardWorker:
                 lambda b, n: b.at[idxs].set(n), states, new_sts
             )
 
-        self._admit_fn = jax.jit(_admit, donate_argnums=(0,))
+        self._admit_fn = jax.jit(
+            _admit, donate_argnums=(0,) if self._donate else ())
 
         # All slots start as already-finished dummy chains: frozen under
         # asd_round until a real request is admitted over them.
@@ -369,14 +423,24 @@ class ShardWorker:
         """R fused rounds over the slot batch — the single parameterized
         superstep body.  Packed execution budgets the per-round model call
         (shapes depend on the static (R, budget) pair); unpacked vmaps the
-        theta_max-shaped per-slot superstep and ignores the budget."""
+        theta_max-shaped per-slot superstep and ignores the budget.  With
+        ``round_impl="fused"``, ``budget`` may be a TRACED tier — the pack
+        shape is the static ``_budget_cap`` and the tier rides as data."""
         if self.execution == "packed":
             from repro.serving.packing import packed_superstep
 
+            if self._budget_as_data:
+                return packed_superstep(
+                    self._make_fn, p, self.schedule, states, conds, weights,
+                    rounds=R, budget=self._budget_cap, budget_data=budget,
+                    allocator=self.allocator, pack_impl=self.pack_impl,
+                    round_impl="fused", **self._statics,
+                )
             return packed_superstep(
                 self._make_fn, p, self.schedule, states, conds, weights,
                 rounds=R, budget=budget, allocator=self.allocator,
-                pack_impl=self.pack_impl, **self._statics,
+                pack_impl=self.pack_impl, round_impl=self.round_impl,
+                **self._statics,
             )
 
         def one(st, cond):
@@ -421,17 +485,26 @@ class ShardWorker:
 
     # -- superstep machinery -------------------------------------------------
 
-    def _get_superstep(self, R: int, budget: Optional[int]):
-        key = (R, budget)
+    def _get_superstep(self, R: int, budget):
+        # budget-as-data: one program per R serves every tier — the budget
+        # coordinate collapses to the sentinel "data"
+        key = (R, "data" if self._budget_as_data else budget)
         fn = self._superstep_fns.get(key)
         if fn is None:
-            fn = self._superstep_fns[key] = self._make_superstep(R, budget)
-            # the auto ladders bound the program count: O(log R * log budget)
+            fn = self._superstep_fns[key] = self._make_superstep(R, key[1])
+            # the auto ladders bound the program count: O(log R * log budget).
+            # Count THIS worker's compiles, not the pool size — the pool is
+            # shared across siblings (adopt_programs) whose statics differ,
+            # so its total length is legitimately larger than one worker's
+            # ladder bound.
+            self._compiled_supersteps += 1
             max_r = (_AUTO_MAX_R.bit_length() if self._auto_rps else 1)
-            max_b = (len(self._budget_ladder) if self._budget_auto else 1)
-            assert len(self._superstep_fns) <= max_r * max_b + 1, (
-                f"superstep cache grew past the ladder bound: "
-                f"{sorted(self._superstep_fns)}")
+            max_b = (
+                1 if self._budget_as_data
+                else len(self._budget_ladder) if self._budget_auto else 1)
+            assert self._compiled_supersteps <= max_r * max_b + 1, (
+                f"worker compiled more superstep programs than its ladders "
+                f"allow: {sorted(self._superstep_fns)}")
         return fn
 
     def _pick_rounds(self) -> int:
@@ -591,8 +664,13 @@ class ShardWorker:
         # jax accessor: degrade to "warm" if an upgrade drops it
         cold = getattr(fn, "_cache_size", lambda: 1)() == 0
         t0 = time.perf_counter()
-        self._states, sync = fn(
-            self._states, self._conds, self._params, self._weights_dev)
+        if self._budget_as_data:
+            self._states, sync = fn(
+                self._states, self._conds, self._params, self._weights_dev,
+                np.int32(B))
+        else:
+            self._states, sync = fn(
+                self._states, self._conds, self._params, self._weights_dev)
         if not cold:
             self.stats.dispatch_s += time.perf_counter() - t0
         self.stats.rounds_total += R
@@ -630,10 +708,18 @@ class ShardWorker:
         self._live_demand = int(
             np.minimum(theta_live[live], (K - a)[live]).sum())
         # the auto budget tier tracks demand through an EWMA, not the raw
-        # sample: one empty boundary must not collapse the tier
-        self._demand_ewma = (
-            float(self._live_demand) if self._demand_ewma == 0.0
-            else 0.5 * self._demand_ewma + 0.5 * self._live_demand)
+        # sample.  Empty boundaries DECAY it multiplicatively instead of
+        # blending in the zero: one momentary gap cannot collapse the tier
+        # (the downshift path drops a single rung per boundary anyway), but
+        # a drained burst stops pinning the top tier — after a couple of
+        # idle boundaries the EWMA clears the hysteresis band and the next
+        # trickle of traffic reopens at a demand-sized tier
+        if self._live_demand == 0:
+            self._demand_ewma *= 0.5
+        else:
+            self._demand_ewma = (
+                float(self._live_demand) if self._demand_ewma == 0.0
+                else 0.5 * self._demand_ewma + 0.5 * self._live_demand)
         finished = [
             slot for slot in self.scheduler.active_slots()
             if self.scheduler.slot_info(slot).admit_round < snapshot_rounds
@@ -662,6 +748,15 @@ class ShardWorker:
                 # EWMA over retired chains feeds SERR/deadline estimates
                 self._accept_ewma = (
                     0.8 * self._accept_ewma + 0.2 * rm.accept_rate)
+        if not self.scheduler.active_slots() and (
+                self.scheduler.queue_depth == 0):
+            # the shard went fully idle: no further harvests will run, so
+            # the EWMA would otherwise FREEZE at the drained burst's level
+            # and pin the auto tier at the top rung until the next traffic
+            # paid burst-sized supersteps.  Reset the demand signal — the
+            # next admission re-tiers from ITS OWN demand.
+            self._live_demand = 0
+            self._demand_ewma = 0.0
         self.stats.host_sync_s += time.perf_counter() - t1
         if not cold:  # a cold dispatch's elapsed time is mostly jit compile
             # ``done_at``: a fused front end passes ONE completion stamp for

@@ -107,3 +107,60 @@ def test_latency_percentiles_nearest_rank():
     assert pct["queue"]["p50"] == pytest.approx(0.2)
     assert pct["queue"]["p99"] == pytest.approx(0.4)
     assert pct["completion"]["p95"] == pytest.approx(1.4)
+
+
+def _rm(rid, q=0.1):
+    return RequestMetrics(rid=rid, queue_latency=q, service_time=1.0,
+                          rounds=1, head_calls=1, model_evals=1,
+                          accepts=1, proposals=1)
+
+
+def test_latency_percentiles_single_sample_and_extreme_qs():
+    """Regression: one retired request IS every percentile (the nearest
+    rank is clamped to [1, n]), including out-of-range q values."""
+    s = EngineStats()
+    s.observe(_rm(0, q=0.7))
+    pct = s.latency_percentiles(qs=(0, 1, 50, 99, 100, 150))
+    assert all(v == pytest.approx(0.7) for v in pct["queue"].values())
+    # and q=0/q>100 never index out of range on longer series either
+    s.observe(_rm(1, q=0.9))
+    pct = s.latency_percentiles(qs=(0, 100, 150))
+    assert pct["queue"]["p0"] == pytest.approx(0.7)    # clamps up to rank 1
+    assert pct["queue"]["p100"] == pytest.approx(0.9)
+    assert pct["queue"]["p150"] == pytest.approx(0.9)  # clamps down to n
+
+
+def test_merged_rejects_duplicate_rids():
+    """Regression: a router double-routing a request (or two shards serving
+    the same rid) used to silently double-count every per-request aggregate
+    in the merged view — it must raise instead."""
+    a, b = EngineStats(shard=0), EngineStats(shard=1)
+    a.observe(_rm(0))
+    a.observe(_rm(1))
+    b.observe(_rm(2))
+    merged = EngineStats.merged([a, b])  # disjoint rids: fine
+    assert merged.retired == 3
+    b.observe(_rm(1))  # shard 1 also claims rid 1
+    with pytest.raises(ValueError, match="duplicate request ids"):
+        EngineStats.merged([a, b])
+
+
+def test_timing_breakdown_fractions_under_overlap():
+    """Regression: with double-buffered overlap (or merged concurrent
+    shards) the summed timing components can exceed the single wall clock;
+    the fractions used to divide by the wall alone and report a breakdown
+    summing past 1."""
+    s = EngineStats(dispatch_s=1.0, device_s=1.0, host_sync_s=1.0,
+                    wall_time=1.5)
+    t = s.timing_breakdown()
+    total = t["dispatch_frac"] + t["device_frac"] + t["host_sync_frac"]
+    assert total <= 1.0 + 1e-9
+    assert t["dispatch_frac"] == pytest.approx(1 / 3)
+    # no wall recorded at all (step()-driven open loop): fractions still
+    # well-defined against the accounted total
+    s2 = EngineStats(dispatch_s=0.2, device_s=0.6, host_sync_s=0.2)
+    t2 = s2.timing_breakdown()
+    assert t2["device_frac"] == pytest.approx(0.6)
+    # fully empty stats: defined, zero, no division error
+    t3 = EngineStats().timing_breakdown()
+    assert t3["dispatch_frac"] == 0.0

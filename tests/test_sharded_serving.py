@@ -316,6 +316,30 @@ def test_budget_tier_ladder_and_hysteresis(sl_model2, sched_tiny):
     assert eng._pick_budget() == ladder[0]
 
 
+def test_auto_budget_unpins_after_burst_drains(sl_model2, sched_tiny):
+    """Regression: after a burst fully drains no further harvests run, so
+    the demand EWMA FROZE at the burst's level and pinned the auto tier at
+    the top rung — the first trickle after an idle gap paid burst-sized
+    supersteps indefinitely.  The drained boundary must reset the signal,
+    and a following trickle must walk the tier down within the hysteresis
+    schedule (one rung per boundary)."""
+    eng = _continuous(sl_model2, sched_tiny, execution="packed",
+                      round_budget="auto",
+                      controller=AcceptRateTheta(theta_min=1))
+    ladder = eng._budget_ladder
+    eng.serve(_requests(12))  # burst: demand saturates the slots
+    # the idle boundary cleared the pressure signal (it used to hold the
+    # last blended demand with nothing left to decay it)
+    assert eng._demand_ewma == 0.0 and eng._live_demand == 0
+
+    # burst -> trickle: with the tier parked at the top rung, one lone
+    # chain must pull it below the burst tier, not inherit it
+    eng.round_budget = ladder[-1]
+    eng.serve(_requests(1, seed0=999))
+    assert eng.round_budget < ladder[-1]
+    assert eng._demand_ewma == 0.0  # trickle drained -> reset again
+
+
 def test_budget_auto_engine_serves_and_bounds_cache(sl_model2, sched_tiny):
     """An auto-budget engine serves correct work and compiles at most one
     executable per (R, tier) pair — the ladder keeps the cache O(log)."""
