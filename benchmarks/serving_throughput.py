@@ -803,6 +803,164 @@ def run_shard_sweep(params, factory, sched, theta, slots_local, d, seed,
     )
 
 
+def run_model_parallel_sweep(theta, slots, requests, repeats, K=16,
+                             mp_values=(1, 2, 4),
+                             dispatch_shapes=("per-shard", "fused"),
+                             shards=1):
+    """Tensor-parallel verify inside the serving mesh: mp in ``mp_values``
+    x dispatch shapes, on a REAL (smoke-sized) denoiser — the GMM toy has
+    no projections to shard.  Writes results/model_parallel.json.
+
+    Every arm serves the identical key-carrying request pool.  In-run
+    assertions, not post-hoc claims:
+
+      * mp=1 arms are BITWISE identical to the replicated golden (mp=1 is
+        the existing engine code path);
+      * mp>1 arms match within allclose (the all-reduce reassociates sums)
+        and re-running the same arm is bitwise deterministic;
+      * the placed per-device verify weights shrink by 1/mp (asserted on
+        the column-parallel wq's local head count);
+      * the superstep count per boundary does not grow with mp.
+
+    Per-arm ``collective_s`` (calibrated in-program all-reduce seconds) and
+    its fraction of wall are recorded — the price the 1/mp FLOPs buy.
+    Arms whose device demand (shards * mp) exceeds the host are skipped
+    and LISTED in the report (no silent truncation).  Simulate devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
+    from repro.configs.registry import paper_diffusion_policy_smoke
+    from repro.core.schedules import ddpm as ddpm_schedule
+    from repro.distributed.sharding import serving_mesh, tp_param_pspecs
+    from repro.models.diffusion import (
+        denoiser_init, make_ddpm_model_fn, tp_collective_payloads)
+    from repro.nn.param import unbox
+
+    dc = paper_diffusion_policy_smoke()
+    params = unbox(denoiser_init(jax.random.PRNGKey(0), dc))
+    boxed = jax.eval_shape(
+        lambda k: denoiser_init(k, dc), jax.random.PRNGKey(0))
+    sched = ddpm_schedule(K=K)
+    n_dev = len(jax.devices())
+
+    def make_reqs():
+        rng = np.random.default_rng(11)
+        return [
+            Request(i, key=jax.random.PRNGKey(4000 + i),
+                    y0=rng.standard_normal(
+                        (dc.seq_len, dc.d_data)).astype(np.float32))
+            for i in range(requests)
+        ]
+
+    def build(mp, dispatch):
+        common = dict(
+            schedule=sched, event_shape=(dc.seq_len, dc.d_data),
+            num_slots=slots, shards=shards, theta=theta, eager_head=True,
+            noise_mode="counter", keep_trajectory=False, params=params,
+            dispatch=dispatch, router=make_router("round-robin"))
+        if mp == 1:
+            return ShardedASDEngine(
+                lambda p, cond: make_ddpm_model_fn(p, dc), **common)
+        specs = tp_param_pspecs(boxed, serving_mesh(shards, mp))
+        return ShardedASDEngine(
+            lambda p, cond: make_ddpm_model_fn(p, dc, tp_axis="model"),
+            model_shards=mp, param_specs=specs,
+            collective_payloads=tp_collective_payloads(params, specs, dc),
+            **common)
+
+    def local_wq_heads(eng):
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                eng.workers[0]._params)[0]:
+            if getattr(path[-1], "key", None) == "wq":
+                return int(leaf.addressable_shards[0].data.shape[-2])
+        raise KeyError("wq")
+
+    arms_spec, skipped = {}, []
+    for mp in mp_values:
+        for dispatch in dispatch_shapes:
+            name = f"mp{mp}-{dispatch}"
+            if shards * mp > n_dev:
+                skipped.append(name)
+                print(f"[{name}] skipped: needs {shards * mp} devices, "
+                      f"have {n_dev}")
+                continue
+            arms_spec[name] = (mp, dispatch)
+
+    warms = {}
+    for name, (mp, dispatch) in arms_spec.items():
+        warm = build(mp, dispatch)
+        warm.serve(make_reqs())
+        warms[name] = warm
+
+    golden, tp_outputs = None, {}
+    best = {}
+    for _ in range(repeats):
+        for name, (mp, dispatch) in arms_spec.items():
+            eng = build(mp, dispatch).adopt_programs(warms[name])
+            reqs_n = make_reqs()
+            t0 = time.perf_counter()
+            out = eng.serve(reqs_n)
+            wall = time.perf_counter() - t0
+            assert len(out) == requests
+            if mp == 1:
+                if golden is None:
+                    golden = out
+                else:  # mp=1 IS the replicated engine: bit parity, in-run
+                    for r in reqs_n:
+                        np.testing.assert_array_equal(out[r.rid],
+                                                      golden[r.rid])
+            else:
+                if golden is not None:  # reassociated sums: tight allclose
+                    for r in reqs_n:
+                        np.testing.assert_allclose(
+                            out[r.rid], golden[r.rid],
+                            rtol=1e-5, atol=1e-5)
+                if name in tp_outputs:  # fixed reduction order: bitwise
+                    for r in reqs_n:
+                        np.testing.assert_array_equal(out[r.rid],
+                                                      tp_outputs[name][r.rid])
+                tp_outputs[name] = out
+                # the 1/mp claim, asserted on the placed shard shapes
+                assert local_wq_heads(eng) == dc.backbone.n_heads // mp
+            if name not in best or wall < best[name][0]:
+                best[name] = (wall, eng.stats)
+
+    arms = {}
+    for name, (wall, s) in best.items():
+        mp, dispatch = arms_spec[name]
+        t = s.timing_breakdown()
+        arms[name] = dict(
+            model_shards=mp,
+            dispatch=dispatch,
+            shards=shards,
+            wall_time_s=wall,
+            samples_per_s=s.retired / wall,
+            supersteps=s.supersteps,
+            fused_rounds=s.rounds_total,
+            collective_s=s.collective_s,
+            collective_frac=t["collective_frac"],
+            timing=t,
+        )
+        print(f"[{name:14s}] {arms[name]['samples_per_s']:.2f} samples/s, "
+              f"{s.rounds_total} rounds / {s.supersteps} supersteps, "
+              f"collectives {1e3 * s.collective_s:.1f}ms "
+              f"({100 * t['collective_frac']:.2f}% of wall)")
+
+    base = {d: arms.get(f"mp1-{d}") for d in dispatch_shapes}
+    superstep_parity = all(
+        arms[n]["supersteps"] == base[d]["supersteps"]
+        for n, (mp, d) in arms_spec.items()
+        if mp > 1 and base.get(d) is not None)
+    return dict(
+        arms=arms,
+        skipped_arms=skipped,
+        mp_values=list(mp_values),
+        devices=n_dev,
+        model="paper-diffusion-policy-smoke",
+        parity_mp1_bitwise=golden is not None,  # asserted in-run above
+        parity_mp_allclose=bool(tp_outputs),
+        superstep_count_unchanged=bool(superstep_parity),
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
@@ -858,6 +1016,15 @@ def main():
                          "budget and write results/sharded_serving.json "
                          "(simulate devices with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=4)")
+    ap.add_argument("--model-shards", default="1",
+                    help="tensor-parallel verify sweep on a smoke-sized "
+                         'denoiser: "sweep" compares mp in {1,2,4} x '
+                         "dispatch shapes and writes "
+                         "results/model_parallel.json (in-run mp=1 bitwise "
+                         "parity + mp>1 allclose vs the replicated engine); "
+                         "an integer mp > 1 runs {1, mp} only (simulate "
+                         "devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     ap.add_argument("--ballast-width", type=int, default=1024,
                     help="synthetic model compute-ballast width")
     ap.add_argument("--ballast-depth", type=int, default=8,
@@ -892,6 +1059,29 @@ def main():
         "model": (f"gmm-posterior-mean + cond-bend + "
                   f"{args.ballast_depth}x{args.ballast_width} tanh ballast"),
     }
+
+    if args.model_shards != "1":
+        mp_values = ((1, 2, 4) if args.model_shards == "sweep"
+                     else (1, int(args.model_shards)))
+        sweep = run_model_parallel_sweep(
+            args.theta, max(args.slots // 4, 2), min(args.requests, 8),
+            args.repeats, mp_values=mp_values)
+        report = {
+            "workload": {"model": "paper-diffusion-policy-smoke",
+                         "theta_max": args.theta,
+                         "requests": min(args.requests, 8)},
+            **sweep}
+        out_path = args.out or "results/model_parallel.json"
+        print(json.dumps(report, indent=2))
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"\nmodel-parallel verify on {report['devices']} device(s): "
+              f"mp=1 bitwise parity {report['parity_mp1_bitwise']}, "
+              f"mp>1 allclose {report['parity_mp_allclose']}, superstep "
+              f"count unchanged {report['superstep_count_unchanged']}; "
+              f"skipped {report['skipped_arms'] or 'none'} -> {out_path}")
+        return
 
     if args.shards == "sweep":
         sweep = run_shard_sweep(params, factory, sched, args.theta,

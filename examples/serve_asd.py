@@ -34,6 +34,12 @@ def main():
     ap.add_argument("--rounds-per-sync", default="4",
                     help="speculation rounds fused per device dispatch for "
                          "the continuous engines (int or 'auto')")
+    ap.add_argument("--model-shards", type=int, default=0,
+                    help="SLOW demo arm, off by default: tensor-parallel "
+                         "verify over an N-device model group on the "
+                         "'paper-diffusion-policy-smoke' registry config "
+                         "(needs N devices; simulate with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
 
     print("training / loading the latent denoiser (cached under results/)...")
@@ -159,6 +165,68 @@ def main():
     for w in seng.workers:
         print(f"       shard {w.shard_id}: {w.stats.retired} retired, "
               f"{w.stats.rounds_total} rounds on {w.device or 'default'}")
+
+    # --- model-parallel verify (slow; opt in with --model-shards N): the
+    # verify call itself runs tensor-parallel over an N-device model group —
+    # QKV/output projections and the FFN shard over the group's "model"
+    # axis (tp_param_pspecs), the all-reduce rides INSIDE the superstep
+    # program.  Uses a real registry denoiser (the GMM toy has no
+    # projections to shard); mp=1 output would be bit-identical to the
+    # replicated engine, mp>1 is allclose with 1/mp weights per device.
+    if args.model_shards > 1:
+        mp = args.model_shards
+        if len(jax.devices()) < mp:
+            print(f"[asd  mp x{mp}     ] skipped: needs {mp} devices, have "
+                  f"{len(jax.devices())} (set XLA_FLAGS="
+                  f"--xla_force_host_platform_device_count={mp})")
+            return
+        from repro.configs.registry import paper_diffusion_policy_smoke
+        from repro.core.schedules import ddpm as ddpm_schedule
+        from repro.distributed.sharding import serving_mesh, tp_param_pspecs
+        from repro.models.diffusion import (
+            denoiser_init, make_ddpm_model_fn, tp_collective_payloads)
+        from repro.nn.param import unbox
+
+        mdc = paper_diffusion_policy_smoke()
+        mparams = unbox(denoiser_init(jax.random.PRNGKey(0), mdc))
+        boxed = jax.eval_shape(
+            lambda k: denoiser_init(k, mdc), jax.random.PRNGKey(0))
+        specs = tp_param_pspecs(boxed, serving_mesh(1, mp))
+        msched = ddpm_schedule(K=32)
+        meng = ShardedASDEngine(
+            lambda p, cond: make_ddpm_model_fn(p, mdc, tp_axis="model"),
+            params=mparams,
+            param_specs=specs,
+            collective_payloads=tp_collective_payloads(mparams, specs, mdc),
+            schedule=msched,
+            event_shape=(mdc.seq_len, mdc.d_data),
+            num_slots=4,
+            model_shards=mp,
+            theta=args.theta,
+            eager_head=True,
+            noise_mode="counter",
+            keep_trajectory=False,
+        )
+        rng = np.random.default_rng(3)
+        t0 = time.perf_counter()
+        out = meng.serve([
+            Request(i, key=jax.random.PRNGKey(3000 + i),
+                    y0=rng.standard_normal(
+                        (mdc.seq_len, mdc.d_data)).astype(np.float32))
+            for i in range(8)])
+        dt = time.perf_counter() - t0
+        s = meng.stats
+        tb = s.timing_breakdown()
+        print(
+            f"[asd  mp x{mp}     ] served {s.retired} requests "
+            f"('{mdc.backbone.name}', K=32) in {dt:.1f}s on a {mp}-device "
+            f"model group; collectives {tb['collective_s']*1e3:.1f}ms "
+            f"({tb['collective_frac']:.1%} of wall), "
+            f"{s.throughput():.2f} samples/s"
+        )
+        sample = next(iter(out.values()))
+        print(f"       sample shape {sample.shape}, "
+              f"finite={bool(np.isfinite(sample).all())}")
 
 
 if __name__ == "__main__":

@@ -49,10 +49,25 @@ def paper_diffusion_policy(action_dim: int = 14) -> DenoiserConfig:
     return DenoiserConfig(backbone=backbone, seq_len=16, d_data=action_dim)
 
 
+def paper_diffusion_policy_smoke(action_dim: int = 4) -> DenoiserConfig:
+    """CI/demo-sized diffusion policy: same topology as
+    ``paper-diffusion-policy`` at smoke dims.  Heads (4) and d_ff (128)
+    divide a 2- or 4-way ``model`` axis, so this is the registry config the
+    ``--model-shards`` serve smoke and the model-parallel example arm use."""
+    backbone = ModelConfig(
+        name="paper-diffusion-policy-smoke", family="dense", n_layers=2,
+        d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=1,
+        pos_embed="none", embed_inputs=False, compute_dtype="float32",
+        remat=False,
+    )
+    return DenoiserConfig(backbone=backbone, seq_len=8, d_data=action_dim)
+
+
 PAPER_MODELS = {
     "paper-ldm-dit": paper_ldm_dit,
     "paper-pixel-dit": paper_pixel_dit,
     "paper-diffusion-policy": paper_diffusion_policy,
+    "paper-diffusion-policy-smoke": paper_diffusion_policy_smoke,
 }
 
 

@@ -130,6 +130,128 @@ def slots_mesh(num_shards: int, devices=None) -> Mesh:
     return Mesh(np.asarray(devs[:num_shards]), ("slots",))
 
 
+def serving_mesh(num_shards: int, model_parallel: int = 1, devices=None) -> Mesh:
+    """2-D serving topology: ``(slots, model)``.  Row i is shard i's
+    model-parallel device GROUP — the slot sub-batch is replicated across the
+    row while the verify weights shard over it (``tp_param_pspecs``), so the
+    packed superstep still runs every shard in ONE dispatch per boundary with
+    the tensor-parallel all-reduces INSIDE the ``shard_map`` program.  With
+    ``model_parallel=1`` this degenerates to ``slots_mesh`` plus a trivial
+    model axis; the engine keeps using ``slots_mesh`` there so the mp=1
+    executables stay bit-identical to the replicated path."""
+    n = num_shards * model_parallel
+    devs = list(dict.fromkeys(  # ordered dedupe: placements may wrap
+        devices if devices is not None else jax.devices()))
+    if len(devs) < n:
+        raise ValueError(
+            f"serving_mesh needs {num_shards}x{model_parallel}={n} distinct "
+            f"devices, have {len(devs)} "
+            "(on CPU set XLA_FLAGS=--xla_force_host_platform_device_count)")
+    grid = np.asarray(devs[:n]).reshape(num_shards, model_parallel)
+    return Mesh(grid, ("slots", "model"))
+
+
+def model_group_placements(num_shards: int, model_parallel: int,
+                           devices=None) -> list[list]:
+    """Per-worker device GROUPS for per-shard-dispatch model parallelism:
+    shard i owns ``devices[i*mp:(i+1)*mp]`` — the same row-major grouping as
+    ``serving_mesh`` rows, so fused and per-shard dispatch place identical
+    weights shards on identical devices."""
+    n = num_shards * model_parallel
+    devs = list(dict.fromkeys(devices if devices is not None else jax.devices()))
+    if len(devs) < n:
+        raise ValueError(
+            f"model_group_placements needs {n} distinct devices, have "
+            f"{len(devs)} "
+            "(on CPU set XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return [devs[i * model_parallel:(i + 1) * model_parallel]
+            for i in range(num_shards)]
+
+
+# Manual-TP whitelist: the (layers-stripped) logical signatures the TP-aware
+# serving forward (attention wq/wo/bq head slicing, ffn w_gate/w_up/w_down
+# hidden slicing + their psums) knows how to compute on.  Everything else —
+# kv projections, embeddings, norms, MoE/ssm stacks — stays replicated, because
+# under manual shard_map there is no compiler to insert the matching
+# collective for an arbitrary sharded dim.
+TP_VERIFY_SIGS = frozenset({
+    ("embed", "heads", "head_dim"),   # wq (column-parallel)
+    ("heads", "head_dim", "embed"),   # wo (row-parallel; forward psums after)
+    ("heads", "head_dim"),            # bq
+    ("embed", "mlp"),                 # w_gate / w_up (column-parallel)
+    ("mlp", "embed"),                 # w_down (row-parallel; forward psums)
+})
+
+
+def tp_param_pspecs(boxed_tree, mesh: Mesh):
+    """Manual-TP serving layout over the mesh ``model`` axis.
+
+    Unlike ``param_pspecs`` (whose compiler-assisted layout may shard ANY
+    evenly-dividing dim and rely on XLA to insert collectives), this shards
+    ONLY the head/hidden axes the TP-aware forward explicitly all-reduces
+    for (``TP_VERIFY_SIGS``) — and, shape-aware like ``param_pspecs``, drops
+    back to replication when the axis doesn't divide the model-axis size
+    (odd head counts serve replicated rather than erroring; the verify then
+    simply skips its slice+psum)."""
+    size = int(mesh.shape["model"])
+
+    def fit(box):
+        if not is_boxed(box):
+            return P()
+        axes = tuple(box.logical_axes)
+        core = tuple(a for a in axes if a != "layers")
+        if size <= 1 or core not in TP_VERIFY_SIGS:
+            return P()
+        entries = []
+        for a, dim in zip(axes, box.shape):
+            if a in ("heads", "mlp") and dim % size == 0 and dim >= size:
+                entries.append("model")
+            else:
+                entries.append(None)
+        if "model" not in entries:
+            return P()  # non-dividing: replicate the whole leaf
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    return jax.tree_util.tree_map(fit, boxed_tree, is_leaf=is_boxed)
+
+
+def measure_collective_seconds(mesh: Mesh, payload_bytes, axis: str = "model",
+                               repeats: int = 3) -> float:
+    """Measured wall seconds for ONE round's worth of tensor-parallel
+    all-reduces on this mesh: a jitted ``shard_map`` program psums one f32
+    buffer per payload over ``axis`` (same op, same axis, same devices as
+    the verify's in-program collectives), timed best-of-``repeats`` after a
+    warmup.  This is the calibration behind ``EngineStats.collective_s`` —
+    the superstep's collectives run inside one fused program, so their cost
+    cannot be timed in isolation in situ; the probe re-creates the payload
+    schedule outside and the engine attributes ``probe x rounds`` per
+    dispatch."""
+    import time as _time
+
+    payloads = [max(int(b) // 4, 1) for b in payload_bytes]
+    if not payloads or axis not in mesh.axis_names or mesh.shape[axis] <= 1:
+        return 0.0
+    smap = get_shard_map()
+
+    def body(*xs):
+        return tuple(jax.lax.psum(x, axis) for x in xs)
+
+    rep = P()
+    fn = jax.jit(smap(body, mesh=mesh, in_specs=(rep,) * len(payloads),
+                      out_specs=(rep,) * len(payloads), check_rep=False))
+    xs = tuple(jax.device_put(np.zeros((n,), np.float32),
+                              NamedSharding(mesh, P())) for n in payloads)
+    jax.block_until_ready(fn(*xs))  # compile + warm
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = _time.perf_counter()
+        jax.block_until_ready(fn(*xs))
+        best = min(best, _time.perf_counter() - t0)
+    return best
+
+
 def shard_pspecs(mesh: Mesh, states=None, axis: str = "slots"):
     """Stacked-shard layout: every leaf of a (num_shards, slots_local, ...)
     slot batch shards its leading SHARD axis over the mesh ``slots`` axis —

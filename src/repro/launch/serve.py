@@ -63,6 +63,17 @@ never cross shards (and on a pod, never cross hosts):
                                                rebalanced from live demand
   --overcommit 1.5                             BudgetAware admits up to
                                                1.5x the budget's demand
+
+Model-parallel shards (tensor parallelism INSIDE each shard): every shard
+owns an mp-device model group — a row of ``serving_mesh(shards, mp)`` —
+and its verify call shards QKV/output projections and the FFN over the
+group's "model" axis (``tp_param_pspecs``), with the all-reduce inside the
+superstep program so the boundary still costs one dispatch:
+
+  --model-shards 2                             devices per model group
+                                               (needs shards * mp devices;
+                                               1 = replicated, bit-identical
+                                               to the existing engine)
 """
 
 from __future__ import annotations
@@ -84,10 +95,16 @@ from repro.distributed.sharding import (
     batch_pspec,
     chain_state_shardings,
     param_pspecs,
+    serving_mesh,
     shard_placements,
     shardings_from_pspecs,
+    tp_param_pspecs,
 )
-from repro.models.diffusion import denoiser_init, make_ddpm_model_fn
+from repro.models.diffusion import (
+    denoiser_init,
+    make_ddpm_model_fn,
+    tp_collective_payloads,
+)
 from repro.nn.param import unbox
 from repro.serving.engine import ContinuousASDEngine, Request
 from repro.serving.packing import ALLOCATORS, make_allocator
@@ -190,19 +207,37 @@ def run_continuous(args):
                          else int(args.rounds_per_sync)),
         overcommit=args.overcommit,
     )
-    if args.shards > 1:
+    if args.shards > 1 or args.model_shards > 1:
         # shard-local workers: each pinned to its own device of the mesh's
         # device set (round-robin when shards > devices), requests routed
-        # above the compute layer — no cross-shard gathers by construction
+        # above the compute layer — no cross-shard gathers by construction.
+        # --model-shards > 1 widens each shard to an mp-device model group
+        # and runs the verify tensor-parallel inside it.
+        mp = args.model_shards
+        factory = lambda p, cond: make_ddpm_model_fn(p, dc)
+        eng_devices = shard_placements(args.shards, list(mesh.devices.flat))
+        tp_kwargs = {}
+        if mp > 1:
+            tp_mesh = serving_mesh(args.shards, mp)  # validates device count
+            boxed = jax.eval_shape(
+                lambda k: denoiser_init(k, dc), jax.random.PRNGKey(0))
+            specs = tp_param_pspecs(boxed, tp_mesh)
+            tp_kwargs = dict(
+                param_specs=specs,
+                collective_payloads=tp_collective_payloads(params, specs, dc))
+            factory = lambda p, cond: make_ddpm_model_fn(
+                p, dc, tp_axis="model")
+            eng_devices = list(tp_mesh.devices.flat)
         eng = ShardedASDEngine(
-            lambda p, cond: make_ddpm_model_fn(p, dc),
+            factory,
             params=params,
             num_slots=slots,
             shards=args.shards,
+            model_shards=mp,
             router=make_router(args.router),
             dispatch=args.dispatch,
-            devices=shard_placements(
-                args.shards, list(mesh.devices.flat)),
+            devices=eng_devices,
+            **tp_kwargs,
             **common,
         )
     else:
@@ -223,6 +258,8 @@ def run_continuous(args):
                  if args.execution == "packed" else "unpacked")
     shard_desc = (f", shards={args.shards} router={args.router}"
                   if args.shards > 1 else "")
+    if args.model_shards > 1:
+        shard_desc += f", mp={args.model_shards}"
     print(f"[continuous] served {s.retired} requests on {slots} slots "
           f"({exec_desc}{shard_desc}, K={args.K}, policy={args.policy}, "
           f"controller={args.theta_controller}, grs={args.grs_impl}, "
@@ -234,14 +271,23 @@ def run_continuous(args):
           f"mean queue latency {s.mean_queue_latency()*1e3:.0f}ms, "
           f"SLO attainment {s.slo_attainment():.2f}, "
           f"{s.throughput():.2f} samples/s")
-    if args.shards > 1:
-        devs = (list(eng._mesh.devices.flat) if args.dispatch == "fused"
-                else [w.device for w in eng.workers])
+    if args.shards > 1 or args.model_shards > 1:
+        if args.dispatch == "fused":
+            rows = np.asarray(eng._mesh.devices).reshape(eng.num_shards, -1)
+            devs = [list(r) for r in rows]
+        elif args.model_shards > 1:
+            devs = [list(w._model_mesh.devices.flat) for w in eng.workers]
+        else:
+            devs = [w.device for w in eng.workers]
         for w, n, dev in zip(eng.workers, eng.routed_counts, devs):
             print(f"  shard {w.shard_id}: {n} routed, "
                   f"{w.stats.retired} retired, "
                   f"{w.stats.rounds_total} rounds, "
                   f"budget {w.round_budget}, device {dev}")
+    if args.model_shards > 1:
+        tb = s.timing_breakdown()
+        print(f"  collectives: {tb['collective_s']*1e3:.1f}ms "
+              f"({tb['collective_frac']:.1%} of wall, calibrated)")
     sample = next(iter(out.values()))
     print(f"output {sample.shape} per request, "
           f"finite={bool(np.isfinite(sample).all())}")
@@ -298,6 +344,12 @@ def main():
                     help="shard-local serving workers; each owns "
                          "slots/shards lanes pinned to its own device, with "
                          "requests routed above the compute layer")
+    ap.add_argument("--model-shards", type=int, default=1,
+                    help="tensor parallelism inside each shard: devices per "
+                         "model group (needs shards * model_shards devices; "
+                         "QKV/output projections and FFN shard over the "
+                         "group's 'model' axis, all-reduce inside the "
+                         "superstep program)")
     ap.add_argument("--router", default="least-loaded",
                     choices=sorted(ROUTERS),
                     help="sharded serving request router")

@@ -37,13 +37,18 @@ def _maybe_ffn_init(key, cfg: ModelConfig, desc: BlockDesc):
     }
 
 
-def _maybe_ffn_fwd(params, x, cfg: ModelConfig, desc: BlockDesc):
+def _maybe_ffn_fwd(params, x, cfg: ModelConfig, desc: BlockDesc,
+                   tp_axis: str | None = None):
+    # tp_axis: manual tensor parallelism for the dense FFN only (the MoE
+    # expert stack serves replicated under the manual-TP layout; see
+    # repro.distributed.sharding.TP_VERIFY_SIGS).
     aux = {}
     if "moe" in params:
         h, aux = moe_lib.moe_apply(params["moe"], rmsnorm_apply(params["ffn_norm"], x), cfg)
         x = x + h
     elif "ffn" in params:
-        x = x + ffn_lib.ffn_apply(params["ffn"], rmsnorm_apply(params["ffn_norm"], x))
+        x = x + ffn_lib.ffn_apply(params["ffn"], rmsnorm_apply(params["ffn_norm"], x),
+                                  d_ff=cfg.d_ff, tp_axis=tp_axis)
     return x, aux
 
 
@@ -71,9 +76,10 @@ def attn_block_fwd(params, x, cfg, desc, ctx, window):
         positions=ctx.get("positions"),
         impl=ctx.get("impl", "naive"),
         chunk=ctx.get("chunk", 1024),
+        tp_axis=ctx.get("tp_axis"),
     )
     x = x + h
-    return _maybe_ffn_fwd(params, x, cfg, desc)
+    return _maybe_ffn_fwd(params, x, cfg, desc, tp_axis=ctx.get("tp_axis"))
 
 
 def attn_block_cache_init(params, cfg, desc, batch, max_len, dtype=jnp.bfloat16):
@@ -120,9 +126,10 @@ def xattn_block_fwd(params, x, cfg, desc, ctx, window):
         params["attn"], h, cfg, kv_x=vision,
         positions=ctx.get("positions"), causal=False,
         impl=ctx.get("impl", "naive"), chunk=ctx.get("chunk", 1024),
+        tp_axis=ctx.get("tp_axis"),
     )
     x = x + h
-    return _maybe_ffn_fwd(params, x, cfg, desc)
+    return _maybe_ffn_fwd(params, x, cfg, desc, tp_axis=ctx.get("tp_axis"))
 
 
 def xattn_block_cache_init(params, cfg, desc, batch, max_len, dtype=jnp.bfloat16):
@@ -193,11 +200,11 @@ def hymba_block_fwd(params, x, cfg, desc, ctx, window):
     a = attn.attn_fwd(
         params["attn"], h, cfg, window=window, causal=ctx.get("causal", True),
         positions=ctx.get("positions"), impl=ctx.get("impl", "naive"),
-        chunk=ctx.get("chunk", 1024),
+        chunk=ctx.get("chunk", 1024), tp_axis=ctx.get("tp_axis"),
     )
     m = ssm_lib.mamba_fwd(params["mamba"], h, cfg)
     x = x + 0.5 * (a + m)  # hymba: parallel attn+mamba heads, mean-fused
-    return _maybe_ffn_fwd(params, x, cfg, desc)
+    return _maybe_ffn_fwd(params, x, cfg, desc, tp_axis=ctx.get("tp_axis"))
 
 
 def hymba_block_cache_init(params, cfg, desc, batch, max_len, dtype=jnp.bfloat16):

@@ -51,7 +51,14 @@ def decoder_init(key, cfg: ModelConfig):
 
 
 def _group_fwd(cfg: ModelConfig, ctx):
-    """Builds the per-repeat body fn: (x, (slices, windows)) -> (x, aux)."""
+    """Builds the per-repeat body fn: (x, (slices, windows)) -> (x, aux).
+
+    Two ctx keys carry parallelism through the stack: ``sp`` (GSPMD
+    sequence-parallel sharding constraint, below) and ``tp_axis`` (manual
+    tensor parallelism under shard_map — the blocks compute on local
+    head/hidden shards and psum in-program; the collectives sit inside this
+    scanned/rematted body, so depth still costs O(group) HLO and the round
+    stays one dispatch)."""
 
     sp = ctx.get("sp")  # NamedSharding for sequence-parallel residuals
 

@@ -47,9 +47,13 @@ def denoiser_init(key, dc: DenoiserConfig):
 
 
 def denoiser_fwd(params, t, y, dc: DenoiserConfig, cond=None, impl: str = "naive",
-                 chunk: int = 1024):
+                 chunk: int = 1024, tp_axis: str | None = None):
     """t: (B,) noise level / step; y: (B, L, d_data) -> x0_hat (B, L, d_data).
-    cond: optional (B, d_cond) observation vector (diffusion policy)."""
+    cond: optional (B, d_cond) observation vector (diffusion policy).
+    ``tp_axis``: mesh axis name for manual tensor parallelism — only valid
+    inside a ``shard_map`` program whose param in_specs follow
+    ``repro.distributed.sharding.tp_param_pspecs`` (the blocks then slice
+    heads/hidden locally and all-reduce in-program)."""
     cfg = dc.backbone
     cdt = jnp.dtype(cfg.compute_dtype)
     tf = t.astype(jnp.float32)
@@ -66,7 +70,7 @@ def denoiser_fwd(params, t, y, dc: DenoiserConfig, cond=None, impl: str = "naive
         cemb = cond.astype(cdt) @ params["cond_proj"].astype(cdt)
         x = x + cemb[..., None, :]
     ctx = dict(causal=False, positions=jnp.arange(dc.seq_len), vision=None,
-               impl=impl, chunk=chunk)
+               impl=impl, chunk=chunk, tp_axis=tp_axis)
     x, _ = decoder_fwd(params["decoder"], x, cfg, ctx)
     x = rmsnorm_apply(params["final_norm"], x)
     return (x @ params["out_proj"].astype(cdt)).astype(jnp.float32)
@@ -76,32 +80,76 @@ def _bcast_cond(cond, m):
     return None if cond is None else jnp.broadcast_to(cond, (m,) + cond.shape[-1:])
 
 
-def make_sl_model_fn(params, dc: DenoiserConfig, cond=None):
+def make_sl_model_fn(params, dc: DenoiserConfig, cond=None,
+                     tp_axis: str | None = None):
     """ASD/sequential-sampler oracle for the *SL* parametrization.
 
     The network is trained on standardized inputs x_in = y / sqrt(t^2 + t)
     (unit-ish variance for unit-variance data); returns E[x0 | y_t].
     ``cond``: optional (d_cond,) per-chain conditioning (vmap adds batch).
+    ``tp_axis``: manual tensor parallelism (see ``denoiser_fwd``).
     """
 
     def model_fn(t, y):
         t32 = jnp.maximum(t.astype(jnp.float32), 1e-6)
         scale = jnp.sqrt(t32**2 + t32)
         y_in = y / scale.reshape(t.shape + (1,) * (y.ndim - t.ndim))
-        return denoiser_fwd(params, t32, y_in, dc, cond=_bcast_cond(cond, y.shape[0]))
+        return denoiser_fwd(params, t32, y_in, dc,
+                            cond=_bcast_cond(cond, y.shape[0]), tp_axis=tp_axis)
 
     return model_fn
 
 
-def make_ddpm_model_fn(params, dc: DenoiserConfig, cond=None):
+def make_ddpm_model_fn(params, dc: DenoiserConfig, cond=None,
+                       tp_axis: str | None = None):
     """x0-predicting oracle in the DDPM parametrization (t = step index)."""
 
     def model_fn(t, y):
         return denoiser_fwd(
-            params, t.astype(jnp.float32), y, dc, cond=_bcast_cond(cond, y.shape[0])
+            params, t.astype(jnp.float32), y, dc,
+            cond=_bcast_cond(cond, y.shape[0]), tp_axis=tp_axis
         )
 
     return model_fn
+
+
+def tp_collective_payloads(params, specs, dc: DenoiserConfig) -> list[int]:
+    """Per-point all-reduce payload schedule (bytes) of ONE denoiser call
+    under the manual-TP layout ``specs`` (``tp_param_pspecs`` output).
+
+    Each model-sharded row-parallel leaf (attention ``wo``, FFN ``w_down``)
+    contributes one (L, d_model) activation psum per layer-stack row; stacked
+    leaves (leading ``layers`` scan axis) count once per row.  This is the
+    payload schedule the engine feeds ``measure_collective_seconds`` to
+    calibrate ``EngineStats.collective_s``."""
+    from jax.sharding import PartitionSpec as _P
+
+    cfg = dc.backbone
+    row_bytes = dc.seq_len * cfg.d_model * jnp.dtype(cfg.compute_dtype).itemsize
+    payloads: list[int] = []
+    is_p = lambda x: isinstance(x, _P)
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_s = {tuple(k): s for k, s in
+              jax.tree_util.tree_flatten_with_path(specs, is_leaf=is_p)[0]}
+
+    def mentions_model(spec):
+        for e in spec:
+            axes = (e,) if isinstance(e, str) else tuple(e or ())
+            if "model" in axes:
+                return True
+        return False
+
+    for path, leaf in flat_p:
+        name = getattr(path[-1], "key", None)
+        if name not in ("wo", "w_down"):
+            continue
+        spec = flat_s.get(tuple(path))
+        if spec is None or not mentions_model(spec):
+            continue
+        base_ndim = 3 if name == "wo" else 2
+        rows = int(leaf.shape[0]) if getattr(leaf, "ndim", base_ndim) > base_ndim else 1
+        payloads.extend([int(row_bytes)] * rows)
+    return payloads
 
 
 def ddpm_denoiser_loss(params, dc: DenoiserConfig, x0, key, abar, cond=None):

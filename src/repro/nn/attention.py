@@ -49,7 +49,7 @@ def attn_init(key, cfg: ModelConfig, cross: bool = False):
 
 
 def _project_qkv(params, xq, xkv, cfg: ModelConfig, q_positions, kv_positions,
-                 repeat_kv: bool = True):
+                 repeat_kv: bool = True, tp_axis: str | None = None):
     h, kv = cfg.n_heads, cfg.n_kv_heads
     cdt = xq.dtype
     q = jnp.einsum("bld,dhk->blhk", xq, params["wq"].astype(cdt))
@@ -69,6 +69,17 @@ def _project_qkv(params, xq, xkv, cfg: ModelConfig, q_positions, kv_positions,
     if repeat_kv and reps > 1:
         k = jnp.repeat(k, reps, axis=2)
         v = jnp.repeat(v, reps, axis=2)
+    # Manual tensor parallelism (inside shard_map): wq/bq are the LOCAL head
+    # block, so q already has h/mp heads; wk/wv are replicated (kv_heads
+    # never divide the model axis), so slice the repeated K/V down to this
+    # rank's contiguous head block.  With replicated params (mp=1, or the
+    # odd-head fallback in tp_param_pspecs) the shapes match and this is a
+    # no-op — the compiled program is the unsharded one.
+    h_local = q.shape[2]
+    if tp_axis is not None and repeat_kv and h_local != h:
+        start = jax.lax.axis_index(tp_axis) * h_local
+        k = jax.lax.dynamic_slice_in_dim(k, start, h_local, axis=2)
+        v = jax.lax.dynamic_slice_in_dim(v, start, h_local, axis=2)
     return q, k, v
 
 
@@ -168,8 +179,17 @@ def attn_fwd(
     kv_positions=None,
     impl: str = "naive",
     chunk: int = 1024,
+    tp_axis: str | None = None,
 ):
-    """Full-sequence attention (self by default, cross when kv_x given)."""
+    """Full-sequence attention (self by default, cross when kv_x given).
+
+    ``tp_axis``: mesh axis name for manual tensor parallelism under
+    ``shard_map`` — heads are computed on the local wq/wo block and the
+    output projection's partial sums are all-reduced IN-PROGRAM
+    (``jax.lax.psum``), keeping the round body a single dispatch.  Local
+    vs global head count is detected from the param shapes, so replicated
+    params compile the exact unsharded program.
+    """
     B, L, _ = x.shape
     if positions is None:
         positions = jnp.arange(L)
@@ -178,7 +198,8 @@ def attn_fwd(
         kv_positions = (
             jnp.arange(xkv.shape[1]) if kv_x is not None else positions
         )
-    q, k, v = _project_qkv(params, x, xkv, cfg, positions, kv_positions)
+    q, k, v = _project_qkv(params, x, xkv, cfg, positions, kv_positions,
+                           tp_axis=tp_axis)
     # Pallas flash path (TPU kernel; interpret-mode on CPU).  Requires a
     # static window (hymba's per-layer scanned windows fall back to chunked).
     if impl == "flash" and isinstance(window, int):
@@ -204,6 +225,8 @@ def attn_fwd(
             else core(q, k, v, mask, cfg.attn_softcap)
         )
     out = jnp.einsum("blhk,hkd->bld", o, params["wo"].astype(x.dtype))
+    if tp_axis is not None and o.shape[2] != cfg.n_heads:
+        out = jax.lax.psum(out, tp_axis)  # row-parallel wo partial sums
     if "gate" in params:
         out = jnp.tanh(params["gate"]).astype(x.dtype) * out
     return out

@@ -22,7 +22,16 @@ def ffn_init(key, d_model: int, d_ff: int, kind: str = "swiglu"):
     }
 
 
-def ffn_apply(params, x):
+def ffn_apply(params, x, *, d_ff: int = 0, tp_axis: str | None = None):
+    """SwiGLU/GELU FFN; tensor-parallel-aware under manual ``shard_map``.
+
+    With ``tp_axis`` set the hidden dim may be sharded column-parallel
+    (w_gate/w_up) + row-parallel (w_down) over that mesh axis.  Shardedness
+    is detected STATICALLY from the local param shape against the declared
+    ``d_ff`` — inside ``shard_map`` a sharded w_down sees ``d_ff // mp``
+    rows — so the replicated fallback (odd hidden sizes, mp=1) compiles the
+    exact unsharded program with no collective.
+    """
     cdt = x.dtype
     u = x @ params["w_up"].astype(cdt)
     if "w_gate" in params:
@@ -30,4 +39,7 @@ def ffn_apply(params, x):
         h = jax.nn.silu(g.astype(jnp.float32)).astype(cdt) * u
     else:
         h = jax.nn.gelu(u.astype(jnp.float32)).astype(cdt)
-    return h @ params["w_down"].astype(cdt)
+    out = h @ params["w_down"].astype(cdt)
+    if tp_axis is not None and d_ff and params["w_down"].shape[0] != d_ff:
+        out = jax.lax.psum(out, tp_axis)  # row-parallel partial sums
+    return out

@@ -70,9 +70,16 @@ class EngineStats:
     #                become ready (block_until_ready on the sync packet)
     #   host_sync_s  host time transferring the sync packet + retire/metrics
     #                bookkeeping — the per-boundary tax supersteps amortize
+    #   collective_s model-parallel all-reduce seconds INSIDE the superstep
+    #                programs (a per-round probe calibration on the worker's
+    #                device group x rounds driven, see ShardWorker) — a view
+    #                INTO device execution, not a fourth wall component: the
+    #                device already pays this time inside the fused program,
+    #                so it never joins the accounted total below
     dispatch_s: float = 0.0
     device_s: float = 0.0
     host_sync_s: float = 0.0
+    collective_s: float = 0.0
     head_calls_total: int = 0
     model_evals_total: int = 0
     accepts_total: int = 0
@@ -89,7 +96,8 @@ class EngineStats:
     # deliberately absent (concurrent shards share one wall clock)
     _MERGE_SUM = (
         "requests", "retired", "batches", "rounds_total", "supersteps",
-        "dispatch_s", "device_s", "host_sync_s", "head_calls_total",
+        "dispatch_s", "device_s", "host_sync_s", "collective_s",
+        "head_calls_total",
         "model_evals_total", "accepts_total", "proposals_total",
         "queue_latency_total", "dropped", "slo_tracked", "slo_met_count",
     )
@@ -209,7 +217,13 @@ class EngineStats:
         the single wall clock — dividing by the wall alone would report
         fractions summing past 1.  When no serve() wall has been recorded
         at all (e.g. a step()-driven open loop, where the driver owns the
-        wall clock) the accounted total is the denominator."""
+        wall clock) the accounted total is the denominator.
+
+        ``collective_s`` (model-parallel all-reduce seconds) is reported
+        against the SAME denominator but is deliberately NOT part of the
+        accounted total: it is a calibrated view INTO the device's fused
+        execution, already paid inside device_s/wall — adding it would
+        double-count and shift the clamp."""
         accounted = self.dispatch_s + self.device_s + self.host_sync_s
         denom = max(self.wall_time, accounted, 1e-12)
         return {
@@ -218,9 +232,11 @@ class EngineStats:
             "dispatch_s": self.dispatch_s,
             "device_s": self.device_s,
             "host_sync_s": self.host_sync_s,
+            "collective_s": self.collective_s,
             "dispatch_frac": self.dispatch_s / denom,
             "device_frac": self.device_s / denom,
             "host_sync_frac": self.host_sync_s / denom,
+            "collective_frac": self.collective_s / denom,
         }
 
     def summary(self) -> dict:

@@ -322,6 +322,7 @@ def sharded_packed_superstep(
     fused_round: bool = False,
     budget_data=None,  # (num_shards,) i32 per-shard tiers, or None
     axis_name: str = "slots",
+    param_specs=None,  # model-parallel: tp_param_pspecs tree for `params`
 ):
     """Every shard's packed superstep in ONE dispatch, via ``shard_map``
     over a ``slots``-sharded mesh (``repro.distributed.sharding.slots_mesh``
@@ -332,9 +333,19 @@ def sharded_packed_superstep(
     and runs the ordinary ``packed_superstep`` on it — the allocator splits
     the PER-SHARD ``budget`` over local demands and the pack maps address
     only local rows.  Because the body is manual-mode SPMD with no
-    collectives, cross-shard communication is impossible by construction:
-    growing the mesh can never turn the packed gather into a cross-device
-    (or cross-host) all-gather.  ``params`` are replicated (spec ``P()``).
+    cross-SHARD collectives, cross-shard communication is impossible by
+    construction: growing the mesh can never turn the packed gather into a
+    cross-device (or cross-host) all-gather.  ``params`` are replicated
+    (spec ``P()``) — unless ``param_specs`` is given.
+
+    Model parallelism: on a 2-D ``serving_mesh(num_shards, model_parallel)``
+    (axes ``(slots, model)``) pass ``param_specs`` (the ``tp_param_pspecs``
+    tree) and a ``make_fn`` built with ``tp_axis="model"``.  The superstep
+    then partitions over BOTH axes in this ONE dispatch: slot blocks split
+    over mesh rows exactly as before (the slot batch is replicated within a
+    row), verify weights split over the row's model group, and the model
+    fn's all-reduces (``jax.lax.psum`` over ``"model"``) stay inside the
+    program — the per-boundary dispatch count is unchanged at mp>1.
 
     Bit-identical to looping ``packed_superstep`` over the shard axis on one
     device (tests/test_sharded_serving.py), with ``shard_map``'s constraint
@@ -371,23 +382,24 @@ def sharded_packed_superstep(
         return jax.tree_util.tree_map(lambda x: x[None], out)
 
     sh, rep = P(axis_name), P()
+    pspec = rep if param_specs is None else param_specs
     if budget_data is None:
         if conds is None:
             fn = shard_map(
                 lambda p, st, w: one_shard(p, st, w, None, None), mesh=mesh,
-                in_specs=(rep, sh, sh), out_specs=sh, check_rep=False)
+                in_specs=(pspec, sh, sh), out_specs=sh, check_rep=False)
             return fn(params, states, weights)
         fn = shard_map(
             lambda p, st, w, c: one_shard(p, st, w, c, None), mesh=mesh,
-            in_specs=(rep, sh, sh, sh), out_specs=sh, check_rep=False)
+            in_specs=(pspec, sh, sh, sh), out_specs=sh, check_rep=False)
         return fn(params, states, weights, conds)
     budget_data = jnp.asarray(budget_data, jnp.int32)
     if conds is None:
         fn = shard_map(
             lambda p, st, w, b: one_shard(p, st, w, None, b), mesh=mesh,
-            in_specs=(rep, sh, sh, sh), out_specs=sh, check_rep=False)
+            in_specs=(pspec, sh, sh, sh), out_specs=sh, check_rep=False)
         return fn(params, states, weights, budget_data)
     fn = shard_map(
         lambda p, st, w, c, b: one_shard(p, st, w, c, b), mesh=mesh,
-        in_specs=(rep, sh, sh, sh, sh), out_specs=sh, check_rep=False)
+        in_specs=(pspec, sh, sh, sh, sh), out_specs=sh, check_rep=False)
     return fn(params, states, weights, conds, budget_data)

@@ -79,6 +79,14 @@ class ShardedASDEngine:
       shards: number of shard-local workers.  ``num_slots`` is the TOTAL
         slot count and must divide evenly (each worker gets
         ``num_slots // shards`` lanes).
+      model_shards: tensor parallelism WITHIN each shard — every shard owns
+        an ``mp``-device model group (a ``serving_mesh`` row) and its verify
+        call runs tensor-parallel over the group's ``"model"`` axis (QKV /
+        output projections and FFN sharded per ``tp_param_pspecs``, the
+        all-reduce inside the program).  Needs ``shards * model_shards``
+        devices, explicit ``params`` + ``param_specs``, and a
+        ``model_fn_factory`` built with ``tp_axis="model"``.  ``1``
+        (default) keeps every existing code path bit-identical.
       router: ``repro.serving.router.Router`` picking the shard a submitted
         request joins (default: least-loaded).
       dispatch: ``"per-shard"`` (default) launches each worker's superstep
@@ -121,14 +129,24 @@ class ShardedASDEngine:
         num_slots: int = 8,
         *,
         shards: int = 1,
+        model_shards: int = 1,
         router: Optional[Router] = None,
         dispatch: str = "per-shard",
         devices: Optional[list] = None,
         seed: int = 0,
         **worker_kwargs,
     ):
+        # model_shards (mp): tensor parallelism WITHIN each shard — one
+        # shard = an mp-device model group (serving_mesh row).  mp=1 keeps
+        # every existing code path bit-identical.  mp>1 needs explicit
+        # ``params`` plus ``param_specs`` (a tp_param_pspecs tree) in
+        # worker_kwargs, a model_fn_factory built with tp_axis="model", and
+        # shards*mp distinct devices; ``collective_payloads`` (see
+        # tp_collective_payloads) calibrates EngineStats.collective_s.
         if shards < 1:
             raise ValueError(f"shards must be >= 1, got {shards}")
+        if model_shards < 1:
+            raise ValueError(f"model_shards must be >= 1, got {model_shards}")
         if num_slots % shards:
             raise ValueError(
                 f"num_slots {num_slots} must divide evenly over {shards} "
@@ -137,10 +155,24 @@ class ShardedASDEngine:
             raise ValueError(f"unknown dispatch mode {dispatch!r}")
         self.num_shards = shards
         self.num_slots = num_slots
+        self.model_shards = int(model_shards)
         self.dispatch = dispatch
         slots_local = num_slots // shards
         self.router = router if router is not None else LeastLoaded()
         fused = dispatch == "fused"
+        mp = self.model_shards
+        # engine-level TP inputs: the spec tree shards weights over the
+        # "model" axis, the payload schedule calibrates collective_s
+        param_specs = worker_kwargs.pop("param_specs", None)
+        collective_payloads = worker_kwargs.pop("collective_payloads", ())
+        if mp > 1 and (worker_kwargs.get("params") is None
+                       or param_specs is None):
+            raise ValueError(
+                "model_shards > 1 needs explicit params AND param_specs "
+                "(tp_param_pspecs tree): a factory closure cannot be "
+                "sharded over a model group")
+        self._param_specs = param_specs if mp > 1 else None
+        self._collective_payloads = tuple(collective_payloads)
         if (fused and worker_kwargs.get("round_budget") == "auto"
                 and worker_kwargs.get("round_impl") != "fused"):
             raise ValueError(
@@ -149,25 +181,49 @@ class ShardedASDEngine:
                 "give shards different static budgets.  Use "
                 'round_impl="fused" (budget-as-data) to carry per-shard '
                 "tiers as data inside one fused program.")
-        if devices is None and shards > 1 and not fused:
+        if devices is None and shards > 1 and not fused and mp == 1:
             local = jax.devices()
             if len(local) > 1:
                 devices = [local[i % len(local)] for i in range(shards)]
-        if devices is not None and len(devices) < shards:
+        if devices is not None and len(devices) < shards * mp:
             raise ValueError(
-                f"devices list ({len(devices)}) shorter than shards ({shards})")
+                f"devices list ({len(devices)}) shorter than shards x "
+                f"model_shards ({shards} x {mp})")
+        groups = None
+        if mp > 1 and not fused:
+            # per-shard TP: shard i's worker owns an mp-device group and
+            # runs its superstep shard_map'ed over a 1-D "model" mesh —
+            # every shard dispatches its own program, each one
+            # tensor-parallel inside.  The groups are the serving_mesh rows.
+            from jax.sharding import Mesh
+
+            from repro.distributed.sharding import model_group_placements
+
+            groups = model_group_placements(shards, mp, devices)
 
         self.workers: List[ShardWorker] = []
         for i in range(shards):
+            tp_kwargs = {}
+            if groups is not None:
+                tp_kwargs = dict(
+                    model_mesh=Mesh(np.asarray(groups[i]), ("model",)),
+                    param_specs=param_specs,
+                    collective_payloads=self._collective_payloads,
+                )
             w = ShardWorker(
                 model_fn_factory, schedule, event_shape,
                 num_slots=slots_local,
                 seed=seed if i == 0 else seed + 1000003 * i,
-                device=None if (devices is None or fused) else devices[i],
+                device=None if (devices is None or fused or mp > 1)
+                else devices[i],
                 shard_id=i,
                 **worker_kwargs,
+                **tp_kwargs,
             )
-            if i > 0:  # one per-(R, budget) executable pool for all shards
+            # one per-(R, budget) executable pool for all shards — EXCEPT
+            # per-shard TP, where each worker's programs are shard_map'ed
+            # over its OWN device group's mesh and cannot be shared
+            if i > 0 and groups is None:
                 w.adopt_programs(self.workers[0])
             self.workers.append(w)
         self.schedule = schedule
@@ -184,24 +240,54 @@ class ShardedASDEngine:
         """Stack the workers' slot states into one (shards, slots_local, ...)
         pytree sharded over a ``slots`` mesh; workers keep all HOST state
         (queues, stats, weights, results) while the engine owns the device
-        state and the fused executables."""
-        from repro.distributed.sharding import shard_pspecs, slots_mesh
+        state and the fused executables.
+
+        With ``model_shards > 1`` the mesh is the 2-D
+        ``serving_mesh(shards, mp)`` (axes ``("slots", "model")``): slot
+        state stays ``P("slots")``-sharded (replicated over the model axis),
+        weights are placed by the ``tp_param_pspecs`` tree, and the fused
+        superstep partitions over BOTH axes in the same single dispatch per
+        boundary — the verify all-reduce runs inside the program."""
+        from repro.distributed.sharding import (
+            measure_collective_seconds, serving_mesh, shard_pspecs,
+            shardings_from_pspecs, slots_mesh)
 
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         w0 = self.workers[0]
-        self._mesh = slots_mesh(self.num_shards, devices)
+        mp = self.model_shards
+        if mp > 1:
+            self._mesh = serving_mesh(self.num_shards, mp, devices)
+        else:
+            self._mesh = slots_mesh(self.num_shards, devices)
         self._sharding = shard_pspecs(self._mesh)
         if w0._params is not None:
-            # the fused program declares params replicated over the slots
-            # mesh (in_specs P()); weights arriving on a DIFFERENT device
-            # set (e.g. model-sharded over a bigger serving mesh) would be
-            # incompatible inside one jit — re-place them here.  Sharding
-            # weights WITHIN a shard needs a (slots, model) mesh: ROADMAP.
-            rep_params = jax.device_put(
-                w0._params, NamedSharding(self._mesh, P()))
+            # weights arriving on a DIFFERENT device set would be
+            # incompatible inside one jit — re-place them here: replicated
+            # over the slots mesh at mp=1 (in_specs P()), sharded by the
+            # tp_param_pspecs tree over the "model" axis at mp>1.
+            if self._param_specs is not None:
+                rep_params = jax.device_put(
+                    w0._params,
+                    shardings_from_pspecs(self._mesh, self._param_specs))
+            else:
+                rep_params = jax.device_put(
+                    w0._params, NamedSharding(self._mesh, P()))
             for w in self.workers:
                 w._params = rep_params
+        if mp > 1 and self._collective_payloads:
+            # calibrate the per-round all-reduce seconds on the live mesh
+            # and stamp every worker: the fused harvest reuses the ordinary
+            # per-worker _harvest, which accounts R * this per boundary
+            points = (
+                w0._budget_cap + 2 * w0.num_slots
+                if w0.execution == "packed"
+                else w0.num_slots * (w0.theta + 1))
+            per_round = measure_collective_seconds(
+                self._mesh,
+                [int(b) * points for b in self._collective_payloads])
+            for w in self.workers:
+                w._collective_s_per_round = per_round
         stacked = jax.tree_util.tree_map(
             lambda *x: jnp.stack(x), *[w._states for w in self.workers])
         self._states = jax.device_put(
@@ -295,12 +381,17 @@ class ShardedASDEngine:
             return add, info[None], samples[None]
 
         sh, rep = P("slots"), P()
+        # params enter replicated at mp=1; at mp>1 the tp_param_pspecs tree
+        # shards them over the mesh's "model" axis and the per-shard body
+        # runs tensor-parallel (slot state never mentions "model", so it is
+        # replicated across each shard's model group automatically)
+        pp = rep if self._param_specs is None else self._param_specs
         has_conds = self._conds is not None
         if as_data:
             if has_conds:
                 body = shard_map(
                     lambda st, c, w, p, b: one_shard(st, c, w, p, b),
-                    mesh=self._mesh, in_specs=(sh, sh, sh, rep, sh),
+                    mesh=self._mesh, in_specs=(sh, sh, sh, pp, sh),
                     out_specs=(sh, sh, sh), check_rep=False)
 
                 def fused(states, conds, p, weights, budgets):
@@ -308,7 +399,7 @@ class ShardedASDEngine:
             else:
                 body = shard_map(
                     lambda st, w, p, b: one_shard(st, None, w, p, b),
-                    mesh=self._mesh, in_specs=(sh, sh, rep, sh),
+                    mesh=self._mesh, in_specs=(sh, sh, pp, sh),
                     out_specs=(sh, sh, sh), check_rep=False)
 
                 def fused(states, conds, p, weights, budgets):
@@ -316,7 +407,7 @@ class ShardedASDEngine:
         elif has_conds:
             body = shard_map(
                 lambda st, c, w, p: one_shard(st, c, w, p, None),
-                mesh=self._mesh, in_specs=(sh, sh, sh, rep),
+                mesh=self._mesh, in_specs=(sh, sh, sh, pp),
                 out_specs=(sh, sh, sh), check_rep=False)
 
             def fused(states, conds, p, weights):
@@ -324,7 +415,7 @@ class ShardedASDEngine:
         else:
             body = shard_map(
                 lambda st, w, p: one_shard(st, None, w, p, None),
-                mesh=self._mesh, in_specs=(sh, sh, rep),
+                mesh=self._mesh, in_specs=(sh, sh, pp),
                 out_specs=(sh, sh, sh), check_rep=False)
 
             def fused(states, conds, p, weights):
@@ -542,10 +633,19 @@ class ShardedASDEngine:
         may be another ``ShardedASDEngine`` (all of whose workers already
         share one executable pool) or a bare worker/engine."""
         donors = warm.workers if hasattr(warm, "workers") else [warm]
+        warm_mp = getattr(warm, "model_shards", 1)
+        if self.model_shards > 1 and self.dispatch == "per-shard" and (
+                warm_mp != self.model_shards
+                or getattr(warm, "num_shards", None) != self.num_shards):
+            # per-shard TP programs are shard_map'ed over each worker's own
+            # device-group mesh; only an identically-grouped engine's
+            # executables can be reused
+            return self
         for i, w in enumerate(self.workers):
             w.adopt_programs(donors[i % len(donors)])
         if self.dispatch == "fused" and getattr(warm, "dispatch", "") == (
-                "fused") and warm.num_shards == self.num_shards:
+                "fused") and warm.num_shards == self.num_shards and (
+                warm_mp == self.model_shards):
             self._fused_fns = warm._fused_fns
             self._fused_admit = warm._fused_admit
         return self

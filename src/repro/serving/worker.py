@@ -45,6 +45,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.asd import (
     ASDChainState,
@@ -205,7 +206,19 @@ class ShardWorker:
         donate: Optional[bool] = None,
         device=None,
         shard_id: int = 0,
+        model_mesh=None,
+        param_specs=None,
+        collective_payloads=(),
     ):
+        # Tensor parallelism: with ``model_mesh`` (a Mesh whose "model" axis
+        # is this worker's device GROUP) the worker wraps every superstep in
+        # shard_map over the group — params enter via ``param_specs``
+        # (tp_param_pspecs layout), slot states / weights / conds replicate
+        # across the group, and the TP-aware model fn all-reduces
+        # IN-PROGRAM, so the dispatch count per boundary is unchanged.
+        # ``collective_payloads`` (per-point all-reduce bytes of one model
+        # call, see tp_collective_payloads) calibrates the
+        # EngineStats.collective_s estimate at init.
         self.schedule = schedule
         self.event_shape = tuple(event_shape)
         self.num_slots = num_slots
@@ -312,6 +325,33 @@ class ShardWorker:
             grs_impl=grs_impl,
             controller=self.controller,
         )
+        self._model_mesh = model_mesh
+        self._param_specs = param_specs
+        self._collective_s_per_round = 0.0
+        if model_mesh is not None:
+            from repro.distributed.sharding import (
+                measure_collective_seconds, shardings_from_pspecs)
+
+            if params is None or param_specs is None:
+                raise ValueError(
+                    "model_mesh tensor parallelism needs explicit params AND "
+                    "param_specs (a tp_param_pspecs tree) — a factory closure "
+                    "cannot be sharded over the device group")
+            params = jax.device_put(
+                params, shardings_from_pspecs(model_mesh, param_specs))
+            if collective_payloads:
+                # calibrate the per-round collective estimate once: the
+                # verify's psums run INSIDE the fused program, so their cost
+                # is probed with the same payload schedule on the same group
+                # (~budget + 2*slots points per packed round: verify lanes +
+                # the plan's head call + the eager head lanes)
+                points = (
+                    self._budget_cap + 2 * num_slots
+                    if execution == "packed"
+                    else num_slots * (self.theta + 1))
+                self._collective_s_per_round = measure_collective_seconds(
+                    model_mesh,
+                    [int(b) * points for b in collective_payloads])
         self._params = params
         if params is None:
             self._make_fn = lambda p, cond: model_fn_factory(cond)
@@ -362,6 +402,24 @@ class ShardWorker:
                     return _pack_sync(self._run_rounds(
                         states, conds, p, weights, R, budget))
 
+            if self._model_mesh is not None:
+                # Tensor-parallel superstep: shard_map over this worker's
+                # model group.  Params enter SHARDED (tp_param_pspecs);
+                # everything else is replicated across the group and stays
+                # bitwise lockstep — the only cross-device data flow is the
+                # model fn's in-program psums, whose reduction order is fixed
+                # by the program, so replicated out_specs (check_rep=False)
+                # are sound and the superstep is still ONE dispatch.
+                from repro.distributed.sharding import get_shard_map
+
+                rep = P()
+                n_in = 5 if budget == "data" else 4
+                in_specs = [rep] * n_in
+                in_specs[2] = self._param_specs
+                _superstep = get_shard_map()(
+                    _superstep, mesh=self._model_mesh,
+                    in_specs=tuple(in_specs), out_specs=rep,
+                    check_rep=False)
             return jax.jit(_superstep, donate_argnums=donate)
 
         self._make_superstep = _make_superstep
@@ -380,6 +438,9 @@ class ShardWorker:
         self._weights_dev = jnp.asarray(self._weights)
         if device is not None:
             self._weights_dev = jax.device_put(self._weights_dev, device)
+        elif model_mesh is not None:
+            self._weights_dev = jax.device_put(
+                self._weights_dev, NamedSharding(model_mesh, P()))
 
         def _admit(states, y0s, keys, idxs):
             # init + scatter for a whole boundary's admissions in ONE
@@ -416,6 +477,13 @@ class ShardWorker:
             self._states = jax.device_put(self._states, state_sharding)
         elif device is not None:
             self._states = jax.device_put(self._states, device)
+        elif model_mesh is not None:
+            # slot states replicate across the model group (every group
+            # device runs the full slot batch in lockstep)
+            rep = NamedSharding(model_mesh, P())
+            self._states = jax.device_put(self._states, rep)
+            if self._conds is not None:
+                self._conds = jax.device_put(self._conds, rep)
 
     # -- the ONE superstep body both execution modes share -------------------
 
@@ -695,6 +763,11 @@ class ShardWorker:
         jax.block_until_ready(info_dev)  # waits on the device, off-path in
         t1 = time.perf_counter()         # the double-buffered serve loops
         self.stats.device_s += t1 - t0
+        if self._collective_s_per_round and not cold:
+            # calibrated estimate: the TP all-reduces run INSIDE the fused
+            # superstep (one psum-probe wall per round, measured at init on
+            # this group's devices), so attribute probe x R per boundary
+            self.stats.collective_s += R * self._collective_s_per_round
         info = np.asarray(jax.device_get(info_dev))
         row = {name: info[i] for i, name in enumerate(_SYNC_ROWS)}
         a, theta_live = row["a"], row["theta_live"]

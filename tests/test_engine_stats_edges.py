@@ -164,3 +164,33 @@ def test_timing_breakdown_fractions_under_overlap():
     # fully empty stats: defined, zero, no division error
     t3 = EngineStats().timing_breakdown()
     assert t3["dispatch_frac"] == 0.0
+
+
+def test_collective_s_merge_and_clamp():
+    """collective_s (model-parallel all-reduce view) sums across the
+    sharded merge like the other components but must NEVER join the
+    accounted total: it is time INSIDE device_s, so adding it would inflate
+    the overlap-safe ``max(wall, accounted)`` clamp and shrink every other
+    fraction."""
+    a = EngineStats(dispatch_s=0.1, device_s=0.8, host_sync_s=0.1,
+                    collective_s=0.5, wall_time=1.0)
+    b = EngineStats(dispatch_s=0.1, device_s=0.8, host_sync_s=0.1,
+                    collective_s=0.3)
+    m = EngineStats.merged([a, b], wall_time=1.0)
+    assert m.collective_s == pytest.approx(0.8)
+    t = m.timing_breakdown()
+    # accounted = 2.0 > wall 1.0 -> denominator is the accounted total,
+    # WITHOUT collective_s (2.0, not 2.8)
+    assert t["device_frac"] == pytest.approx(1.6 / 2.0)
+    assert t["collective_frac"] == pytest.approx(0.8 / 2.0)
+    total = t["dispatch_frac"] + t["device_frac"] + t["host_sync_frac"]
+    assert total <= 1.0 + 1e-9
+    # collective_s can legitimately exceed the accounted components of a
+    # step()-driven loop (no wall recorded): fractions stay finite and the
+    # collective view is still reported
+    s = EngineStats(collective_s=0.4)
+    t2 = s.timing_breakdown()
+    assert t2["collective_s"] == pytest.approx(0.4)
+    assert np.isfinite(t2["collective_frac"])
+    # summary() carries the component through
+    assert m.summary()["timing"]["collective_s"] == pytest.approx(0.8)

@@ -1,0 +1,291 @@
+"""Model-parallel shards: tensor-parallel verify inside the serving mesh.
+
+The contract under test (ISSUE 7):
+
+  * ``model_shards=1`` takes EXACTLY the existing replicated code path —
+    engine output must be bit-identical to the plain ``ShardedASDEngine``
+    per ``ASDChainState`` leaf.
+  * ``model_shards>1`` shards the verify's QKV/output projections and FFN
+    over the group's ``"model"`` axis (``tp_param_pspecs``), with the
+    all-reduce INSIDE the superstep program: samples match the replicated
+    engine within allclose, runs are deterministic (fixed reduction order
+    -> run-twice bitwise), per-device verify weights shrink by 1/mp
+    (asserted on the placed param shard shapes), and the dispatch count
+    per boundary does not grow.
+  * ``EngineStats.collective_s`` reports the calibrated in-program
+    all-reduce seconds and survives the sharded merge.
+
+Multi-device cases skip on a single-device install; CI runs them under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import paper_diffusion_policy_smoke
+from repro.core.schedules import ddpm as ddpm_schedule
+from repro.distributed.sharding import (
+    TP_VERIFY_SIGS,
+    model_group_placements,
+    serving_mesh,
+    tp_param_pspecs,
+)
+from repro.models.diffusion import (
+    denoiser_init,
+    make_ddpm_model_fn,
+    tp_collective_payloads,
+)
+from repro.nn.param import unbox
+from repro.serving.engine import Request
+from repro.serving.router import make_router
+from repro.serving.sharded import ShardedASDEngine
+
+needs2 = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >= 2 devices (set XLA_FLAGS="
+           "--xla_force_host_platform_device_count)")
+needs4 = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs >= 4 devices (set XLA_FLAGS="
+           "--xla_force_host_platform_device_count)")
+
+THETA = 4
+K = 12
+
+
+class _FakeMesh:
+    """tp_param_pspecs only reads mesh.shape — layout units must not need
+    real devices."""
+
+    def __init__(self, model=2):
+        self.shape = {"model": model}
+        self.axis_names = ("slots", "model")
+
+
+@pytest.fixture(scope="module")
+def tp_model():
+    dc = paper_diffusion_policy_smoke()  # 2 layers, 4 heads, d_ff 128
+    params = unbox(denoiser_init(jax.random.PRNGKey(0), dc))
+    boxed = jax.eval_shape(
+        lambda k: denoiser_init(k, dc), jax.random.PRNGKey(0))
+    sched = ddpm_schedule(K=K)
+    return dc, params, boxed, sched
+
+
+def _requests(dc, n, seed0=100):
+    rng = np.random.default_rng(seed0)
+    return [
+        Request(i, key=jax.random.PRNGKey(seed0 + i),
+                y0=rng.standard_normal(
+                    (dc.seq_len, dc.d_data)).astype(np.float32))
+        for i in range(n)
+    ]
+
+
+def _engine(dc, params, sched, *, mp=1, boxed=None, **kw):
+    base = dict(
+        schedule=sched, event_shape=(dc.seq_len, dc.d_data),
+        num_slots=4, theta=THETA, eager_head=True, noise_mode="counter",
+        keep_trajectory=False, params=params,
+        router=make_router("round-robin"),
+    )
+    base.update(kw)
+    if mp > 1:
+        specs = tp_param_pspecs(boxed, serving_mesh(base.get("shards", 1), mp))
+        return ShardedASDEngine(
+            lambda p, cond: make_ddpm_model_fn(p, dc, tp_axis="model"),
+            model_shards=mp, param_specs=specs,
+            collective_payloads=tp_collective_payloads(params, specs, dc),
+            **base)
+    return ShardedASDEngine(
+        lambda p, cond: make_ddpm_model_fn(p, dc), **base)
+
+
+def _leaf_by_name(tree, name):
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if getattr(path[-1], "key", None) == name:
+            return leaf
+    raise KeyError(name)
+
+
+# -- layout units (device-count independent) --------------------------------
+
+
+def test_tp_param_pspecs_shards_only_whitelisted(tp_model):
+    """Only the TP_VERIFY_SIGS leaves get a "model" entry — and on the
+    head/hidden axis the TP forward actually slices/psums for."""
+    dc, _, boxed, _ = tp_model
+    specs = tp_param_pspecs(boxed, _FakeMesh(2))
+    wq = _leaf_by_name(specs, "wq")
+    assert "model" in tuple(wq), wq  # heads axis sharded
+    wo = _leaf_by_name(specs, "wo")
+    assert "model" in tuple(wo), wo
+    w_down = _leaf_by_name(specs, "w_down")
+    assert "model" in tuple(w_down), w_down
+    # non-whitelisted leaves (embeddings, norms, heads) replicate
+    for path, spec in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(
+                x, jax.sharding.PartitionSpec))[0]:
+        name = getattr(path[-1], "key", "")
+        if name not in ("wq", "wk", "wv", "wo", "bq",
+                        "w_gate", "w_up", "w_down"):
+            assert "model" not in [
+                a for e in spec for a in
+                ((e,) if isinstance(e, str) else tuple(e or ()))], (
+                name, spec)
+    assert TP_VERIFY_SIGS  # the whitelist is the contract, not an impl detail
+
+
+def test_tp_collective_payloads_per_layer_row(tp_model):
+    """One (L, d_model) psum per row-parallel leaf per stacked layer: the
+    smoke config has 2 layers x (wo + w_down) = 4 payload entries."""
+    dc, params, boxed, _ = tp_model
+    specs = tp_param_pspecs(boxed, _FakeMesh(2))
+    payloads = tp_collective_payloads(params, specs, dc)
+    assert len(payloads) == 2 * dc.backbone.n_layers
+    row = dc.seq_len * dc.backbone.d_model * 4  # f32
+    assert all(p == row for p in payloads)
+
+
+def test_model_group_placements_rows():
+    devs = list(range(8))  # placements are layout math, any objects work
+    groups = model_group_placements(2, 2, devs)
+    assert groups == [[0, 1], [2, 3]]
+    with pytest.raises(ValueError):
+        model_group_placements(3, 3, devs)
+
+
+def test_mp_requires_explicit_params_and_specs(tp_model):
+    dc, params, boxed, sched = tp_model
+    with pytest.raises(ValueError, match="param_specs"):
+        ShardedASDEngine(
+            lambda p, cond: make_ddpm_model_fn(p, dc, tp_axis="model"),
+            sched, (dc.seq_len, dc.d_data), num_slots=4, theta=THETA,
+            model_shards=2, params=params)  # no param_specs
+
+
+# -- parity ------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def replicated_ref(tp_model):
+    dc, params, _, sched = tp_model
+    eng = _engine(dc, params, sched)
+    out = eng.serve(_requests(dc, 6))
+    return out, eng.stats
+
+
+@needs2
+def test_mp1_bit_identical_per_leaf(tp_model, replicated_ref):
+    """model_shards=1 IS the replicated engine: same bits per sample and
+    per ASDChainState leaf, in both dispatch modes."""
+    dc, params, boxed, sched = tp_model
+    ref_out, _ = replicated_ref
+    for kw in (dict(dispatch="fused", shards=2),
+               dict(dispatch="per-shard", shards=2)):
+        eng = _engine(dc, params, sched, mp=1, **kw)
+        out = eng.serve(_requests(dc, 6))
+        for rid in ref_out:
+            np.testing.assert_array_equal(out[rid], ref_out[rid])
+        s = 0 if kw["dispatch"] == "fused" else None
+        if s is not None:
+            ref_leaves = jax.tree_util.tree_leaves(
+                eng.workers[0].chain_state(0))
+            assert all(np.isfinite(np.asarray(l)).all() for l in ref_leaves
+                       if np.issubdtype(np.asarray(l).dtype, np.floating))
+
+
+@needs2
+def test_mp2_matches_replicated_and_is_deterministic(tp_model,
+                                                     replicated_ref):
+    """mp=2 verify (sharded projections + in-program psum) reproduces the
+    replicated samples within allclose; two runs of the SAME TP engine are
+    bitwise identical (single fixed reduction order)."""
+    dc, params, boxed, sched = tp_model
+    ref_out, ref_stats = replicated_ref
+    eng = _engine(dc, params, sched, mp=2, boxed=boxed, shards=1,
+                  dispatch="per-shard")
+    out1 = eng.serve(_requests(dc, 6))
+    for rid in ref_out:
+        np.testing.assert_allclose(
+            out1[rid], ref_out[rid], rtol=1e-5, atol=1e-5)
+    # speculation counters are accept/reject decisions — small numeric
+    # differences may flip a boundary case, but the workload must agree
+    assert eng.stats.retired == ref_stats.retired
+    eng2 = _engine(dc, params, sched, mp=2, boxed=boxed, shards=1,
+                   dispatch="per-shard")
+    eng2.adopt_programs(eng)
+    out2 = eng2.serve(_requests(dc, 6))
+    for rid in out1:
+        np.testing.assert_array_equal(out1[rid], out2[rid])
+
+
+@needs4
+def test_mp2_fused_dispatch_parity_and_count(tp_model, replicated_ref):
+    """Fused dispatch at shards=2 x mp=2 (the 2-D serving mesh): allclose
+    parity with the replicated reference AND the superstep count per
+    boundary is unchanged — tensor parallelism rides inside the one
+    program, it does not add dispatches."""
+    dc, params, boxed, sched = tp_model
+    ref_out, _ = replicated_ref
+    base = _engine(dc, params, sched, mp=1, shards=2, dispatch="fused")
+    out_b = base.serve(_requests(dc, 6))
+    eng = _engine(dc, params, sched, mp=2, boxed=boxed, shards=2,
+                  dispatch="fused")
+    out = eng.serve(_requests(dc, 6))
+    for rid in ref_out:
+        np.testing.assert_allclose(
+            out[rid], ref_out[rid], rtol=1e-5, atol=1e-5)
+    assert eng.stats.supersteps == base.stats.supersteps
+    assert out_b.keys() == out.keys()
+
+
+@needs2
+def test_mp_param_shards_shrink_per_device(tp_model):
+    """The placed verify weights occupy 1/mp per device: the column-parallel
+    wq keeps heads/mp local heads, the row-parallel w_down keeps d_ff/mp
+    local rows — the per-device verify FLOPs claim, asserted on shapes."""
+    dc, params, boxed, sched = tp_model
+    eng = _engine(dc, params, sched, mp=2, boxed=boxed, shards=1,
+                  dispatch="per-shard")
+    placed = eng.workers[0]._params
+    wq = _leaf_by_name(placed, "wq")
+    local = wq.addressable_shards[0].data.shape
+    assert local[-2] == dc.backbone.n_heads // 2, (local, wq.shape)
+    w_down = _leaf_by_name(placed, "w_down")
+    local = w_down.addressable_shards[0].data.shape
+    assert local[-2] == dc.backbone.d_ff // 2, (local, w_down.shape)
+    # replicated leaves stay whole
+    wk = _leaf_by_name(placed, "wk")
+    assert wk.addressable_shards[0].data.shape == wk.shape
+
+
+# -- collective accounting ---------------------------------------------------
+
+
+@needs2
+def test_collective_s_reported_and_merged(tp_model):
+    """mp>1 runs report calibrated collective_s > 0; the sharded merge sums
+    it and timing_breakdown carries the fraction without disturbing the
+    overlap-safe accounted clamp."""
+    dc, params, boxed, sched = tp_model
+    eng = _engine(dc, params, sched, mp=2, boxed=boxed, shards=1,
+                  dispatch="per-shard")
+    eng.serve(_requests(dc, 4))
+    s = eng.stats
+    assert s.collective_s > 0.0
+    tb = s.timing_breakdown()
+    assert tb["collective_s"] == s.collective_s
+    assert 0.0 < tb["collective_frac"] <= 1.0
+    # collective_s is a view INTO device time, not a 4th wall component
+    accounted = tb["dispatch_s"] + tb["device_s"] + tb["host_sync_s"]
+    assert accounted <= max(s.wall_time, accounted) + 1e-9
+
+
+@needs2
+def test_mp1_reports_zero_collective(tp_model, replicated_ref):
+    _, ref_stats = replicated_ref
+    assert ref_stats.collective_s == 0.0
+    assert ref_stats.timing_breakdown()["collective_frac"] == 0.0

@@ -14,7 +14,13 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import reduced
 from repro.configs.registry import get_config
-from repro.distributed.sharding import LOGICAL_RULES, param_pspecs, zero1_pspec
+from repro.distributed.sharding import (
+    LOGICAL_RULES,
+    fsdp_pspecs,
+    param_pspecs,
+    tp_param_pspecs,
+    zero1_pspec,
+)
 from repro.models.lm import lm_init
 from repro.nn.param import logical_to_pspec
 
@@ -48,6 +54,65 @@ def test_shape_aware_fallback_for_odd_heads():
         used_model += "model" in tuple(spec)
     # scanned stacks collapse per-layer leaves; most big leaves must shard
     assert used_model >= 8, used_model
+
+
+def _mentions(spec, axis):
+    out = []
+    for e in spec:
+        out.extend((e,) if isinstance(e, str) else tuple(e or ()))
+    return axis in out
+
+
+def test_tp_pspecs_odd_heads_replicate_not_error():
+    """Manual-TP layout on a FIXED ``model`` axis: a head count that does
+    not divide (musicgen's 24 heads over 16) must REPLICATE the leaf — the
+    TP forward then skips its slice+psum — never error and never shard some
+    other dim (unlike ``param_pspecs``, whose compiler-assisted fallback
+    may, because GSPMD inserts the collectives it needs)."""
+
+    class FakeMesh:
+        axis_names = ("slots", "model")
+        shape = {"slots": 1, "model": 16}
+
+    boxed = jax.eval_shape(
+        lambda k: lm_init(k, get_config("musicgen-medium")),
+        jax.random.PRNGKey(0))
+    specs = tp_param_pspecs(boxed, FakeMesh())
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs)
+    for path, spec in flat:
+        key = jax.tree_util.keystr(path)
+        if "wq" in key or "wo" in key:  # 24 heads % 16 != 0
+            assert spec == P(), (key, spec)
+        assert not _mentions(spec, "slots"), (key, spec)
+    # the same model on a DIVIDING axis does shard its head/hidden dims
+    FakeMesh.shape = {"slots": 1, "model": 8}
+    specs8 = tp_param_pspecs(boxed, FakeMesh())
+    flat8, _ = jax.tree_util.tree_flatten_with_path(specs8)
+    assert any(
+        _mentions(spec, "model") for path, spec in flat8
+        if "wq" in jax.tree_util.keystr(path))
+
+
+def test_fsdp_pspecs_on_composed_serving_mesh():
+    """fsdp_pspecs on the 2-D serving mesh ("slots", "model"): with no
+    "data" axis the flattened DP world is the model axis alone — large
+    leaves shard over "model", nothing ever touches the slots axis, small
+    leaves replicate."""
+
+    class FakeMesh:
+        axis_names = ("slots", "model")
+        shape = {"slots": 4, "model": 2}
+
+    boxed = jax.eval_shape(
+        lambda k: lm_init(k, get_config("musicgen-medium")),
+        jax.random.PRNGKey(0))
+    specs = fsdp_pspecs(boxed, FakeMesh())
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs)
+    sharded = 0
+    for path, spec in flat:
+        assert not _mentions(spec, "slots"), (jax.tree_util.keystr(path), spec)
+        sharded += _mentions(spec, "model")
+    assert sharded >= 8, sharded
 
 
 def test_zero1_adds_data_axis():
