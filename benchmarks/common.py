@@ -11,7 +11,12 @@ for completeness.
 
 from __future__ import annotations
 
+import datetime
+import json
 import os
+import platform
+import subprocess
+import sys
 import time
 
 import jax
@@ -36,6 +41,57 @@ from repro.training.train_step import make_train_step
 
 CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "results/bench_models")
 T_MIN, T_MAX = 0.05, 50.0
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _git_sha() -> str:
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=_REPO_ROOT, timeout=10).stdout.strip()
+        if not sha:
+            return "unknown"
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True, text=True,
+            cwd=_REPO_ROOT, timeout=10).stdout.strip()
+        return sha + ("-dirty" if dirty else "")
+    except Exception:
+        return "unknown"
+
+
+def provenance() -> dict:
+    """The run-environment block every results/*.json writer stamps: what
+    produced this number, on what software, on what hardware shape.
+    ``tools/check_bench.py`` ignores it when diffing metric values."""
+    return {
+        "schema_version": 1,
+        "git_sha": _git_sha(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "device_kind": jax.devices()[0].device_kind,
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "python_version": platform.python_version(),
+        "platform": platform.platform(),
+        "date_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "argv": list(sys.argv),
+    }
+
+
+def write_report(path: str, report: dict) -> dict:
+    """Stamp ``provenance`` onto ``report`` and write it to ``path``
+    (pretty-printed, trailing newline).  Returns the stamped report."""
+    report = dict(report)
+    report["provenance"] = provenance()
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    return report
 
 
 def _backbone(n_layers, d_model, n_heads, d_ff):

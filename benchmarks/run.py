@@ -4,9 +4,10 @@ Prints ``name,us_per_call,derived`` CSV (plus a detailed JSON dump).
 Set REPRO_BENCH_QUICK=1 for the reduced sweep (CI/CPU-budget mode).
 """
 
-import json
 import os
 import sys
+
+from benchmarks.common import write_report
 
 from benchmarks import (
     fig2_ldm_speedup,
@@ -41,8 +42,7 @@ def main() -> None:
             all_rows.append(r)
             print(f"{r['name']},{r.get('us_per_call', 0.0):.2f},{r['derived']:.4f}")
     os.makedirs("results", exist_ok=True)
-    with open("results/bench_detail.json", "w") as f:
-        json.dump(all_rows, f, indent=1)
+    write_report("results/bench_detail.json", {"rows": all_rows})
 
 
 if __name__ == "__main__":

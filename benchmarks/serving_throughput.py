@@ -88,6 +88,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import write_report
 from repro.core import (
     AIMDTheta,
     AcceptRateTheta,
@@ -194,6 +195,12 @@ def _clone_programs(eng, warm):
     return eng.adopt_programs(warm)
 
 
+def _trace_path(out_path):
+    """Trace artifact path alongside a report: X.json -> X_trace.json."""
+    root, ext = os.path.splitext(out_path)
+    return root + "_trace" + (ext or ".json")
+
+
 def run_open_loop(eng, reqs, arrivals):
     """Drive one engine under open-loop traffic: request i is submitted at
     ``arrivals[i]`` seconds after start (wall clock), rounds run whenever
@@ -217,7 +224,7 @@ def run_open_loop(eng, reqs, arrivals):
 def build_continuous(params, factory, sched, theta, slots, d, controller=None,
                      execution="unpacked", round_budget=None, allocator=None,
                      rounds_per_sync=1, shards=1, dispatch=None,
-                     round_impl="packed"):
+                     round_impl="packed", tracer=None):
     common = dict(
         model_fn_factory=factory,
         schedule=sched,
@@ -233,6 +240,7 @@ def build_continuous(params, factory, sched, theta, slots, d, controller=None,
         allocator=allocator,
         rounds_per_sync=rounds_per_sync,
         round_impl=round_impl,
+        tracer=tracer,
     )
     if shards > 1:
         # slots is PER SHARD here (each worker keeps the same sub-batch and
@@ -585,7 +593,7 @@ def run_superstep_sweep(params, factory, sched, reqs, theta, slots, d,
 
 
 def run_round_impl_sweep(params, factory, sched, reqs, theta, slots, d,
-                         repeats, r_values=(1, 2, 4, 8)):
+                         repeats, r_values=(1, 2, 4, 8), trace_out=None):
     """Fused vs per-phase packed round bodies across the superstep ladder —
     the refreshed superstep sweep (results/superstep_sweep.json).
 
@@ -608,12 +616,12 @@ def run_round_impl_sweep(params, factory, sched, reqs, theta, slots, d,
             arms_spec[f"{impl}-R{r}"] = (impl, r, budget)
     arms_spec["fused-auto"] = ("fused", max(r_values) // 2, "auto")
 
-    def build(impl, rps, rb):
+    def build(impl, rps, rb, tracer=None):
         return build_continuous(
             params, factory, sched, theta, slots, d,
             controller=StaticTheta(), execution="packed", round_budget=rb,
             allocator=make_allocator("waterfill", theta_max=theta),
-            rounds_per_sync=rps, round_impl=impl)
+            rounds_per_sync=rps, round_impl=impl, tracer=tracer)
 
     warms, warm_by_impl = {}, {}
     for name, (impl, rps, rb) in arms_spec.items():
@@ -670,11 +678,49 @@ def run_round_impl_sweep(params, factory, sched, reqs, theta, slots, d,
 
     best_packed = max((f"packed-R{r}" for r in r_values), key=tput)
     best_fused = max((f"fused-R{r}" for r in r_values), key=tput)
+
+    # observability arm: re-serve the deepest fused covering arm with the
+    # trace recorder attached.  Tracing is host-side bookkeeping only —
+    # the served bits MUST equal the golden (asserted), and the boundary
+    # spans become the sweep's trace artifact.
+    tracing = None
+    if trace_out is not None:
+        from repro.serving.obs import TraceRecorder
+
+        tname = f"fused-R{max(r_values)}"
+        impl, rps, rb = arms_spec[tname]
+        tr = TraceRecorder()
+        wall_traced = None
+        for _ in range(repeats):  # best-of-repeats, same as the timed arms
+            tr.clear()
+            eng = _clone_programs(build(impl, rps, rb, tracer=tr),
+                                  warms[tname])
+            t0 = time.perf_counter()
+            out = eng.serve(list(reqs))
+            wall = time.perf_counter() - t0
+            for r in reqs:
+                np.testing.assert_array_equal(out[r.rid], golden[r.rid])
+            wall_traced = wall if wall_traced is None else min(
+                wall_traced, wall)
+        doc = tr.export_chrome_trace(trace_out)
+        tracing = dict(
+            arm=tname,
+            parity_bitwise=True,  # asserted vs the covering golden above
+            wall_time_s=wall_traced,
+            overhead_vs_best=wall_traced / best[tname][0],
+            trace_events=len(doc["traceEvents"]),
+            trace_path=trace_out,
+        )
+        print(f"[trace:{tname}] {tracing['trace_events']} events -> "
+              f"{trace_out} (overhead {tracing['overhead_vs_best']:.3f}x "
+              f"best wall, bits identical)")
+
     return dict(
         arms=arms,
         r_values=list(r_values),
         best_packed=best_packed,
         best_fused=best_fused,
+        tracing=tracing,
         parity_bitwise=True,  # asserted across every covering arm above
         # the acceptance headlines: the fused body keeps (or beats) the
         # packed ladder's best samples/s while the dispatch tax shrinks
@@ -690,7 +736,7 @@ def run_round_impl_sweep(params, factory, sched, reqs, theta, slots, d,
 
 def run_shard_sweep(params, factory, sched, theta, slots_local, d, seed,
                     cond_max, requests, repeats, shard_counts=(1, 2, 4),
-                    rounds_per_sync=2):
+                    rounds_per_sync=2, trace_out=None):
     """Sharded serving scaling: n shard-local workers, each with the SAME
     slot sub-batch (``slots_local``) and the SAME FIXED per-shard packed
     budget (``slots_local * theta`` — covering, so grants always equal
@@ -721,13 +767,14 @@ def run_shard_sweep(params, factory, sched, theta, slots_local, d, seed,
     n_dev = len(jax.devices())
     controller = StaticTheta()
 
-    def build(n):
+    def build(n, tracer=None):
         return build_continuous(params, factory, sched, theta, slots_local,
                                 d, controller=controller, execution="packed",
                                 round_budget=budget,
                                 allocator=make_allocator(
                                     "waterfill", theta_max=theta),
-                                rounds_per_sync=rounds_per_sync, shards=n)
+                                rounds_per_sync=rounds_per_sync, shards=n,
+                                tracer=tracer)
 
     def make_reqs():
         return [
@@ -788,12 +835,47 @@ def run_shard_sweep(params, factory, sched, theta, slots_local, d, seed,
               f"samples/s ({requests} reqs on {n}x{slots_local} slots, "
               f"budget {budget}/shard, routed {routed})")
 
+    # observability arm: re-serve the deepest shard count with the trace
+    # recorder attached (per-shard dispatch/device/harvest lanes + router
+    # instants).  Tracing is host-side only: bits must equal the golden.
+    tracing = None
+    if trace_out is not None:
+        from repro.serving.obs import TraceRecorder
+
+        tn = shard_counts[-1]
+        tr = TraceRecorder()
+        wall_traced = None
+        for _ in range(repeats):  # best-of-repeats, same as the timed arms
+            tr.clear()
+            eng = build(tn, tracer=tr).adopt_programs(warms[tn])
+            reqs_t = make_reqs()
+            t0 = time.perf_counter()
+            out = eng.serve(reqs_t)
+            wall = time.perf_counter() - t0
+            for r in reqs_t:
+                np.testing.assert_array_equal(out[r.rid], golden[r.rid])
+            wall_traced = wall if wall_traced is None else min(
+                wall_traced, wall)
+        doc = tr.export_chrome_trace(trace_out)
+        tracing = dict(
+            arm=f"shards_{tn}",
+            parity_bitwise=True,  # asserted vs the golden above
+            wall_time_s=wall_traced,
+            overhead_vs_best=wall_traced / best[tn][0],
+            trace_events=len(doc["traceEvents"]),
+            trace_path=trace_out,
+        )
+        print(f"[trace:shards={tn}] {tracing['trace_events']} events -> "
+              f"{trace_out} (overhead {tracing['overhead_vs_best']:.3f}x "
+              f"best wall, bits identical)")
+
     tputs = [arms[f"shards_{n}"]["samples_per_s"] for n in shard_counts]
     return dict(
         arms=arms,
         shard_counts=list(shard_counts),
         devices=n_dev,
         rounds_per_sync=rounds_per_sync,
+        tracing=tracing,
         parity_bitwise=True,  # asserted above, across every shard count
         # the acceptance headline: added shards never lose throughput from
         # 1 shard to the deepest sweep point
@@ -1072,10 +1154,8 @@ def main():
                          "requests": min(args.requests, 8)},
             **sweep}
         out_path = args.out or "results/model_parallel.json"
+        report = write_report(out_path, report)
         print(json.dumps(report, indent=2))
-        os.makedirs(os.path.dirname(out_path), exist_ok=True)
-        with open(out_path, "w") as f:
-            json.dump(report, f, indent=2)
         print(f"\nmodel-parallel verify on {report['devices']} device(s): "
               f"mp=1 bitwise parity {report['parity_mp1_bitwise']}, "
               f"mp>1 allclose {report['parity_mp_allclose']}, superstep "
@@ -1084,18 +1164,17 @@ def main():
         return
 
     if args.shards == "sweep":
+        out_path = args.out or "results/sharded_serving.json"
         sweep = run_shard_sweep(params, factory, sched, args.theta,
                                 args.slots, args.d, args.seed,
-                                args.cond_max, args.requests, args.repeats)
+                                args.cond_max, args.requests, args.repeats,
+                                trace_out=_trace_path(out_path))
         # requests is the TOTAL fixed pool every arm serves; only the slot
         # count is per shard
         report = {"workload": {**workload, "slots": f"{args.slots}/shard"},
                   **sweep}
-        out_path = args.out or "results/sharded_serving.json"
+        report = write_report(out_path, report)
         print(json.dumps(report, indent=2))
-        os.makedirs(os.path.dirname(out_path), exist_ok=True)
-        with open(out_path, "w") as f:
-            json.dump(report, f, indent=2)
         print(f"\nsharded weak scaling on {report['devices']} device(s): "
               f"{report['max_vs_1_throughput']:.2f}x samples/s at "
               f"{report['shard_counts'][-1]} shards vs 1; non-decreasing: "
@@ -1105,15 +1184,14 @@ def main():
     shards = int(args.shards)
 
     if args.round_impl == "sweep":
+        out_path = args.out or "results/superstep_sweep.json"
         sweep = run_round_impl_sweep(params, factory, sched, reqs,
                                      args.theta, args.slots, args.d,
-                                     args.repeats)
+                                     args.repeats,
+                                     trace_out=_trace_path(out_path))
         report = {"workload": workload, **sweep}
-        out_path = args.out or "results/superstep_sweep.json"
+        report = write_report(out_path, report)
         print(json.dumps(report, indent=2))
-        os.makedirs(os.path.dirname(out_path), exist_ok=True)
-        with open(out_path, "w") as f:
-            json.dump(report, f, indent=2)
         print(f"\nfused round body ({report['best_fused']}): "
               f"{report['fused_vs_packed_best_throughput']:.2f}x the best "
               f"packed arm's samples/s; dispatch fraction "
@@ -1129,10 +1207,8 @@ def main():
                                     args.slots, args.d, args.repeats)
         report = {"workload": workload, **sweep}
         out_path = args.out or "results/superstep_sweep.json"
+        report = write_report(out_path, report)
         print(json.dumps(report, indent=2))
-        os.makedirs(os.path.dirname(out_path), exist_ok=True)
-        with open(out_path, "w") as f:
-            json.dump(report, f, indent=2)
         print(f"\nbest superstep R={report['best_r']}: "
               f"{report['best_vs_r1_throughput']:.2f}x R=1 samples/s "
               f"(auto arm {report['auto_vs_r1_throughput']:.2f}x); "
@@ -1150,10 +1226,8 @@ def main():
                                  allocator_name=args.allocator)
         report = {"workload": workload, **sweep}
         out_path = args.out or "results/packed_verification.json"
+        report = write_report(out_path, report)
         print(json.dumps(report, indent=2))
-        os.makedirs(os.path.dirname(out_path), exist_ok=True)
-        with open(out_path, "w") as f:
-            json.dump(report, f, indent=2)
         print(f"\npacked @ reduced budget vs unpacked full width: "
               f"{report['packed_reduced_vs_unpacked_throughput']:.2f}x "
               f"samples/s at "
@@ -1211,10 +1285,8 @@ def main():
                       ["p99"], 1e-9)),
         }
         out_path = args.out or "results/serving_poisson.json"
+        report = write_report(out_path, report)
         print(json.dumps(report, indent=2))
-        os.makedirs(os.path.dirname(out_path), exist_ok=True)
-        with open(out_path, "w") as f:
-            json.dump(report, f, indent=2)
         for name in ("unpacked", "packed"):
             pct = arms[name]["latency_percentiles_s"]["completion"]
             print(f"[{name:8s}] completion p50/p95/p99 = "
@@ -1226,10 +1298,8 @@ def main():
                                      args.slots, args.d, args.repeats)
         report = {"workload": workload, **sweep}
         out_path = args.out or "results/adaptive_theta.json"
+        report = write_report(out_path, report)
         print(json.dumps(report, indent=2))
-        os.makedirs(os.path.dirname(out_path), exist_ok=True)
-        with open(out_path, "w") as f:
-            json.dump(report, f, indent=2)
         print(f"\nbest adaptive arm ({report['best_adaptive']}): "
               f"{report['adaptive_vs_static_throughput']:.2f}x the "
               f"work-matched static window's samples/s; vs full-width "
@@ -1269,10 +1339,8 @@ def main():
         "rounds_saved": chunk["fused_rounds"] - cont["fused_rounds"],
     }
     out_path = args.out or "results/serving_throughput.json"
+    report = write_report(out_path, report)
     print(json.dumps(report, indent=2))
-    os.makedirs(os.path.dirname(out_path), exist_ok=True)
-    with open(out_path, "w") as f:
-        json.dump(report, f, indent=2)
     print(f"\ncontinuous/chunked samples-per-sec ratio: "
           f"{report['throughput_ratio']:.2f}x "
           f"({cont['fused_rounds']} vs {chunk['fused_rounds']} fused rounds)")

@@ -74,12 +74,30 @@ superstep program so the boundary still costs one dispatch:
                                                (needs shards * mp devices;
                                                1 = replicated, bit-identical
                                                to the existing engine)
+
+Observability (repro/serving/obs): structured tracing, live metrics, and
+profiling are opt-in and cost nothing when off:
+
+  --metrics-port 9100      serve /metrics (Prometheus text), /metrics.json,
+                           and /healthz (503 under drain/backpressure) on a
+                           daemon thread; 0 binds an ephemeral port
+  --trace-out t.json       record request-lifecycle + superstep boundary
+                           spans into a ring buffer and export Chrome
+                           trace-event JSON (load in Perfetto / about:tracing)
+  --trace-capacity 65536   ring size (drop-oldest beyond it)
+  --profile-supersteps 8   bracket N warm supersteps in jax.profiler.trace
+  --profile-dir results/profile
+  --log-level info         repro.serving.* logger threshold
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import logging
 import time
+import urllib.error
+import urllib.request
 
 import numpy as np
 
@@ -107,10 +125,18 @@ from repro.models.diffusion import (
 )
 from repro.nn.param import unbox
 from repro.serving.engine import ContinuousASDEngine, Request
+from repro.serving.obs import (
+    MetricsRegistry,
+    MetricsServer,
+    TraceRecorder,
+    instrument_engine,
+)
 from repro.serving.packing import ALLOCATORS, make_allocator
 from repro.serving.router import ROUTERS, make_router
 from repro.serving.scheduler import POLICIES, make_policy
 from repro.serving.sharded import ShardedASDEngine
+
+log = logging.getLogger("repro.serving.serve")
 
 
 def _build(args):
@@ -156,6 +182,25 @@ def run_fused(args):
     print(f"output {out.shape}, finite={bool(np.isfinite(np.asarray(out)).all())}")
 
 
+def _profile_supersteps(eng, args, slots):
+    """Bracket N warm supersteps in a ``jax.profiler`` trace.  A warm pool
+    fills the slots and the first superstep runs BEFORE the bracket opens,
+    so the profile shows steady-state dispatch/device overlap, not compile.
+    The warm pool's results are discarded (its work does land in stats)."""
+    for i in range(slots):
+        eng.submit(Request(-1 - i, key=jax.random.PRNGKey(10**6 + i)))
+    eng.step()  # compile + first dispatch, outside the profiled window
+    with jax.profiler.trace(args.profile_dir):
+        for _ in range(args.profile_supersteps):
+            if not eng.step():
+                break
+    while eng.step():
+        pass
+    eng.drain_results()
+    print(f"[profile] {args.profile_supersteps} warm supersteps -> "
+          f"{args.profile_dir} (view with tensorboard or xprof)")
+
+
 def run_continuous(args):
     mesh, dc, params = _build(args)
     sched = ddpm_schedule(args.K)
@@ -188,6 +233,8 @@ def run_continuous(args):
         else:
             budget = int(args.round_budget) or slots_local * args.theta
         allocator = make_allocator(args.allocator, theta_max=args.theta)
+    tracer = (TraceRecorder(capacity=args.trace_capacity)
+              if args.trace_out else None)
     common = dict(
         schedule=sched,
         event_shape=(dc.seq_len, dc.d_data),
@@ -206,6 +253,7 @@ def run_continuous(args):
         rounds_per_sync=(args.rounds_per_sync if args.rounds_per_sync == "auto"
                          else int(args.rounds_per_sync)),
         overcommit=args.overcommit,
+        tracer=tracer,
     )
     if args.shards > 1 or args.model_shards > 1:
         # shard-local workers: each pinned to its own device of the mesh's
@@ -248,6 +296,16 @@ def run_continuous(args):
             state_sharding=chain_state_shardings(mesh),
             **common,
         )
+    server = None
+    if args.metrics_port >= 0:
+        registry = MetricsRegistry()
+        instrument_engine(registry, eng)
+        server = MetricsServer(registry, health_fn=eng.healthz,
+                               port=args.metrics_port)
+        server.start()
+        print(f"[metrics] serving /metrics and /healthz at {server.url}")
+    if args.profile_supersteps > 0:
+        _profile_supersteps(eng, args, slots)
     reqs = [Request(i, key=jax.random.PRNGKey(1000 + i)) for i in range(args.chains)]
     t0 = time.perf_counter()
     out = eng.serve(reqs)
@@ -280,10 +338,9 @@ def run_continuous(args):
         else:
             devs = [w.device for w in eng.workers]
         for w, n, dev in zip(eng.workers, eng.routed_counts, devs):
-            print(f"  shard {w.shard_id}: {n} routed, "
-                  f"{w.stats.retired} retired, "
-                  f"{w.stats.rounds_total} rounds, "
-                  f"budget {w.round_budget}, device {dev}")
+            log.info("shard %d: %d routed, %d retired, %d rounds, "
+                     "budget %s, device %s", w.shard_id, n, w.stats.retired,
+                     w.stats.rounds_total, w.round_budget, dev)
     if args.model_shards > 1:
         tb = s.timing_breakdown()
         print(f"  collectives: {tb['collective_s']*1e3:.1f}ms "
@@ -291,6 +348,27 @@ def run_continuous(args):
     sample = next(iter(out.values()))
     print(f"output {sample.shape} per request, "
           f"finite={bool(np.isfinite(sample).all())}")
+    if server is not None:
+        # self-scrape before shutdown: proves the endpoints answer with the
+        # numbers the engine just produced (and gives CI one line to grep)
+        body = urllib.request.urlopen(
+            server.url + "/metrics", timeout=5).read().decode()
+        try:
+            hz_body = urllib.request.urlopen(
+                server.url + "/healthz", timeout=5).read()
+        except urllib.error.HTTPError as e:  # 503 carries the payload too
+            hz_body = e.read()
+        hz = json.loads(hz_body)
+        n_samples = sum(1 for ln in body.splitlines()
+                        if ln and not ln.startswith("#"))
+        print(f"[metrics] scraped {n_samples} samples from "
+              f"{server.url}/metrics; /healthz status={hz['status']}")
+        server.stop()
+    if tracer is not None:
+        doc = tracer.export_chrome_trace(args.trace_out)
+        print(f"[trace] {len(doc['traceEvents'])} events "
+              f"({doc['droppedEvents']} dropped) -> {args.trace_out} "
+              f"(load in Perfetto / chrome://tracing)")
 
 
 def main():
@@ -362,7 +440,30 @@ def main():
                     help="BudgetAware admission multiplexing factor (>= 1): "
                          "admit until live demand reaches overcommit * "
                          "round_budget, trading window depth for occupancy")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="serve /metrics (Prometheus text), /metrics.json, "
+                         "and /healthz on 127.0.0.1:PORT (0 = ephemeral "
+                         "port; default off)")
+    ap.add_argument("--trace-out", default=None,
+                    help="record request + superstep boundary spans and "
+                         "export Chrome trace-event JSON to this path "
+                         "(default off; zero device-side cost either way)")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="trace ring-buffer capacity (drop-oldest beyond)")
+    ap.add_argument("--profile-supersteps", type=int, default=0,
+                    help="bracket N warm supersteps in jax.profiler.trace "
+                         "before the timed serve (0 = off)")
+    ap.add_argument("--profile-dir", default="results/profile",
+                    help="--profile-supersteps output directory")
+    ap.add_argument("--log-level", default="info",
+                    choices=("debug", "info", "warning", "error"),
+                    help="repro.serving.* logger threshold")
     args = ap.parse_args()
+    # root stays at WARNING (jax's own loggers are chatty at DEBUG); the
+    # flag governs the repro.serving.* hierarchy only
+    logging.basicConfig(format="%(levelname)s %(name)s: %(message)s")
+    logging.getLogger("repro.serving").setLevel(
+        getattr(logging, args.log_level.upper()))
     if args.engine == "continuous":
         run_continuous(args)
     else:

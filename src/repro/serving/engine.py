@@ -45,8 +45,11 @@ SLO attainment).
 
 from __future__ import annotations
 
+import logging
 import time
 from typing import Callable
+
+log = logging.getLogger("repro.serving.engine")
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +83,10 @@ class ContinuousASDEngine(ShardWorker):
     # -- request lifecycle --------------------------------------------------
 
     def submit(self, request: Request) -> None:
+        if self.draining:
+            raise RuntimeError(
+                f"engine is draining: request {request.rid} rejected "
+                "(begin_drain() closed the admission gate)")
         self.scheduler.submit(request, time.perf_counter())
 
     def step(self) -> bool:
@@ -115,6 +122,8 @@ class ContinuousASDEngine(ShardWorker):
         if key is not None:
             self._key = key
         self.dropped_rids = []  # drops are reported per serve() wave
+        log.debug("shard %d serve: %d requests submitted",
+                  self.shard_id, len(requests))
         t0 = time.perf_counter()
         for r in requests:
             self.submit(r)
@@ -133,6 +142,11 @@ class ContinuousASDEngine(ShardWorker):
             pending = nxt
         jax.block_until_ready(self._states.a)
         self.stats.wall_time += time.perf_counter() - t0
+        self._refresh_health()
+        log.info(
+            "shard %d serve drained: %d retired (%d dropped) in %d "
+            "supersteps", self.shard_id, self.stats.retired,
+            self.stats.dropped, self.stats.supersteps)
         return self.drain_results()
 
 

@@ -76,7 +76,13 @@ class EngineStats:
     #                INTO device execution, not a fourth wall component: the
     #                device already pays this time inside the fused program,
     #                so it never joins the accounted total below
+    #   fused_dispatch_s  the sharded FUSED front end's single dispatch wall
+    #                per boundary (one shard_map program covers every shard).
+    #                It is a FRONT-END lane, never split across workers: the
+    #                per-shard dispatch_s above must not invent per-shard
+    #                launch time a worker never spent.
     dispatch_s: float = 0.0
+    fused_dispatch_s: float = 0.0
     device_s: float = 0.0
     host_sync_s: float = 0.0
     collective_s: float = 0.0
@@ -90,16 +96,26 @@ class EngineStats:
     slo_tracked: int = 0  # retired requests that carried a deadline
     slo_met_count: int = 0
     shard: Optional[int] = None  # worker's shard id (None: unsharded/merged)
+    # health / backpressure signals (ROADMAP item 1's router contract),
+    # refreshed by the worker at harvest boundaries and on health() calls:
+    queue_depth: int = 0  # requests queued awaiting a slot (live)
+    queue_depth_peak: int = 0  # high-watermark of the admission queue
+    slot_occupancy: float = 0.0  # busy fraction of the slot batch (live)
+    admission_pressure: float = 0.0  # live demand / round budget (live)
+    draining: bool = False  # graceful drain: no new admissions accepted
     per_request: List[RequestMetrics] = dataclasses.field(default_factory=list)
 
     # every additive counter/timer `merged` sums across shards; wall_time is
-    # deliberately absent (concurrent shards share one wall clock)
+    # deliberately absent (concurrent shards share one wall clock).  The
+    # health signals have their own merge rules below: depth sums, the peak
+    # and pressure take the worst shard, occupancy averages, draining is any.
     _MERGE_SUM = (
         "requests", "retired", "batches", "rounds_total", "supersteps",
-        "dispatch_s", "device_s", "host_sync_s", "collective_s",
-        "head_calls_total",
+        "dispatch_s", "fused_dispatch_s", "device_s", "host_sync_s",
+        "collective_s", "head_calls_total",
         "model_evals_total", "accepts_total", "proposals_total",
         "queue_latency_total", "dropped", "slo_tracked", "slo_met_count",
+        "queue_depth",
     )
 
     @classmethod
@@ -129,6 +145,12 @@ class EngineStats:
         m.wall_time = (
             wall_time if wall_time is not None
             else max((s.wall_time for s in shards), default=0.0))
+        if shards:
+            m.queue_depth_peak = max(s.queue_depth_peak for s in shards)
+            m.admission_pressure = max(s.admission_pressure for s in shards)
+            m.slot_occupancy = (
+                sum(s.slot_occupancy for s in shards) / len(shards))
+            m.draining = any(s.draining for s in shards)
         return m
 
     def observe(self, rm: RequestMetrics) -> None:
@@ -224,16 +246,19 @@ class EngineStats:
         accounted total: it is a calibrated view INTO the device's fused
         execution, already paid inside device_s/wall — adding it would
         double-count and shift the clamp."""
-        accounted = self.dispatch_s + self.device_s + self.host_sync_s
+        accounted = (self.dispatch_s + self.fused_dispatch_s
+                     + self.device_s + self.host_sync_s)
         denom = max(self.wall_time, accounted, 1e-12)
         return {
             "supersteps": self.supersteps,
             "rounds_per_superstep": self.rounds_total / max(self.supersteps, 1),
             "dispatch_s": self.dispatch_s,
+            "fused_dispatch_s": self.fused_dispatch_s,
             "device_s": self.device_s,
             "host_sync_s": self.host_sync_s,
             "collective_s": self.collective_s,
             "dispatch_frac": self.dispatch_s / denom,
+            "fused_dispatch_frac": self.fused_dispatch_s / denom,
             "device_frac": self.device_s / denom,
             "host_sync_frac": self.host_sync_s / denom,
             "collective_frac": self.collective_s / denom,
@@ -256,4 +281,11 @@ class EngineStats:
             "wall_time_s": self.wall_time,
             "throughput_rps": self.throughput(),
             "timing": self.timing_breakdown(),
+            "health": {
+                "queue_depth": self.queue_depth,
+                "queue_depth_peak": self.queue_depth_peak,
+                "slot_occupancy": self.slot_occupancy,
+                "admission_pressure": self.admission_pressure,
+                "draining": self.draining,
+            },
         }

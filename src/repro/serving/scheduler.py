@@ -37,9 +37,12 @@ program never sees them, so every policy serves bit-identical samples.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import math
 from collections import deque
 from typing import Any, List, Optional, Tuple
+
+log = logging.getLogger("repro.serving.scheduler")
 
 
 @dataclasses.dataclass
@@ -284,6 +287,8 @@ class SlotScheduler:
         self.submitted = 0
         self.admitted = 0
         self.retired = 0
+        self.deferred = 0  # admission rounds deferred under budget pressure
+        self.queue_depth_peak = 0  # high-watermark of the admission queue
         self.dropped: List[QueueEntry] = []  # drained by the engine
 
     # -- queue side ---------------------------------------------------------
@@ -291,6 +296,8 @@ class SlotScheduler:
     def submit(self, request, now: float) -> None:
         self._queue.append(QueueEntry(request, now))
         self.submitted += 1
+        if len(self._queue) > self.queue_depth_peak:
+            self.queue_depth_peak = len(self._queue)
 
     @property
     def queue_depth(self) -> int:
@@ -331,6 +338,13 @@ class SlotScheduler:
         ctx.now = now
         quota = self.policy.admit_quota(len(free), ctx)
         if quota <= 0:  # deferred: requests stay queued for a later round
+            self.deferred += 1
+            if log.isEnabledFor(logging.DEBUG):
+                log.debug(
+                    "admission deferred: %d queued, %d slots free, "
+                    "budget pressure %.2f (policy %s)",
+                    len(self._queue), len(free), ctx.budget_pressure,
+                    self.policy.name)
             return []
         free = free[:quota]
         placed: List[Tuple[int, Any]] = []

@@ -56,8 +56,11 @@ per-(R, budget) cache.
 
 from __future__ import annotations
 
+import logging
 import time
 from typing import List, Optional
+
+log = logging.getLogger("repro.serving.sharded")
 
 import jax
 import jax.numpy as jnp
@@ -230,9 +233,17 @@ class ShardedASDEngine:
         self.theta = self.workers[0].theta
         self.dropped_rids: list[int] = []
         self._wall_time = 0.0
+        # the fused front end's single dispatch wall per boundary: a
+        # FRONT-END lane (EngineStats.fused_dispatch_s on the merged view),
+        # never split across the workers' per-shard dispatch_s
+        self._fused_dispatch_s = 0.0
+        self._tracer = worker_kwargs.get("tracer")
         self._routed = np.zeros((shards,), np.int64)  # router audit trail
         if fused:
             self._init_fused(devices)
+        log.debug("sharded engine up: %d shards x %d slots, dispatch=%s, "
+                  "router=%s, mp=%d", shards, slots_local, dispatch,
+                  self.router.name, mp)
 
     # -- fused dispatch: all shards in ONE shard_map program ----------------
 
@@ -473,11 +484,23 @@ class ShardedASDEngine:
             self._states, info, samples = fn(
                 self._states, self._conds, self.workers[0]._params,
                 self._weights_stacked)
-        dt = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        if not cold:
+            # ONE front-end launch covers every shard: account it on the
+            # engine's own fused-dispatch lane.  Splitting it across the
+            # workers' dispatch_s (the old behavior) invented per-shard
+            # launch time no worker ever spent and skewed every per-shard
+            # timing_breakdown().
+            self._fused_dispatch_s += t1 - t0
+        tr = self._tracer
+        if tr is not None and tr.enabled:
+            tr.add_span(
+                "fused_dispatch", t0, t1, pid=self.num_shards, tid=0,
+                pname="frontend", tname="dispatch",
+                args={"R": R, "cold": cold,
+                      "budget": budget if budget is not None else 0})
         snapshots = []
         for w in self.workers:
-            if not cold:
-                w.stats.dispatch_s += dt / self.num_shards
             w.stats.rounds_total += R
             w.stats.supersteps += 1
             snapshots.append(w.stats.rounds_total)
@@ -492,6 +515,12 @@ class ShardedASDEngine:
         jax.block_until_ready(info)
         done_at = time.perf_counter()
         wait = done_at - t_wait
+        tr = self._tracer
+        if tr is not None and tr.enabled:
+            tr.add_span(
+                "fused_device_wait", t_wait, done_at, pid=self.num_shards,
+                tid=1, pname="frontend", tname="device",
+                args={"R": R, "cold": cold})
         info_np = np.asarray(jax.device_get(info))
         samples_np = np.asarray(jax.device_get(samples))
         for i, w in enumerate(self.workers):
@@ -509,9 +538,13 @@ class ShardedASDEngine:
 
     @property
     def stats(self) -> EngineStats:
-        """Merged cross-shard view; per-shard stats at ``shard_stats``."""
-        return EngineStats.merged(
+        """Merged cross-shard view; per-shard stats at ``shard_stats``.
+        The fused front end's dispatch wall rides on the merged view's
+        ``fused_dispatch_s`` lane (workers never carry it)."""
+        m = EngineStats.merged(
             [w.stats for w in self.workers], wall_time=self._wall_time)
+        m.fused_dispatch_s += self._fused_dispatch_s
+        return m
 
     @property
     def shard_stats(self) -> List[EngineStats]:
@@ -531,6 +564,33 @@ class ShardedASDEngine:
     def has_work(self) -> bool:
         return any(w.has_work() for w in self.workers)
 
+    @property
+    def draining(self) -> bool:
+        return any(w.draining for w in self.workers)
+
+    def begin_drain(self) -> None:
+        """Close every shard's admission gate: queued and in-flight
+        requests finish (``serve``/``step`` keep draining), new
+        submissions raise."""
+        log.info("sharded engine draining %d shards", self.num_shards)
+        for w in self.workers:
+            w.begin_drain()
+
+    def health(self) -> List[dict]:
+        """Per-shard health/backpressure documents."""
+        return [w.health() for w in self.workers]
+
+    def healthz(self) -> dict:
+        """The ``/healthz`` document: worst shard wins the status."""
+        shards = self.health()
+        if any(h["status"] == "draining" for h in shards):
+            status = "draining"
+        elif any(h["status"] == "backpressure" for h in shards):
+            status = "backpressure"
+        else:
+            status = "ok"
+        return {"status": status, "shards": shards}
+
     def chain_state(self, shard: int, slot: int):
         if self.dispatch == "fused":  # the engine owns the stacked state
             return jax.tree_util.tree_map(
@@ -540,13 +600,24 @@ class ShardedASDEngine:
     # -- request lifecycle ---------------------------------------------------
 
     def submit(self, request: Request) -> None:
+        if self.draining:
+            raise RuntimeError(
+                f"engine is draining: request {request.rid} rejected "
+                "(begin_drain() closed the admission gates)")
         shard = int(self.router.route(request, self.workers))
         if not 0 <= shard < self.num_shards:
             raise ValueError(
                 f"router {self.router.name!r} returned shard {shard} "
                 f"outside [0, {self.num_shards})")
         self._routed[shard] += 1
-        self.workers[shard].scheduler.submit(request, time.perf_counter())
+        now = time.perf_counter()
+        tr = self._tracer
+        if tr is not None and tr.enabled:
+            tr.add_instant(
+                "route", now, pid=self.num_shards, tid=2,
+                pname="frontend", tname="router",
+                args={"rid": request.rid, "shard": shard})
+        self.workers[shard].scheduler.submit(request, now)
 
     def step(self) -> bool:
         """One superstep boundary across every shard with work: dispatch all
@@ -618,6 +689,17 @@ class ShardedASDEngine:
         for w in self.workers:
             out.update(w.drain_results())
             self.dropped_rids.extend(w.dropped_rids)
+            w._refresh_health()
+        if log.isEnabledFor(logging.INFO):
+            m = self.stats
+            log.info(
+                "sharded serve drained: %d retired (%d dropped) across %d "
+                "shards in %d supersteps", m.retired, m.dropped,
+                self.num_shards, m.supersteps)
+            for w, n in zip(self.workers, self._routed):
+                log.debug("  shard %d: %d routed, %d retired, budget %s",
+                          w.shard_id, int(n), w.stats.retired,
+                          w.round_budget)
         return out
 
     def drain_results(self) -> dict:

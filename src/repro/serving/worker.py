@@ -39,8 +39,11 @@ scalar), collapsing the cache to one executable per R.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Callable, Optional
+
+log = logging.getLogger("repro.serving.worker")
 
 import jax
 import jax.numpy as jnp
@@ -173,6 +176,12 @@ class ShardWorker:
         tier drops a rung (upshifts are immediate).
       shard_id: this worker's index in a sharded deployment (0 for the
         single-shard engine); stamped on the worker's ``EngineStats``.
+      tracer: optional ``repro.serving.obs.TraceRecorder``.  When set, the
+        worker records boundary spans (dispatch / device / harvest /
+        collective, one lane each past the slot rows) and request-lifecycle
+        spans (queued + request per slot) against pid = shard_id — all from
+        host timestamps the stats already take, so tracing adds no device
+        syncs.  ``None`` (default): a single attribute test per boundary.
       pipelined: deprecated alias kept for compatibility — the serve loops
         are always double-buffered; the flag is ignored.
     """
@@ -209,6 +218,7 @@ class ShardWorker:
         model_mesh=None,
         param_specs=None,
         collective_payloads=(),
+        tracer=None,
     ):
         # Tensor parallelism: with ``model_mesh`` (a Mesh whose "model" axis
         # is this worker's device GROUP) the worker wraps every superstep in
@@ -232,6 +242,8 @@ class ShardWorker:
         self.pack_impl = pack_impl
         self.shard_id = shard_id
         self.device = device
+        self._tracer = tracer
+        self.draining = False  # graceful drain: submission gate is closed
         self.controller = controller if controller is not None else StaticTheta()
         if execution not in ("unpacked", "packed"):
             raise ValueError(f"unknown execution mode {execution!r}")
@@ -484,6 +496,12 @@ class ShardWorker:
             self._states = jax.device_put(self._states, rep)
             if self._conds is not None:
                 self._conds = jax.device_put(self._conds, rep)
+        log.debug(
+            "shard %d worker up: slots=%d theta=%d execution=%s budget=%s "
+            "R=%s policy=%s", shard_id, num_slots, self.theta, execution,
+            "auto" if self._budget_auto else self.round_budget,
+            "auto" if self._auto_rps else self._rps,
+            self.scheduler.policy.name)
 
     # -- the ONE superstep body both execution modes share -------------------
 
@@ -550,6 +568,59 @@ class ShardWorker:
 
     def has_work(self) -> bool:
         return self.scheduler.has_work()
+
+    # -- health / drain ------------------------------------------------------
+
+    def begin_drain(self) -> None:
+        """Close the admission gate: in-flight and queued requests finish
+        (``serve``/``step`` keep draining them), new submissions raise —
+        the graceful-drain half of the router health contract."""
+        if not self.draining:
+            self.draining = True
+            self.stats.draining = True
+            log.info("shard %d draining: %d queued, %d active",
+                     self.shard_id, self.scheduler.queue_depth,
+                     len(self.scheduler.active_slots()))
+
+    def _refresh_health(self) -> None:
+        """Stamp the live health/backpressure signals onto ``stats`` —
+        a handful of host integer reads, paid at harvest boundaries and on
+        ``health()`` calls."""
+        s = self.stats
+        sched = self.scheduler
+        s.queue_depth = sched.queue_depth
+        s.queue_depth_peak = max(s.queue_depth_peak, sched.queue_depth_peak)
+        s.slot_occupancy = (
+            (self.num_slots - len(sched.free_slots()))
+            / max(self.num_slots, 1))
+        s.admission_pressure = self._admission_context(
+            time.perf_counter()).budget_pressure
+        s.draining = self.draining
+
+    def health(self) -> dict:
+        """This shard's health/backpressure document.  ``saturated`` means
+        more than a full slot batch is queued behind the busy slots — the
+        backpressure signal ``/healthz`` turns into a 503."""
+        self._refresh_health()
+        s = self.stats
+        saturated = s.queue_depth > self.num_slots
+        status = ("draining" if self.draining
+                  else "backpressure" if saturated else "ok")
+        return {
+            "status": status,
+            "shard": self.shard_id,
+            "queue_depth": s.queue_depth,
+            "queue_depth_peak": s.queue_depth_peak,
+            "slot_occupancy": s.slot_occupancy,
+            "admission_pressure": s.admission_pressure,
+            "draining": self.draining,
+            "saturated": saturated,
+        }
+
+    def healthz(self) -> dict:
+        """The ``/healthz`` document for a single-worker deployment."""
+        h = self.health()
+        return {"status": h["status"], "shards": [h]}
 
     # -- superstep machinery -------------------------------------------------
 
@@ -628,6 +699,10 @@ class ShardWorker:
             lower = max(t for t in self._budget_ladder if t < cur)
             if self._demand_ewma <= self.budget_hysteresis * lower:
                 self.round_budget = lower
+        if self.round_budget != cur:
+            log.debug(
+                "shard %d budget tier %d -> %d (demand ewma %.1f)",
+                self.shard_id, cur, self.round_budget, self._demand_ewma)
         return self.round_budget
 
     def _set_weight(self, slot: int, w: float) -> None:
@@ -658,6 +733,9 @@ class ShardWorker:
         for entry in self.scheduler.drain_dropped():
             self.stats.observe_drop()
             self.dropped_rids.append(entry.request.rid)
+            log.info("shard %d dropped rid=%s at admission "
+                     "(deadline unmeetable)",
+                     self.shard_id, entry.request.rid)
         batch = []
         for slot, req in placed:
             key = req.key if req.key is not None else self._next_key()
@@ -739,10 +817,19 @@ class ShardWorker:
         else:
             self._states, sync = fn(
                 self._states, self._conds, self._params, self._weights_dev)
+        t1 = time.perf_counter()
         if not cold:
-            self.stats.dispatch_s += time.perf_counter() - t0
+            self.stats.dispatch_s += t1 - t0
         self.stats.rounds_total += R
         self.stats.supersteps += 1
+        tr = self._tracer
+        if tr is not None and tr.enabled:
+            tr.add_span(
+                "dispatch", t0, t1, pid=self.shard_id,
+                tid=self.num_slots, pname=f"shard-{self.shard_id}",
+                tname="dispatch",
+                args={"superstep": self.stats.supersteps, "R": R,
+                      "budget": B, "cold": cold})
         return (sync, self.stats.rounds_total, R, t0, cold)
 
     def _harvest(self, pending, done_at: Optional[float] = None) -> None:
@@ -759,15 +846,31 @@ class ShardWorker:
         """
         sync, snapshot_rounds, R, t_dispatch, cold = pending
         info_dev, samples_dev = sync
+        tr = self._tracer
+        if tr is not None and not tr.enabled:
+            tr = None
         t0 = time.perf_counter()
         jax.block_until_ready(info_dev)  # waits on the device, off-path in
         t1 = time.perf_counter()         # the double-buffered serve loops
         self.stats.device_s += t1 - t0
+        if tr is not None:
+            tr.add_span(
+                "device_wait", t0, t1, pid=self.shard_id,
+                tid=self.num_slots + 1, pname=f"shard-{self.shard_id}",
+                tname="device", args={"R": R, "cold": cold})
         if self._collective_s_per_round and not cold:
             # calibrated estimate: the TP all-reduces run INSIDE the fused
             # superstep (one psum-probe wall per round, measured at init on
             # this group's devices), so attribute probe x R per boundary
             self.stats.collective_s += R * self._collective_s_per_round
+            if tr is not None:
+                # a view INTO device execution, anchored to end at the sync
+                # packet's readiness — the estimate, flagged as such
+                est = R * self._collective_s_per_round
+                tr.add_span(
+                    "collective", max(t1 - est, t_dispatch), t1,
+                    pid=self.shard_id, tid=self.num_slots + 3,
+                    tname="collective", args={"estimated": True, "R": R})
         info = np.asarray(jax.device_get(info_dev))
         row = {name: info[i] for i, name in enumerate(_SYNC_ROWS)}
         a, theta_live = row["a"], row["theta_live"]
@@ -804,6 +907,20 @@ class ShardWorker:
                 sinfo = self.scheduler.retire(slot)
                 self._set_weight(slot, 1.0)
                 self._results[sinfo.request.rid] = np.asarray(samples[slot])
+                if tr is not None:
+                    rid = sinfo.request.rid
+                    tr.add_span(
+                        "queued", sinfo.submit_time, sinfo.admit_time,
+                        pid=self.shard_id, tid=slot,
+                        pname=f"shard-{self.shard_id}",
+                        tname=f"slot-{slot}", args={"rid": rid})
+                    tr.add_span(
+                        "request", sinfo.admit_time, now,
+                        pid=self.shard_id, tid=slot,
+                        args={"rid": rid,
+                              "rounds": int(row["rounds"][slot]),
+                              "accepts": int(row["accepts"][slot]),
+                              "theta_live": int(theta_live[slot])})
                 deadline = getattr(sinfo.request, "deadline", None)
                 rm = RequestMetrics(
                     rid=sinfo.request.rid,
@@ -830,7 +947,15 @@ class ShardWorker:
             # next admission re-tiers from ITS OWN demand.
             self._live_demand = 0
             self._demand_ewma = 0.0
-        self.stats.host_sync_s += time.perf_counter() - t1
+        t_end = time.perf_counter()
+        self.stats.host_sync_s += t_end - t1
+        if tr is not None:
+            tr.add_span(
+                "harvest", t1, t_end, pid=self.shard_id,
+                tid=self.num_slots + 2, tname="harvest",
+                args={"retired": len(finished),
+                      "live_demand": self._live_demand})
+        self._refresh_health()
         if not cold:  # a cold dispatch's elapsed time is mostly jit compile
             # ``done_at``: a fused front end passes ONE completion stamp for
             # the whole boundary, so later shards' EWMAs aren't inflated by

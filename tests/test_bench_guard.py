@@ -1,0 +1,132 @@
+"""Bench provenance stamping and the check_bench regression guard."""
+
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:  # benchmarks/ and tools/ live at the repo root
+    sys.path.insert(0, _ROOT)
+
+from benchmarks.common import provenance, write_report  # noqa: E402
+
+
+def _load_check_bench():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench", os.path.join(_ROOT, "tools", "check_bench.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+REPORT = {
+    "workload": {"requests": 64, "slots": 8},
+    "arms": {
+        "fused-R4": {
+            "samples_per_s": 120.0,
+            "supersteps": 12,
+            "wall_time_s": 0.53,
+            "timing": {"dispatch_s": 0.08, "dispatch_frac": 0.15},
+        },
+    },
+    "parity_bitwise": True,
+    "best_fused": "fused-R4",
+    "fused_vs_packed_best_throughput": 1.12,
+}
+
+
+class TestProvenance:
+    def test_required_keys(self):
+        p = provenance()
+        for key in ("schema_version", "git_sha", "jax_version", "backend",
+                    "device_count", "device_kind", "xla_flags",
+                    "python_version", "platform", "date_utc", "argv"):
+            assert key in p, key
+        assert p["schema_version"] == 1
+        assert p["device_count"] >= 1
+        assert p["backend"]  # non-empty
+        json.dumps(p)  # JSON-serializable throughout
+
+    def test_write_report_stamps_and_round_trips(self, tmp_path):
+        path = tmp_path / "sub" / "r.json"  # parent dirs created
+        stamped = write_report(str(path), dict(REPORT))
+        assert "provenance" in stamped
+        assert "provenance" not in REPORT  # input not mutated
+        on_disk = json.loads(path.read_text())
+        assert on_disk == stamped
+        assert on_disk["arms"]["fused-R4"]["samples_per_s"] == 120.0
+
+
+class TestCheckBench:
+    @pytest.fixture()
+    def cb(self):
+        return _load_check_bench()
+
+    def _write(self, path, report):
+        with open(path, "w") as f:
+            json.dump(report, f)
+
+    def test_identical_reports_pass(self, cb, tmp_path):
+        b, c = tmp_path / "b.json", tmp_path / "c.json"
+        self._write(b, REPORT)
+        self._write(c, REPORT)
+        assert cb.main([str(b), str(c)]) == 0
+
+    def test_metric_drift_fails(self, cb, tmp_path, capsys):
+        cur = json.loads(json.dumps(REPORT))
+        cur["fused_vs_packed_best_throughput"] = 0.5  # regressed ratio
+        b, c = tmp_path / "b.json", tmp_path / "c.json"
+        self._write(b, REPORT)
+        self._write(c, cur)
+        assert cb.main([str(b), str(c)]) == 1
+        assert "fused_vs_packed_best_throughput" in capsys.readouterr().err
+
+    def test_parity_flip_fails_even_loose(self, cb, tmp_path):
+        cur = json.loads(json.dumps(REPORT))
+        cur["parity_bitwise"] = False
+        b, c = tmp_path / "b.json", tmp_path / "c.json"
+        self._write(b, REPORT)
+        self._write(c, cur)
+        assert cb.main([str(b), str(c), "--loose"]) == 1
+
+    def test_provenance_and_walls_ignored(self, cb, tmp_path):
+        base = dict(REPORT, provenance={"git_sha": "aaa"})
+        cur = json.loads(json.dumps(base))
+        cur["provenance"]["git_sha"] = "bbb"
+        cur["arms"]["fused-R4"]["wall_time_s"] = 99.0  # machine seconds
+        cur["arms"]["fused-R4"]["timing"]["dispatch_s"] = 42.0
+        b, c = tmp_path / "b.json", tmp_path / "c.json"
+        self._write(b, base)
+        self._write(c, cur)
+        assert cb.main([str(b), str(c)]) == 0
+
+    def test_missing_metric_fails(self, cb, tmp_path):
+        cur = json.loads(json.dumps(REPORT))
+        del cur["arms"]["fused-R4"]["supersteps"]
+        b, c = tmp_path / "b.json", tmp_path / "c.json"
+        self._write(b, REPORT)
+        self._write(c, cur)
+        assert cb.main([str(b), str(c)]) == 1
+
+    def test_loose_skips_phase_sensitive(self, cb, tmp_path):
+        cur = json.loads(json.dumps(REPORT))
+        cur["best_fused"] = "fused-R8"  # argmax arm: machine-phase noise
+        cur["arms"]["fused-R4"]["supersteps"] = 13  # count within 10%
+        b, c = tmp_path / "b.json", tmp_path / "c.json"
+        self._write(b, REPORT)
+        self._write(c, cur)
+        assert cb.main([str(b), str(c)]) == 1  # strict: both fail
+        assert cb.main([str(b), str(c), "--loose"]) == 0
+
+    def test_directory_mode(self, cb, tmp_path):
+        bdir, cdir = tmp_path / "base", tmp_path / "cur"
+        bdir.mkdir(), cdir.mkdir()
+        self._write(bdir / "a.json", REPORT)
+        self._write(cdir / "a.json", REPORT)
+        self._write(cdir / "extra.json", {"new": 1})  # growth is fine
+        assert cb.main([str(bdir), str(cdir)]) == 0
+        os.remove(cdir / "a.json")  # a baseline with no current: failure
+        assert cb.main([str(bdir), str(cdir)]) == 1

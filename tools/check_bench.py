@@ -1,0 +1,180 @@
+#!/usr/bin/env python3
+"""Bench regression guard: diff freshly generated ``results/*.json`` against
+committed baselines with per-metric tolerance bands, exit nonzero on any
+regression.
+
+    python tools/check_bench.py BASELINE CURRENT [--loose] [--rtol X]
+
+``BASELINE`` / ``CURRENT`` are either two report files or two directories
+(directories compare every ``*.json`` name present in BOTH; a baseline file
+missing from CURRENT is a failure, a new CURRENT file is fine — schemas may
+grow).
+
+What gets compared is decided per metric PATH (dot-joined keys), first
+matching rule wins:
+
+  ignore   provenance, trace artifacts, and anything measured in absolute
+           machine seconds (wall times, latencies, per-call micros) — they
+           move with the host, not the code;
+  exact    correctness claims (``parity*``/``*bitwise*``) and every other
+           bool/str: these are the in-run assertions' verdicts and must
+           never drift;
+  rel      numeric metrics within a relative band — tight for relative
+           metrics (ratios, rates, fractions), loose for absolute
+           throughput, exact-by-default for integer counts (rounds,
+           supersteps: deterministic given seeds on one backend).
+
+``--loose`` (CI runs on shared machines) doubles every band, gives integer
+counts a band too, and skips machine-phase-sensitive booleans (monotone /
+non-decreasing claims) plus absolute throughput.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import re
+import sys
+
+# (pattern, mode, rtol) — first match on the dot-joined metric path wins
+RULES = [
+    (r"(^|\.)provenance(\.|$)", "ignore", 0.0),
+    (r"(^|\.)tracing(\.|$)|trace_path|trace_events", "ignore", 0.0),
+    # absolute machine seconds: host-dependent, not code-dependent
+    (r"wall_time|latency|us_per_call|overhead|mean_queue|_s$|_s\.", "ignore", 0.0),
+    (r"(^|\.)routed(\.|$)|(^|\.)argv(\.|$)", "ignore", 0.0),
+    # correctness verdicts: never drift
+    (r"parity|bitwise", "exact", 0.0),
+    # machine-phase-sensitive claims / argmax arm names (skipped by --loose)
+    (r"non_decreasing|monotone|decreasing|best_packed$|best_fused$|best_r$"
+     r"|best_adaptive$", "phase", 0.0),
+    # relative metrics: stable across hosts
+    (r"ratio|_vs_|frac|accept_rate|occupancy|attainment|speedup", "rel", 0.15),
+    # absolute throughput: same-host band only (skipped by --loose)
+    (r"samples_per_s|throughput", "abs-tput", 0.25),
+]
+DEFAULT_RTOL = 0.25
+
+
+def flatten(obj, prefix=""):
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.update(flatten(v, f"{prefix}.{i}"))
+    else:
+        out[prefix] = obj
+    return out
+
+
+def classify(path):
+    for pat, mode, rtol in RULES:
+        if re.search(pat, path):
+            return mode, rtol
+    return None, DEFAULT_RTOL
+
+
+def compare_report(name, base, cur, loose, rtol_scale):
+    """Returns a list of human-readable failure lines (empty = pass)."""
+    fails = []
+    fb, fc = flatten(base), flatten(cur)
+    for path, bval in sorted(fb.items()):
+        mode, rtol = classify(path)
+        if mode == "ignore":
+            continue
+        if mode == "phase" and loose:
+            continue
+        if mode == "abs-tput" and loose:
+            continue
+        if path not in fc:
+            fails.append(f"{name}: {path}: missing from current report")
+            continue
+        cval = fc[path]
+        if isinstance(bval, bool) or isinstance(bval, str) or bval is None:
+            if bval != cval:
+                fails.append(f"{name}: {path}: {bval!r} -> {cval!r}")
+            continue
+        if not isinstance(bval, (int, float)):
+            continue
+        if not isinstance(cval, (int, float)) or isinstance(cval, bool):
+            fails.append(f"{name}: {path}: {bval!r} -> non-numeric {cval!r}")
+            continue
+        if isinstance(bval, int) and isinstance(cval, int) and mode is None:
+            # integer counts: deterministic given seeds, unless --loose
+            band = 0.1 * rtol_scale if loose else 0.0
+        else:
+            band = rtol * rtol_scale if mode else DEFAULT_RTOL * rtol_scale
+        if not math.isfinite(float(cval)):
+            fails.append(f"{name}: {path}: {bval} -> non-finite {cval}")
+            continue
+        denom = max(abs(float(bval)), 1e-12)
+        drift = abs(float(cval) - float(bval)) / denom
+        if drift > band:
+            fails.append(f"{name}: {path}: {bval} -> {cval} "
+                         f"(drift {drift:.1%} > band {band:.1%})")
+    return fails
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="diff bench reports against baselines; exit 1 on drift")
+    ap.add_argument("baseline", help="baseline report file or directory")
+    ap.add_argument("current", help="current report file or directory")
+    ap.add_argument("--loose", action="store_true",
+                    help="cross-machine mode: double every band, tolerate "
+                         "integer-count drift, skip phase-sensitive booleans "
+                         "and absolute throughput")
+    ap.add_argument("--rtol", type=float, default=1.0,
+                    help="scale every tolerance band by this factor")
+    args = ap.parse_args(argv)
+    scale = args.rtol * (2.0 if args.loose else 1.0)
+
+    pairs = []
+    if os.path.isdir(args.baseline):
+        if not os.path.isdir(args.current):
+            ap.error("baseline is a directory but current is not")
+        for fn in sorted(os.listdir(args.baseline)):
+            if not fn.endswith(".json"):
+                continue
+            b = os.path.join(args.baseline, fn)
+            c = os.path.join(args.current, fn)
+            pairs.append((fn, b, c))
+    else:
+        pairs.append((os.path.basename(args.current),
+                      args.baseline, args.current))
+
+    if not pairs:
+        print("check_bench: no baseline reports found", file=sys.stderr)
+        return 1
+
+    fails, checked = [], 0
+    for name, b, c in pairs:
+        if not os.path.exists(c):
+            fails.append(f"{name}: current report missing ({c})")
+            continue
+        checked += 1
+        fails.extend(compare_report(name, load(b), load(c),
+                                    args.loose, scale))
+
+    if fails:
+        print(f"check_bench: {len(fails)} regression(s) across "
+              f"{checked}/{len(pairs)} report(s):", file=sys.stderr)
+        for line in fails:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(f"check_bench: OK — {checked} report(s) within tolerance"
+          f"{' (loose)' if args.loose else ''}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
