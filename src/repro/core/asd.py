@@ -43,7 +43,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.controller import StaticTheta, ThetaController
+from repro.core.controller import (
+    BranchController, StaticBranches, StaticTheta, ThetaController)
 from repro.core.grs import grs, bcast_right
 from repro.core.schedules import Schedule
 from repro.core.sequential import init_y0
@@ -54,6 +55,18 @@ ModelFn = Callable[[jax.Array, jax.Array], jax.Array]
 # the default controller: a constant full-width window, bit-identical to the
 # pre-controller sampler (see repro.core.controller for adaptive ones)
 _STATIC = StaticTheta()
+
+# the default branch controller: a constant branch count (cap = num_branches;
+# num_branches == 1 is the single-draft sampler bit for bit)
+_STATIC_B = StaticBranches()
+
+# Key-fold offset separating per-branch noise streams (branches >= 1) from
+# the canonical per-step folds of branch 0.  Branch b's stream is
+# fold_in(fold_in(k, _BRANCH_SALT + b), step) — a pure function of (branch,
+# absolute step) and the CHAIN key only, so branch draws are independent of
+# slot index, shard placement, and admission order, and re-speculation stays
+# deterministic (the Lemma 13 filtration argument applies per branch).
+_BRANCH_SALT = 0x5D5_0000
 
 
 @jax.tree_util.register_dataclass
@@ -66,6 +79,10 @@ class ASDResult:
     model_evals: jax.Array  # () int32 — total model evaluations (all slots)
     accepts: jax.Array  # () int32 — total accepted speculations
     proposals: jax.Array  # () int32 — total verified slots
+    draft_points: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.asarray(0, jnp.int32)
+    )  # () int32 — verified draft points across ALL branches (== proposals
+    #   at num_branches == 1; the branched waste accounting reads the gap)
 
     def parallel_depth(self):
         """Sequential model-call depth: each round costs one parallel
@@ -111,6 +128,16 @@ class ASDChainState:
     k_xi: jax.Array  # noise-stream key (counter mode)
     u_buf: Optional[jax.Array]  # (K+theta+1,) or None in counter mode
     xi_buf: Optional[jax.Array]  # (K+theta+1, *event) or None in counter mode
+    # -- branched speculation (B exchangeable draft branches per round) ------
+    b_live: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.asarray(1, jnp.int32)
+    )  # () int32 current branch count (<= the static num_branches cap)
+    bctrl: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.zeros((0,), jnp.float32)
+    )  # BranchController state vector
+    draft_points: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.asarray(0, jnp.int32)
+    )  # () int32 total verified draft points across ALL branches
 
 
 # Backwards-compat alias: the loop state used to be private.
@@ -129,6 +156,8 @@ def init_chain_state(
     noise_mode: str = "buffer",
     keep_trajectory: bool = True,
     controller: ThetaController = _STATIC,
+    num_branches: int = 1,
+    branch_controller: BranchController = _STATIC_B,
 ) -> ASDChainState:
     """Fresh chain at position 0 with its absolute-step randomness fixed.
 
@@ -137,11 +166,15 @@ def init_chain_state(
     position, which is what makes re-speculation deterministic (Lemma 13).
     ``theta`` is the static cap theta_max: it shapes the buffers, while the
     ``controller`` decides how much of the window each round actually uses.
+    ``num_branches`` is the static branch cap B (branch noise streams are
+    derived per round from the chain keys, so no extra buffers); the
+    ``branch_controller`` decides how many branches each round actually rolls.
     """
     K = schedule.K
     theta = _clamp_theta(theta, K)
     ev_shape = y0.shape
     ctrl0, theta_live0 = controller.init(theta)
+    bctrl0, b_live0 = branch_controller.init(num_branches)
 
     k_u, k_xi = jax.random.split(key)
     if noise_mode == "buffer":
@@ -173,6 +206,9 @@ def init_chain_state(
         k_xi=k_xi,
         u_buf=u_buf,
         xi_buf=xi_buf,
+        b_live=b_live0,
+        bctrl=bctrl0,
+        draft_points=zero,
     )
 
 
@@ -215,6 +251,14 @@ class RoundPlan:
     A_w: jax.Array  # (theta,)
     B_w: jax.Array  # (theta,)
     sig_w: jax.Array  # (theta,)
+    # -- branched speculation: (B, theta, ...) stacks over ALL draft branches.
+    # Row 0 is bit-identical to the canonical leaves above; rows >= 1 come
+    # from per-branch key folds.  None when the plan was built single-draft.
+    y_prev_b: Optional[jax.Array] = None  # (B, theta, *event)
+    y_props_b: Optional[jax.Array] = None  # (B, theta, *event)
+    m_hats_b: Optional[jax.Array] = None  # (B, theta, *event)
+    u_w_b: Optional[jax.Array] = None  # (B, theta)
+    xi_w_b: Optional[jax.Array] = None  # (B, theta, *event)
 
 
 def _window(arr, start, length):
@@ -229,10 +273,19 @@ def plan_round(
     eager_head: bool = False,
     noise_mode: str = "buffer",
     keep_trajectory: bool = True,
+    num_branches: int = 1,
 ) -> RoundPlan:
     """Phase 1 of a speculation round (Alg 1 lines 6-9): the sequential
     proposal call (possibly served from the eager cache) plus the theta-step
-    elementwise proposal rollout.  No parallel model call happens here."""
+    elementwise proposal rollout.  No parallel model call happens here.
+
+    With ``num_branches`` B > 1 the rollout runs B independent draft
+    branches from the same proposal output v_a: branch 0 consumes the
+    canonical noise stream (bit-identical to the single-draft plan), branches
+    b >= 1 draw (u, xi) from per-branch folds of the chain keys.  The
+    branched stacks land in the ``*_b`` plan fields; the canonical 2-D
+    leaves always hold branch 0, so every single-draft consumer is
+    unchanged."""
     K = schedule.K
     theta = _clamp_theta(theta, K)
     sched = schedule.pad(theta + 1)
@@ -281,6 +334,43 @@ def plan_round(
     _, (m_hats, y_props) = jax.lax.scan(roll, y_a, (A_w, B_w, sig_w, xi_w))
     y_prev = jnp.concatenate([y_a[None], y_props[:-1]], axis=0)  # (theta, ev)
 
+    branched = {}
+    if num_branches > 1:
+        # branches >= 1: per-branch counter-style streams (both noise modes)
+        idx = a + jnp.arange(theta)
+
+        def branch_noise(b):
+            kb_u = jax.random.fold_in(st.k_u, _BRANCH_SALT + b)
+            kb_xi = jax.random.fold_in(st.k_xi, _BRANCH_SALT + b)
+            u_b = jax.vmap(
+                lambda i: jax.random.uniform(jax.random.fold_in(kb_u, i), ())
+            )(idx)
+            xi_b = jax.vmap(
+                lambda i: jax.random.normal(
+                    jax.random.fold_in(kb_xi, i), ev_shape, dtype)
+            )(idx)
+            return u_b, xi_b
+
+        u_r, xi_r = jax.vmap(branch_noise)(jnp.arange(1, num_branches))
+
+        def roll_branch(xi_b):
+            _, (mh, yp) = jax.lax.scan(roll, y_a, (A_w, B_w, sig_w, xi_b))
+            return mh, yp
+
+        mh_r, yp_r = jax.vmap(roll_branch)(xi_r)  # (B-1, theta, *event)
+        y_props_b = jnp.concatenate([y_props[None], yp_r], axis=0)
+        y_prev_b = jnp.concatenate(
+            [jnp.broadcast_to(
+                y_a, (num_branches, 1) + ev_shape), y_props_b[:, :-1]],
+            axis=1)
+        branched = dict(
+            y_prev_b=y_prev_b,
+            y_props_b=y_props_b,
+            m_hats_b=jnp.concatenate([m_hats[None], mh_r], axis=0),
+            u_w_b=jnp.concatenate([u_w[None], u_r], axis=0),
+            xi_w_b=jnp.concatenate([xi_w[None], xi_r], axis=0),
+        )
+
     return RoundPlan(
         a=a,
         theta_live=theta_live,
@@ -296,6 +386,7 @@ def plan_round(
         A_w=A_w,
         B_w=B_w,
         sig_w=sig_w,
+        **branched,
     )
 
 
@@ -311,6 +402,11 @@ def commit_round(
     eager_head: bool = False,
     keep_trajectory: bool = True,
     controller: ThetaController = _STATIC,
+    *,
+    b_r: Optional[jax.Array] = None,
+    gain: Optional[jax.Array] = None,
+    num_branches: int = 1,
+    branch_controller: BranchController = _STATIC_B,
 ) -> ASDChainState:
     """Phase 3 of a speculation round (Alg 1 lines 12-13): windowed commit of
     the accepted prefix + the reflected first rejection, counter updates, and
@@ -321,6 +417,11 @@ def commit_round(
     effectively ran: ``plan.theta_live`` on the dense path, the slot's budget
     grant on the packed path (a pre-round-measurable quantity either way, so
     the committed chain's law is unchanged).  Identity on finished chains.
+
+    Branched rounds pass the SELECTED branch's ``z``/``acc``/``g_head`` plus
+    ``b_r`` (branches the round effectively ran — the cost multiplier for
+    model_evals/draft_points) and ``gain`` (the winning branch's extra
+    accepted slots over branch 0 — the BranchController observable).
     """
     K = schedule.K
     theta = _clamp_theta(theta, K)
@@ -360,6 +461,19 @@ def commit_round(
     ctrl_new, theta_next = controller.update(
         st.ctrl, theta_r, lead, n_valid, rejected, theta
     )
+    # b_eff = 1 on every single-draft path reproduces the original counter
+    # arithmetic bit for bit; branched rounds scale verification cost by the
+    # branch count they effectively ran
+    b_eff = jnp.asarray(1, jnp.int32) if b_r is None else b_r
+    if num_branches > 1:
+        bctrl_new, b_next = branch_controller.update(
+            st.bctrl, b_eff,
+            jnp.asarray(0, jnp.int32) if gain is None else gain,
+            lead, rejected, num_branches,
+        )
+        b_next = jnp.clip(b_next, 1, num_branches)
+    else:
+        bctrl_new, b_next = st.bctrl, st.b_live
     new = ASDChainState(
         y=y_new,
         a=a + advance,
@@ -369,8 +483,8 @@ def commit_round(
         head_calls=st.head_calls + plan.new_head,
         model_evals=st.model_evals
         + plan.new_head
-        + n_valid
-        + (1 if eager_head else 0),
+        + b_eff * n_valid
+        + (b_eff if eager_head else 0),
         accepts=st.accepts + lead,
         proposals=st.proposals + n_valid,
         theta_live=jnp.clip(theta_next, 1, theta),
@@ -379,6 +493,9 @@ def commit_round(
         k_xi=st.k_xi,
         u_buf=st.u_buf,
         xi_buf=st.xi_buf,
+        b_live=b_next,
+        bctrl=bctrl_new,
+        draft_points=st.draft_points + b_eff * n_valid,
     )
     return _where_tree(a < K, new, st)
 
@@ -393,9 +510,21 @@ def asd_round(
     keep_trajectory: bool = True,
     grs_impl: str = "core",
     controller: ThetaController = _STATIC,
+    num_branches: int = 1,
+    branch_controller: BranchController = _STATIC_B,
 ) -> ASDChainState:
     """One speculation round (Alg 1 lines 5-13): propose, roll theta steps,
     verify in ONE batched model call, commit the accepted prefix.
+
+    ``num_branches`` B > 1 rolls B exchangeable draft branches from the same
+    proposal output, scores all B x theta points in the one batched call, and
+    commits the branch with the LONGEST accepted prefix (deterministic
+    lowest-index tie-break).  Each branch's committed window is an exact
+    draw of the next steps of the target chain (Thm 12 applies per branch,
+    and the branch count is F_a-measurable), and branch increments are
+    exchangeable — so selection only changes WHICH exact continuation gets
+    committed.  ``num_branches == 1`` compiles the original single-draft
+    body: bit-identical to today, by construction.
 
     ``theta`` is the static cap theta_max.  The round always rolls and
     dispatches ``theta``-shaped buffers — so the compiled program is shared
@@ -420,9 +549,21 @@ def asd_round(
     ev_ndim = st.v_cache.ndim
 
     plan = plan_round(
-        model_fn, schedule, st, theta, eager_head, noise_mode, keep_trajectory
+        model_fn, schedule, st, theta, eager_head, noise_mode,
+        keep_trajectory, num_branches,
     )
     theta_live = plan.theta_live
+
+    if num_branches > 1:
+        z, acc, g_head, b_r, gain = _branched_verify_select(
+            model_fn, st, plan, theta, num_branches, eager_head, grs_impl)
+        return commit_round(
+            schedule, st, plan, z, acc, theta_live, g_head, theta,
+            eager_head, keep_trajectory, controller,
+            b_r=b_r, gain=gain, num_branches=num_branches,
+            branch_controller=branch_controller,
+        )
+
     t_w = plan.t_w1[:theta]
     y_prev = plan.y_prev
 
@@ -460,6 +601,82 @@ def asd_round(
     )
 
 
+def _branched_verify_select(
+    model_fn: ModelFn,
+    st: ASDChainState,
+    plan: RoundPlan,
+    theta: int,
+    num_branches: int,
+    eager_head: bool,
+    grs_impl: str,
+):
+    """Phase 2 of a BRANCHED round: one (B*theta)-point verification call,
+    per-branch GRS, and longest-accepted-prefix selection.
+
+    Like the dense single-draft round, shapes are static at the cap — all B
+    branches' points ride in the one batched call and only branches
+    ``< st.b_live`` compete (dead lanes are masked out of the argmax), so the
+    compiled program is shared across every live branch count.
+
+    Returns ``(z, acc, g_head, b_r, gain)`` for ``commit_round``: the
+    selected branch's verifier outputs, its eager-head evaluation, the
+    effective branch count, and the winning branch's accepted-slot gain over
+    branch 0 (the BranchController observable).
+    """
+    B = num_branches
+    ev_shape = st.v_cache.shape
+    ev_ndim = st.v_cache.ndim
+    theta_live = plan.theta_live
+    b_live = jnp.clip(st.b_live, 1, B)
+    t_w = plan.t_w1[:theta]
+
+    y_prev_f = plan.y_prev_b.reshape((B * theta,) + ev_shape)
+    ts_f = jnp.tile(t_w, B)
+    if eager_head:
+        # one head point PER BRANCH at the end of the live window: whichever
+        # branch wins a full accept, its head evaluation is the next round's
+        # proposal call
+        heads = jax.vmap(
+            lambda yp: jax.lax.dynamic_index_in_dim(
+                yp, theta_live - 1, axis=0, keepdims=False)
+        )(plan.y_props_b)  # (B, *event)
+        pts = jnp.concatenate([y_prev_f, heads], axis=0)
+        ts = jnp.concatenate(
+            [ts_f, jnp.broadcast_to(plan.t_w1[theta_live], (B,))], axis=0)
+        g_all = model_fn(ts, pts)
+        g_par = g_all[: B * theta].reshape((B, theta) + ev_shape)
+        g_heads = g_all[B * theta:]
+    else:
+        g_par = model_fn(ts_f, y_prev_f).reshape((B, theta) + ev_shape)
+        g_heads = None
+
+    m_tgt = (
+        bcast_right(plan.A_w, ev_ndim + 1) * plan.y_prev_b
+        + bcast_right(plan.B_w, ev_ndim + 1) * g_par
+    )
+    sig_bt = jnp.broadcast_to(plan.sig_w, (B, theta))
+    if grs_impl == "kernel":
+        from repro.kernels.grs.ops import grs as grs_k
+
+        z_b, acc_b = grs_k(plan.u_w_b, plan.xi_w_b, plan.m_hats_b, m_tgt,
+                           sig_bt, event_ndim=ev_ndim)
+    else:
+        z_b, acc_b = grs(plan.u_w_b, plan.xi_w_b, plan.m_hats_b, m_tgt,
+                         sig_bt, event_ndim=ev_ndim)
+
+    slot = jnp.arange(theta)
+    acc_m = acc_b & (slot[None, :] < plan.n_valid)  # (B, theta)
+    lead_b = jax.vmap(leading_true_count)(acc_m)  # (B,)
+    live = jnp.arange(B) < b_live
+    lead_m = jnp.where(live, lead_b, -1)
+    best = jnp.argmax(lead_m)  # argmax takes the FIRST max: lowest index wins
+    z = z_b[best]
+    acc = acc_m[best]
+    g_head = g_heads[best] if eager_head else None
+    gain = lead_m[best] - lead_b[0]
+    return z, acc, g_head, b_live, gain
+
+
 def _where_tree(pred, new, old):
     """Leaf-wise select; keeps finished chains frozen under vmap."""
     return jax.tree_util.tree_map(
@@ -478,6 +695,8 @@ def asd_superstep(
     keep_trajectory: bool = True,
     grs_impl: str = "core",
     controller: ThetaController = _STATIC,
+    num_branches: int = 1,
+    branch_controller: BranchController = _STATIC_B,
 ) -> ASDChainState:
     """``rounds`` speculation rounds in ONE device dispatch (a ``lax.scan``).
 
@@ -498,7 +717,8 @@ def asd_superstep(
     def body(s, _):
         return asd_round(
             model_fn, schedule, s, theta, eager_head, noise_mode,
-            keep_trajectory, grs_impl, controller,
+            keep_trajectory, grs_impl, controller, num_branches,
+            branch_controller,
         ), None
 
     st, _ = jax.lax.scan(body, st, None, length=int(rounds))
@@ -516,6 +736,8 @@ def asd_sample(
     keep_trajectory: bool = True,
     grs_impl: str = "core",
     controller: ThetaController = _STATIC,
+    num_branches: int = 1,
+    branch_controller: BranchController = _STATIC_B,
 ) -> ASDResult:
     """Run ASD for one chain.  ``theta >= K`` gives ASD-infinity.
 
@@ -539,7 +761,8 @@ def asd_sample(
     theta = _clamp_theta(theta, K)
 
     st0 = init_chain_state(
-        schedule, y0, key, theta, noise_mode, keep_trajectory, controller
+        schedule, y0, key, theta, noise_mode, keep_trajectory, controller,
+        num_branches, branch_controller,
     )
 
     def cond(st: ASDChainState):
@@ -548,7 +771,8 @@ def asd_sample(
     def body(st: ASDChainState):
         return asd_round(
             model_fn, schedule, st, theta, eager_head, noise_mode,
-            keep_trajectory, grs_impl, controller,
+            keep_trajectory, grs_impl, controller, num_branches,
+            branch_controller,
         )
 
     st = jax.lax.while_loop(cond, body, st0)
@@ -564,6 +788,7 @@ def asd_sample(
         model_evals=st.model_evals,
         accepts=st.accepts,
         proposals=st.proposals,
+        draft_points=st.draft_points,
     )
 
 
@@ -581,6 +806,8 @@ def asd_sample_batched(
     noise_mode: str = "buffer",
     keep_trajectory: bool = True,
     controller: ThetaController = _STATIC,
+    num_branches: int = 1,
+    branch_controller: BranchController = _STATIC_B,
 ) -> ASDResult:
     """Independent ASD chains vmapped over a batch.
 
@@ -594,7 +821,8 @@ def asd_sample_batched(
     keys = jax.random.split(key, y0.shape[0])
     fn = lambda y, k: asd_sample(
         model_fn, schedule, y, k, theta, eager_head, noise_mode,
-        keep_trajectory, controller=controller,
+        keep_trajectory, controller=controller, num_branches=num_branches,
+        branch_controller=branch_controller,
     )
     return jax.vmap(fn)(y0, keys)
 

@@ -180,3 +180,116 @@ def make_controller(name: str, **kwargs) -> ThetaController:
         raise ValueError(
             f"unknown theta controller {name!r}; have {sorted(CONTROLLERS)}"
         ) from None
+
+
+# -- branch controllers: per-chain dynamic draft-branch count -----------------
+#
+# Branched speculation (see repro.core.asd) rolls B exchangeable draft
+# branches per chain and keeps the longest accepted prefix.  Extra branches
+# only pay when the single-draft window rejects early — at high accept rates
+# every branch past the first is wasted verification compute.  A
+# ``BranchController`` closes that loop exactly like ``ThetaController``
+# closes the window loop: frozen (hashable) config object, dynamic state a
+# small f32 vector inside ``ASDChainState`` (``st.bctrl`` next to
+# ``st.b_live``), updates pure jnp inside the jitted round.  ``b_live`` for
+# round r is F_a-measurable (a function of rounds < r only), so like the
+# window it never changes the committed chain's law — only how many
+# exchangeable candidates get verified.
+
+
+@dataclasses.dataclass(frozen=True)
+class BranchController:
+    """Interface: pure init/update over a pytree ``bctrl`` state."""
+
+    name = "base"
+
+    def init(self, b_max: int):
+        """-> (bctrl: f32 state vector, b_live: i32 scalar) at round 0."""
+        raise NotImplementedError
+
+    def update(self, bctrl, b_live, gain, lead, rejected, b_max: int):
+        """Observe one branched round, emit the next round's branch count.
+
+        Args:
+          bctrl: this controller's state vector (``ASDChainState.bctrl``).
+          b_live: () i32 — branches the round actually ran (the grant).
+          gain: () i32 — extra accepted slots the winning branch bought over
+            branch 0 (``lead[best] - lead[0]``; 0 whenever branch 0 won).
+          lead: () i32 — the selected branch's accepted-prefix length.
+          rejected: () bool — whether the selected branch hit a rejection.
+          b_max: static branch cap; buffers are shaped by it.
+
+        Returns:
+          (bctrl', b_live'): next state and next count, 1 <= b_live' <= b_max.
+        """
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticBranches(BranchController):
+    """A constant branch count.  ``value=None`` (default) means the full
+    ``b_max`` cap; ``b_max == 1`` is the single-draft sampler bit for bit."""
+
+    name = "static"
+    value: typing.Optional[int] = None
+
+    def _b(self, b_max: int):
+        v = b_max if self.value is None else min(self.value, b_max)
+        return jnp.asarray(max(v, 1), jnp.int32)
+
+    def init(self, b_max: int):
+        return jnp.zeros((0,), jnp.float32), self._b(b_max)
+
+    def update(self, bctrl, b_live, gain, lead, rejected, b_max: int):
+        return bctrl, self._b(b_max)
+
+
+@dataclasses.dataclass(frozen=True)
+class GainBranches(BranchController):
+    """Branch count tracked to the EWMA of the realized branch gain.
+
+    State is one f32: a discounted average of ``gain / (b_live - 1)`` — the
+    accepted slots each EXTRA branch bought this round (0 when b_live == 1,
+    where no extra branch ran and the estimate must coast).  When a marginal
+    branch pays more than ``grow`` accepted slots per round the count steps
+    up; below ``shrink`` it steps down — so chains in high-accept regimes
+    collapse to single-draft and stop burning verification budget, while
+    early-rejecting chains widen toward the cap.
+    """
+
+    name = "gain"
+    decay: float = 0.9
+    grow: float = 0.35
+    shrink: float = 0.1
+
+    def init(self, b_max: int):
+        # optimistic start (like AcceptRateTheta): open at the cap with a
+        # prior gain estimate above the grow threshold so fresh chains probe
+        return (jnp.full((1,), 2.0 * self.grow, jnp.float32),
+                jnp.asarray(max(b_max, 1), jnp.int32))
+
+    def update(self, bctrl, b_live, gain, lead, rejected, b_max: int):
+        extra = jnp.maximum(b_live - 1, 0).astype(jnp.float32)
+        per_branch = gain.astype(jnp.float32) / jnp.maximum(extra, 1.0)
+        # only rounds that ran an extra branch carry information
+        g = jnp.where(extra > 0,
+                      self.decay * bctrl[0] + (1.0 - self.decay) * per_branch,
+                      bctrl[0])
+        b_next = jnp.where(
+            g >= self.grow, b_live + 1,
+            jnp.where(g < self.shrink, b_live - 1, b_live))
+        return bctrl.at[0].set(g), jnp.clip(b_next, 1, max(b_max, 1))
+
+
+BRANCH_CONTROLLERS = {c.name: c for c in (StaticBranches, GainBranches)}
+
+
+def make_branch_controller(name: str, **kwargs) -> BranchController:
+    """CLI-facing factory: ``make_branch_controller("gain", grow=0.5)``."""
+    try:
+        return BRANCH_CONTROLLERS[name](**kwargs)
+    except KeyError:
+        raise ValueError(
+            f"unknown branch controller {name!r}; "
+            f"have {sorted(BRANCH_CONTROLLERS)}"
+        ) from None

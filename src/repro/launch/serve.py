@@ -21,6 +21,13 @@ data-parallel over the mesh.
 Speculation control and scheduling are pluggable:
 
   --theta-controller static|aimd|accept-rate   per-chain live window
+  --num-branches 2                             branched speculation: roll B
+                                               exchangeable draft branches
+                                               per round and commit the one
+                                               with the longest accepted
+                                               prefix (1 = bit-identical to
+                                               single-draft)
+  --branch-controller static|gain              per-chain live branch count
   --policy fcfs|priority|serr|deadline|budget  slot admission policy
   --grs-impl core|kernel                       verifier backend (the Pallas
                                                GRS kernel runs interpret-mode
@@ -107,7 +114,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import get_denoiser_config
 from repro.core.asd import asd_sample_batched
-from repro.core.controller import CONTROLLERS, make_controller
+from repro.core.controller import (
+    BRANCH_CONTROLLERS,
+    CONTROLLERS,
+    make_branch_controller,
+    make_controller,
+)
 from repro.core.schedules import ddpm as ddpm_schedule
 from repro.distributed.sharding import (
     batch_pspec,
@@ -231,8 +243,12 @@ def run_continuous(args):
         if args.round_budget == "auto":
             budget = "auto"
         else:
-            budget = int(args.round_budget) or slots_local * args.theta
-        allocator = make_allocator(args.allocator, theta_max=args.theta)
+            budget = (int(args.round_budget)
+                      or slots_local * args.theta * args.num_branches)
+        # a slot's max demand is theta * branches points: the waterfilling
+        # level scan must be able to reach it
+        allocator = make_allocator(
+            args.allocator, theta_max=args.theta * args.num_branches)
     tracer = (TraceRecorder(capacity=args.trace_capacity)
               if args.trace_out else None)
     common = dict(
@@ -244,6 +260,8 @@ def run_continuous(args):
         keep_trajectory=False,
         grs_impl=args.grs_impl,
         controller=make_controller(args.theta_controller),
+        num_branches=args.num_branches,
+        branch_controller=make_branch_controller(args.branch_controller),
         policy=make_policy(args.policy),
         execution=args.execution,
         round_budget=budget,
@@ -326,6 +344,10 @@ def run_continuous(args):
           f"{s.rounds_total} fused rounds in {s.supersteps} supersteps, "
           f"accept rate {s.accept_rate():.2f}, "
           f"mean live window {s.mean_window():.1f}/{args.theta}, "
+          + (f"branch depth {s.branch_accept_depth():.2f} "
+             f"(waste {s.wasted_draft_frac():.2f}, B={args.num_branches}), "
+             if args.num_branches > 1 else "")
+          +
           f"mean queue latency {s.mean_queue_latency()*1e3:.0f}ms, "
           f"SLO attainment {s.slo_attainment():.2f}, "
           f"{s.throughput():.2f} samples/s")
@@ -388,6 +410,15 @@ def main():
     ap.add_argument("--theta-controller", default="static",
                     choices=sorted(CONTROLLERS),
                     help="per-chain speculation-window controller")
+    ap.add_argument("--num-branches", type=int, default=1,
+                    help="branched speculation cap B: draft branches rolled "
+                         "per round per chain, committing the branch with "
+                         "the longest accepted prefix (1 = single-draft, "
+                         "bit-identical to the unbranched engine)")
+    ap.add_argument("--branch-controller", default="static",
+                    choices=sorted(BRANCH_CONTROLLERS),
+                    help="per-chain live branch-count controller (b_live "
+                         "<= --num-branches)")
     ap.add_argument("--policy", default="fcfs", choices=sorted(POLICIES),
                     help="continuous-engine admission policy")
     ap.add_argument("--grs-impl", default="core", choices=("core", "kernel"),

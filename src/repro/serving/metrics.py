@@ -33,12 +33,31 @@ class RequestMetrics:
     model_evals: int  # total model evaluations (all speculation slots)
     accepts: int
     proposals: int
+    draft_points: int = 0  # verification points drafted across ALL branches
     deadline: Optional[float] = None  # absolute SLO deadline, if any
     slo_met: Optional[bool] = None  # retired before the deadline? (None: no SLO)
 
     @property
     def accept_rate(self) -> float:
         return self.accepts / max(self.proposals, 1)
+
+    @property
+    def branch_accept_depth(self) -> float:
+        """Mean accepted prefix length per round — the branched-speculation
+        win shows up here: extra draft branches deepen the accepted prefix
+        without changing the round count semantics."""
+        return self.accepts / max(self.rounds, 1)
+
+    @property
+    def wasted_draft_frac(self) -> float:
+        """Fraction of drafted verification points that never committed.
+        With one branch ``draft_points == proposals`` and this equals
+        ``1 - accept_rate``; extra branches draft more points per round, so
+        the waste rises with B while the accept depth (hopefully) rises too
+        — the two lanes together price the branch trade-off."""
+        if self.draft_points <= 0:
+            return 0.0
+        return 1.0 - self.accepts / self.draft_points
 
     @property
     def parallel_depth(self) -> int:
@@ -90,6 +109,7 @@ class EngineStats:
     model_evals_total: int = 0
     accepts_total: int = 0
     proposals_total: int = 0
+    draft_points_total: int = 0  # branched speculation: points drafted (all branches)
     queue_latency_total: float = 0.0
     wall_time: float = 0.0
     dropped: int = 0  # rejected at admission (SLO admission control)
@@ -114,6 +134,7 @@ class EngineStats:
         "dispatch_s", "fused_dispatch_s", "device_s", "host_sync_s",
         "collective_s", "head_calls_total",
         "model_evals_total", "accepts_total", "proposals_total",
+        "draft_points_total",
         "queue_latency_total", "dropped", "slo_tracked", "slo_met_count",
         "queue_depth",
     )
@@ -159,6 +180,7 @@ class EngineStats:
         self.model_evals_total += rm.model_evals
         self.accepts_total += rm.accepts
         self.proposals_total += rm.proposals
+        self.draft_points_total += rm.draft_points
         self.queue_latency_total += rm.queue_latency
         if rm.slo_met is not None:
             self.slo_tracked += 1
@@ -194,6 +216,19 @@ class EngineStats:
         """Verified slots per fused round per chain (mean live theta)."""
         rounds = sum(m.rounds for m in self.per_request)
         return self.proposals_total / max(rounds, 1)
+
+    def branch_accept_depth(self) -> float:
+        """Mean accepted prefix per round over retired chains — the lane the
+        branched-speculation benchmark keys its accept-depth ratios on."""
+        rounds = sum(m.rounds for m in self.per_request)
+        return self.accepts_total / max(rounds, 1)
+
+    def wasted_draft_frac(self) -> float:
+        """Drafted verification points that never committed, as a fraction
+        of all drafted points (equals ``1 - accept_rate`` at one branch)."""
+        if self.draft_points_total <= 0:
+            return 0.0
+        return 1.0 - self.accepts_total / self.draft_points_total
 
     def latency_percentiles(self, qs=(50, 95, 99)) -> dict:
         """Nearest-rank percentiles of queue and completion (submit ->
@@ -262,6 +297,10 @@ class EngineStats:
             "device_frac": self.device_s / denom,
             "host_sync_frac": self.host_sync_s / denom,
             "collective_frac": self.collective_s / denom,
+            # branched speculation lanes (not time components — ride along
+            # here so the bench's timing dump carries the branch economics)
+            "branch_accept_depth": self.branch_accept_depth(),
+            "wasted_draft_frac": self.wasted_draft_frac(),
         }
 
     def summary(self) -> dict:
@@ -275,6 +314,8 @@ class EngineStats:
             "model_evals_total": self.model_evals_total,
             "accept_rate": self.accept_rate(),
             "mean_window": self.mean_window(),
+            "branch_accept_depth": self.branch_accept_depth(),
+            "wasted_draft_frac": self.wasted_draft_frac(),
             "mean_parallel_depth": self.mean_parallel_depth(),
             "mean_queue_latency_s": self.mean_queue_latency(),
             "slo_attainment": self.slo_attainment(),

@@ -30,7 +30,9 @@ from repro.serving.packing.allocator import (
     make_allocator,
 )
 from repro.serving.packing.plan import (
+    BranchedPackedRoundPlan,
     PackedRoundPlan,
+    build_branched_pack_maps,
     build_pack_maps,
     build_sharded_pack_maps,
 )
@@ -48,7 +50,9 @@ __all__ = [
     "WaterfillingAllocator",
     "make_allocator",
     "PackedRoundPlan",
+    "BranchedPackedRoundPlan",
     "build_pack_maps",
+    "build_branched_pack_maps",
     "build_sharded_pack_maps",
     "packed_round",
     "packed_superstep",

@@ -67,6 +67,70 @@ def build_pack_maps(grants: jax.Array, budget: int) -> PackedRoundPlan:
     )
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BranchedPackedRoundPlan:
+    """Index maps for one BRANCHED packed round: each slot packs
+    ``b_r[s] * pts1[s]`` points laid out branch-major (branch 0's window
+    first, then branch 1's, ...), so the flat source table is the
+    (S * B * theta)-row branched window stack."""
+
+    pts1: jax.Array  # (S,) i32 points packed PER BRANCH (the effective window)
+    b_r: jax.Array  # (S,) i32 branches packed per slot
+    offsets: jax.Array  # (S,) i32 exclusive prefix sums of pts1 * b_r
+    total: jax.Array  # () i32 live packed points (<= budget)
+    slot_id: jax.Array  # (Bgt,) i32 packed position -> slot
+    branch_id: jax.Array  # (Bgt,) i32 packed position -> draft branch
+    step_id: jax.Array  # (Bgt,) i32 packed position -> in-window step
+    valid: jax.Array  # (Bgt,) bool packed position holds a live point
+
+    def row_id(self, num_branches: int, theta: int) -> jax.Array:
+        """Row into the flattened (S * B * theta) branched window table;
+        padding positions map one past the table (the scatter drop row)."""
+        rows = (self.slot_id * num_branches + self.branch_id) * theta \
+            + self.step_id
+        n_slots = self.pts1.shape[0]
+        return jnp.where(self.valid, rows, n_slots * num_branches * theta)
+
+
+def build_branched_pack_maps(
+    pts1: jax.Array, b_r: jax.Array, budget: int
+) -> BranchedPackedRoundPlan:
+    """pts1/b_r: (S,) i32 per-branch points and branch counts, with
+    ``sum(pts1 * b_r) <= budget`` (static) -> ``BranchedPackedRoundPlan``.
+
+    Same O(budget log S) searchsorted construction as ``build_pack_maps``;
+    the in-segment position q splits branch-major as ``branch = q // pts1``,
+    ``step = q % pts1``.  With ``b_r == 1`` everywhere the maps coincide
+    with ``build_pack_maps(pts1, budget)`` plus a zero branch_id lane.
+    """
+    pts1 = pts1.astype(jnp.int32)
+    b_r = b_r.astype(jnp.int32)
+    points = pts1 * b_r
+    csum = jnp.cumsum(points)
+    total = csum[-1]
+    offsets = csum - points
+    pos = jnp.arange(budget, dtype=jnp.int32)
+    slot_id = jnp.searchsorted(csum, pos, side="right").astype(jnp.int32)
+    slot_id = jnp.minimum(slot_id, pts1.shape[0] - 1)
+    valid = pos < total
+    q = pos - offsets[slot_id]
+    width = jnp.maximum(pts1[slot_id], 1)
+    branch_id = jnp.where(valid, q // width, 0)
+    step_id = jnp.where(valid, q % width, 0)
+    slot_id = jnp.where(valid, slot_id, 0)
+    return BranchedPackedRoundPlan(
+        pts1=pts1,
+        b_r=b_r,
+        offsets=offsets,
+        total=total,
+        slot_id=slot_id,
+        branch_id=branch_id,
+        step_id=step_id,
+        valid=valid,
+    )
+
+
 def build_sharded_pack_maps(grants: jax.Array, budget: int) -> PackedRoundPlan:
     """Shard axis: grants (num_shards, S_local) -> a ``PackedRoundPlan``
     whose every leaf carries a leading shard axis.

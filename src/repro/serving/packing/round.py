@@ -58,13 +58,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.asd import commit_round, plan_round
-from repro.core.controller import StaticTheta, ThetaController
+from repro.core.controller import (
+    BranchController, StaticBranches, StaticTheta, ThetaController)
 from repro.core.grs import bcast_right, grs
 from repro.core.schedules import Schedule
+from repro.core.verifier import leading_true_count
 from repro.kernels.pack import gather_rows
-from repro.serving.packing.plan import build_pack_maps
+from repro.serving.packing.plan import (
+    build_branched_pack_maps, build_pack_maps)
 
 _STATIC = StaticTheta()
+_STATIC_B = StaticBranches()
 
 
 def _gather_scalar(table: jax.Array, slot_id, step_id) -> jax.Array:
@@ -91,6 +95,8 @@ def packed_round(
     pack_impl: str = "ref",
     round_impl: str = "packed",
     budget_data=None,
+    num_branches: int = 1,
+    branch_controller: BranchController = _STATIC_B,
 ):
     """One packed verification round over all slots; returns the new states.
 
@@ -99,7 +105,20 @@ def packed_round(
     ``round_impl="fused"`` routes the gather and verify/commit through the
     fused kernel pair (``pack_impl`` picks its ref/kernel lane; ``grs_impl``
     only applies to the unfused body — fused runs GRS inside the kernel).
+    ``num_branches`` B > 1 compiles the branched body (B draft branches per
+    slot, branch-major pack maps, longest-accepted-prefix selection);
+    ``num_branches == 1`` compiles this original body unchanged.
     """
+    if num_branches > 1:
+        return _branched_packed_round(
+            make_fn, params, schedule, states, conds, weights,
+            theta=theta, budget=budget, allocator=allocator,
+            eager_head=eager_head, noise_mode=noise_mode,
+            keep_trajectory=keep_trajectory, grs_impl=grs_impl,
+            controller=controller, pack_impl=pack_impl,
+            round_impl=round_impl, budget_data=budget_data,
+            num_branches=num_branches, branch_controller=branch_controller,
+        )
     K = schedule.K
     S = states.a.shape[0]
     ev_ndim = states.v_cache.ndim - 1
@@ -242,6 +261,205 @@ def packed_round(
     )(states, plans, z_seg, acc_seg, theta_r)
 
 
+def _branched_packed_round(
+    make_fn: Callable,
+    params,
+    schedule: Schedule,
+    states,
+    conds: Optional[jax.Array],
+    weights: jax.Array,
+    *,
+    theta: int,
+    budget: int,
+    allocator,
+    eager_head: bool,
+    noise_mode: str,
+    keep_trajectory: bool,
+    grs_impl: str,
+    controller: ThetaController,
+    pack_impl: str,
+    round_impl: str,
+    budget_data,
+    num_branches: int,
+    branch_controller: BranchController,
+):
+    """The BRANCHED packed round: same plan -> pack -> verify -> commit
+    pipeline with a branch axis through every stage.
+
+    Demand is ``b_live * min(theta_live, K - a)`` per slot; a grant sheds
+    BRANCHES before window width (a grant below one full window runs a
+    single trimmed branch — exactly the unbranched trimmed round on the
+    canonical stream; past one window, whole extra branches ride along and
+    the longest accepted prefix wins at commit).  Pack maps are branch-major
+    (``build_branched_pack_maps``) over the (S * B * theta)-row branched
+    window stack; the same flat-table kernels (``kernels/pack`` gather /
+    scatter, ``kernels/superstep`` fused pair) move the rows — only the
+    table size and index arithmetic change.
+    """
+    K = schedule.K
+    S = states.a.shape[0]
+    NB = num_branches
+    ev_ndim = states.v_cache.ndim - 1
+    ev_shape = states.v_cache.shape[1:]
+
+    # --- 1. plan: proposal + B-branch rollout per slot (vmapped) ------------
+    def plan_one(st, cond):
+        return plan_round(
+            make_fn(params, cond), schedule, st, theta, eager_head,
+            noise_mode, keep_trajectory, NB,
+        )
+
+    if conds is None:
+        plans = jax.vmap(lambda st: plan_one(st, None))(states)
+    else:
+        plans = jax.vmap(plan_one)(states, conds)
+
+    # --- 2. pack: branched demand, branch-shedding grant split, gather ------
+    active = states.a < K
+    n1 = plans.n_valid.astype(jnp.int32)  # live points PER BRANCH
+    b_live = jnp.clip(states.b_live, 1, NB)
+    demand = jnp.where(active, b_live * n1, 0).astype(jnp.int32)
+    grants = allocator.allocate(
+        demand, budget if budget_data is None else budget_data, weights)
+    grants = jnp.minimum(grants, demand)
+    covered = grants >= n1
+    # branches granted: whole windows only (a partial extra branch cannot
+    # beat branch 0's full prefix, so its points would be pure waste)
+    b_r = jnp.clip(grants // jnp.maximum(n1, 1), 1, b_live)
+    theta_r = jnp.where(covered, plans.theta_live, grants)
+    pts1 = jnp.where(covered, n1, grants)  # == min(theta_r, K - a)
+    maps = build_branched_pack_maps(pts1, b_r, budget)
+    src_rows = jnp.where(
+        maps.valid,
+        (maps.slot_id * NB + maps.branch_id) * theta + maps.step_id, 0)
+
+    def flatb(x):  # (S, B, theta, *ev) -> (S*B*theta, *ev)
+        return x.reshape((S * NB * theta,) + x.shape[3:])
+
+    def btile(x):  # per-slot (S, theta) scalar window -> (S, B, theta)
+        return jnp.broadcast_to(x[:, None, :], (S, NB, theta))
+
+    t_tbl = btile(plans.t_w1[:, :theta])
+    A_tbl = btile(plans.A_w)
+    B_tbl = btile(plans.B_w)
+    sig_tbl = btile(plans.sig_w)
+
+    if round_impl == "fused":
+        from repro.kernels.superstep import fused_gather
+
+        scal_tbl = jnp.stack(
+            [flatb(t_tbl), flatb(plans.u_w_b), flatb(A_tbl), flatb(B_tbl),
+             flatb(sig_tbl)], axis=-1)
+        y_pt, xi_pt, mh_pt, scal_pt = fused_gather(
+            flatb(plans.y_prev_b), flatb(plans.xi_w_b),
+            flatb(plans.m_hats_b), scal_tbl, src_rows, impl=pack_impl)
+        t_pt, u_pt, A_pt, B_pt, sig_pt = (
+            scal_pt[:, i] for i in range(5))
+    else:
+        y_pt = gather_rows(flatb(plans.y_prev_b), src_rows, impl=pack_impl)
+        xi_pt = gather_rows(flatb(plans.xi_w_b), src_rows, impl=pack_impl)
+        mh_pt = gather_rows(flatb(plans.m_hats_b), src_rows, impl=pack_impl)
+        t_pt = _gather_scalar(plans.t_w1[:, :theta], maps.slot_id,
+                              maps.step_id)
+        u_pt = plans.u_w_b[maps.slot_id, maps.branch_id, maps.step_id]
+        A_pt = _gather_scalar(plans.A_w, maps.slot_id, maps.step_id)
+        B_pt = _gather_scalar(plans.B_w, maps.slot_id, maps.step_id)
+        sig_pt = _gather_scalar(plans.sig_w, maps.slot_id, maps.step_id)
+
+    if eager_head:
+        # one head lane per (slot, branch): whichever branch wins a full
+        # accept, its head evaluation is the next round's proposal call
+        y_head = jax.vmap(
+            lambda yp, tr: jax.vmap(
+                lambda ypb: jax.lax.dynamic_index_in_dim(
+                    ypb, tr - 1, axis=0, keepdims=False))(yp)
+        )(plans.y_props_b, theta_r)  # (S, B, *event)
+        t_head = jax.vmap(lambda tw, tr: tw[tr])(plans.t_w1, theta_r)
+        ts_all = jnp.concatenate([t_pt, jnp.repeat(t_head, NB)], axis=0)
+        ys_all = jnp.concatenate(
+            [y_pt, y_head.reshape((S * NB,) + ev_shape)], axis=0)
+        conds_all = (
+            None if conds is None
+            else jnp.concatenate(
+                [conds[maps.slot_id], jnp.repeat(conds, NB, axis=0)], axis=0)
+        )
+    else:
+        ts_all, ys_all = t_pt, y_pt
+        conds_all = None if conds is None else conds[maps.slot_id]
+
+    # --- 3. verify: ONE budget-shaped model call + ONE GRS pass -------------
+    if conds is None:
+        g_all = make_fn(params, None)(ts_all, ys_all)
+    else:
+        g_all = jax.vmap(
+            lambda t, y, c: make_fn(params, c)(t[None], y[None])[0]
+        )(ts_all, ys_all, conds_all)
+    if eager_head:
+        g_pt = g_all[:budget]
+        g_head = g_all[budget:].reshape((S, NB) + ev_shape)
+    else:
+        g_pt, g_head = g_all, None
+
+    drop_rows = maps.row_id(NB, theta)
+    if round_impl == "fused":
+        from repro.kernels.superstep import fused_verify_commit
+
+        z_tbl, acc_tbl = fused_verify_commit(
+            y_pt, g_pt, xi_pt, mh_pt, A_pt, B_pt, u_pt, sig_pt,
+            drop_rows, S * NB * theta, impl=pack_impl)
+        z_seg = z_tbl.reshape((S, NB, theta) + z_tbl.shape[1:])
+        acc_seg = acc_tbl.reshape(S, NB, theta)
+    else:
+        m_tgt_pt = (
+            bcast_right(A_pt, ev_ndim + 1) * y_pt
+            + bcast_right(B_pt, ev_ndim + 1) * g_pt
+        )
+        if grs_impl == "kernel":
+            from repro.kernels.grs.ops import grs as grs_k
+
+            z_pt, acc_pt = grs_k(u_pt, xi_pt, mh_pt, m_tgt_pt, sig_pt,
+                                 event_ndim=ev_ndim)
+        else:
+            z_pt, acc_pt = grs(u_pt, xi_pt, mh_pt, m_tgt_pt, sig_pt,
+                               event_ndim=ev_ndim)
+
+        from repro.kernels.pack import scatter_rows
+
+        z_seg = scatter_rows(
+            z_pt, drop_rows, S * NB * theta, impl=pack_impl
+        ).reshape((S, NB, theta) + z_pt.shape[1:])
+        acc_seg = (
+            jnp.zeros((S * NB * theta + 1,), bool)
+            .at[drop_rows].set(acc_pt)[: S * NB * theta]
+            .reshape(S, NB, theta)
+        )
+
+    # --- 4. select the longest accepted prefix per slot, then commit --------
+    slot_idx = jnp.arange(theta)
+
+    def commit_one(st, plan, z_b, acc_b, gh_b, tr, br):
+        n_val = jnp.minimum(tr, K - plan.a)
+        acc_m = acc_b & (slot_idx[None, :] < n_val)
+        lead_b = jax.vmap(leading_true_count)(acc_m)
+        lead_m = jnp.where(jnp.arange(NB) < br, lead_b, -1)
+        best = jnp.argmax(lead_m)  # first max: lowest branch index wins ties
+        gh = None if gh_b is None else gh_b[best]
+        return commit_round(
+            schedule, st, plan, z_b[best], acc_m[best], tr, gh, theta,
+            eager_head, keep_trajectory, controller,
+            b_r=br, gain=lead_m[best] - lead_b[0], num_branches=NB,
+            branch_controller=branch_controller,
+        )
+
+    if eager_head:
+        return jax.vmap(commit_one)(states, plans, z_seg, acc_seg, g_head,
+                                    theta_r, b_r)
+    return jax.vmap(
+        lambda st, plan, z, acc, tr, br: commit_one(
+            st, plan, z, acc, None, tr, br)
+    )(states, plans, z_seg, acc_seg, theta_r, b_r)
+
+
 def packed_superstep(
     make_fn: Callable,
     params,
@@ -263,6 +481,8 @@ def packed_superstep(
     round_impl: str = "packed",
     fused_round: bool = False,
     budget_data=None,
+    num_branches: int = 1,
+    branch_controller: BranchController = _STATIC_B,
 ):
     """``rounds`` packed verification rounds in ONE dispatch (a ``lax.scan``).
 
@@ -293,6 +513,7 @@ def packed_superstep(
             keep_trajectory=keep_trajectory, grs_impl=grs_impl,
             controller=controller, pack_impl=pack_impl,
             round_impl=impl, budget_data=budget_data,
+            num_branches=num_branches, branch_controller=branch_controller,
         ), None
 
     states, _ = jax.lax.scan(body, states, None, length=int(rounds))
@@ -323,6 +544,8 @@ def sharded_packed_superstep(
     budget_data=None,  # (num_shards,) i32 per-shard tiers, or None
     axis_name: str = "slots",
     param_specs=None,  # model-parallel: tp_param_pspecs tree for `params`
+    num_branches: int = 1,
+    branch_controller: BranchController = _STATIC_B,
 ):
     """Every shard's packed superstep in ONE dispatch, via ``shard_map``
     over a ``slots``-sharded mesh (``repro.distributed.sharding.slots_mesh``
@@ -378,6 +601,7 @@ def sharded_packed_superstep(
             controller=controller, pack_impl=pack_impl,
             round_impl=impl,
             budget_data=None if b is None else b[0],
+            num_branches=num_branches, branch_controller=branch_controller,
         )
         return jax.tree_util.tree_map(lambda x: x[None], out)
 

@@ -291,9 +291,9 @@ class ShardedASDEngine:
             # and stamp every worker: the fused harvest reuses the ordinary
             # per-worker _harvest, which accounts R * this per boundary
             points = (
-                w0._budget_cap + 2 * w0.num_slots
+                w0._budget_cap + (1 + w0.num_branches) * w0.num_slots
                 if w0.execution == "packed"
-                else w0.num_slots * (w0.theta + 1))
+                else w0.num_slots * (w0.theta * w0.num_branches + 1))
             per_round = measure_collective_seconds(
                 self._mesh,
                 [int(b) * points for b in self._collective_payloads])
@@ -323,6 +323,8 @@ class ShardedASDEngine:
         schedule, theta = w0.schedule, w0.theta
         noise_mode, keep = w0.noise_mode, w0.keep_trajectory
         controller = w0.controller
+        num_branches = w0.num_branches
+        branch_controller = w0.branch_controller
 
         def _admit(states, y0s, keys, flat_idxs):
             # one boundary's admissions for ALL shards: flatten the shard
@@ -330,7 +332,9 @@ class ShardedASDEngine:
             # by out_shardings so the scatter cannot silently replicate
             new = jax.vmap(
                 lambda y0, k: init_chain_state(
-                    schedule, y0, k, theta, noise_mode, keep, controller)
+                    schedule, y0, k, theta, noise_mode, keep, controller,
+                    num_branches=num_branches,
+                    branch_controller=branch_controller)
             )(y0s, keys)
             flat = jax.tree_util.tree_map(
                 lambda x: x.reshape((shards * S_local,) + x.shape[2:]), states)
@@ -647,8 +651,13 @@ class ShardedASDEngine:
         ``ContinuousASDEngine.serve``.
         """
         if key is not None:
-            for i, w in enumerate(self.workers):
-                w._key = key if i == 0 else jax.random.fold_in(key, i)
+            # every worker shares the SAME serve key: unkeyed requests
+            # derive theirs as fold_in(key, rid), a pure function of the
+            # request id — so the sample an unkeyed request gets does not
+            # depend on which shard the router placed it on (rids are
+            # globally unique; EngineStats.merged enforces that)
+            for w in self.workers:
+                w._key = key
         self.dropped_rids = []
         for w in self.workers:
             w.dropped_rids = []

@@ -56,7 +56,12 @@ from repro.core.asd import (
     chain_sample,
     init_chain_state,
 )
-from repro.core.controller import StaticTheta, ThetaController
+from repro.core.controller import (
+    BranchController,
+    StaticBranches,
+    StaticTheta,
+    ThetaController,
+)
 from repro.core.schedules import Schedule
 from repro.core.sequential import init_y0
 from repro.serving.metrics import EngineStats, RequestMetrics
@@ -66,11 +71,12 @@ from repro.serving.scheduler import (
     SlotScheduler,
 )
 
-# sync-packet row layout: the (7, S) int32 array each superstep returns next
-# to the new slot states — retire flags, live windows, and the per-chain
-# speculation counters, harvested with ONE host transfer per boundary
+# sync-packet row layout: the (9, S) int32 array each superstep returns next
+# to the new slot states — retire flags, live windows, live branch counts,
+# and the per-chain speculation counters, harvested with ONE host transfer
+# per boundary
 _SYNC_ROWS = ("a", "theta_live", "rounds", "head_calls", "model_evals",
-              "accepts", "proposals")
+              "accepts", "proposals", "b_live", "draft_points")
 
 # the power-of-two ladder auto rounds_per_sync picks from: O(log) compiled
 # superstep variants instead of one per observed value
@@ -130,6 +136,17 @@ class ShardWorker:
       controller: per-chain speculation-window controller (theta_live <=
         theta); a static config closed over by the jitted round, its state
         rides inside each slot's ``ASDChainState``.  Default: StaticTheta.
+      num_branches: branched-speculation cap B — each round rolls up to B
+        exchangeable draft branches per chain from the SAME proposal output
+        and commits the branch with the longest accepted prefix (branch 0 is
+        the canonical stream, so B=1 is bit-identical to unbranched).  With
+        packed execution the branch axis multiplies each slot's point demand
+        (``b_live * min(theta_live, K - a)``), so the budget ladder, the
+        allocator's level scan, and admission pricing all size by
+        ``theta * num_branches``.
+      branch_controller: per-chain live-branch controller (b_live <= B),
+        adapting the second speculation knob from the observed per-round
+        branch gain.  Default: StaticBranches (always run the full cap).
       policy: host-side admission policy (``repro.serving.scheduler``) for
         THIS shard's queue.  Default: FCFS.
       grs_impl: "core" (pure-jnp verifier) or "kernel" (the Pallas GRS
@@ -203,6 +220,8 @@ class ShardWorker:
         pipelined: bool = False,
         seed: int = 0,
         controller: Optional[ThetaController] = None,
+        num_branches: int = 1,
+        branch_controller: Optional[BranchController] = None,
         policy: Optional[SchedulingPolicy] = None,
         execution: str = "unpacked",
         round_budget=None,
@@ -245,6 +264,10 @@ class ShardWorker:
         self._tracer = tracer
         self.draining = False  # graceful drain: submission gate is closed
         self.controller = controller if controller is not None else StaticTheta()
+        self.num_branches = max(int(num_branches), 1)
+        self.branch_controller = (
+            branch_controller if branch_controller is not None
+            else StaticBranches())
         if execution not in ("unpacked", "packed"):
             raise ValueError(f"unknown execution mode {execution!r}")
         self.execution = execution
@@ -269,8 +292,10 @@ class ShardWorker:
         self.budget_hysteresis = float(budget_hysteresis)
         # the budget tier ladder: powers of two from the min viable budget
         # (>= num_slots: every live chain needs a point to make progress) up
-        # to full coverage (slots * theta).  Fixed budgets stay off-ladder.
-        self._budget_ladder = _pow2_ladder(num_slots, num_slots * self.theta)
+        # to full coverage (slots * theta * branches).  Fixed budgets stay
+        # off-ladder.
+        self._budget_ladder = _pow2_ladder(
+            num_slots, num_slots * self.theta * self.num_branches)
         if round_budget == "auto":
             if execution != "packed":
                 raise ValueError(
@@ -283,7 +308,8 @@ class ShardWorker:
         else:
             self._budget_auto = False
             self.round_budget = (
-                num_slots * self.theta if round_budget is None
+                num_slots * self.theta * self.num_branches
+                if round_budget is None
                 else int(round_budget)
             )
         if execution == "packed" and self.round_budget < num_slots:
@@ -326,8 +352,11 @@ class ShardWorker:
         # auto budget tier
         self._live_demand = 0
         self._demand_ewma = 0.0
-        # a fresh chain's opening window (what one admission adds to demand)
+        # a fresh chain's opening demand (what one admission adds): the
+        # controller's initial window times the opening branch count
         self._theta_open = int(self.controller.init(self.theta)[1])
+        self._b_open = int(self.branch_controller.init(self.num_branches)[1])
+        self._points_open = self._theta_open * max(self._b_open, 1)
 
         self._statics = dict(
             theta=self.theta,
@@ -336,6 +365,8 @@ class ShardWorker:
             keep_trajectory=keep_trajectory,
             grs_impl=grs_impl,
             controller=self.controller,
+            num_branches=self.num_branches,
+            branch_controller=self.branch_controller,
         )
         self._model_mesh = model_mesh
         self._param_specs = param_specs
@@ -355,12 +386,13 @@ class ShardWorker:
                 # calibrate the per-round collective estimate once: the
                 # verify's psums run INSIDE the fused program, so their cost
                 # is probed with the same payload schedule on the same group
-                # (~budget + 2*slots points per packed round: verify lanes +
-                # the plan's head call + the eager head lanes)
+                # (~budget + (1 + B)*slots points per packed round: verify
+                # lanes + the plan's head call + the per-branch eager head
+                # lanes)
                 points = (
-                    self._budget_cap + 2 * num_slots
+                    self._budget_cap + (1 + self.num_branches) * num_slots
                     if execution == "packed"
-                    else num_slots * (self.theta + 1))
+                    else num_slots * (self.theta * self.num_branches + 1))
                 self._collective_s_per_round = measure_collective_seconds(
                     model_mesh,
                     [int(b) * points for b in collective_payloads])
@@ -373,9 +405,12 @@ class ShardWorker:
         if execution == "packed":
             from repro.serving.packing import WaterfillingAllocator
 
+            # the waterfilling level scan must reach one slot's max demand,
+            # which under branched speculation is theta * num_branches
             self.allocator = (
                 allocator if allocator is not None
-                else WaterfillingAllocator(theta_max=self.theta)
+                else WaterfillingAllocator(
+                    theta_max=self.theta * self.num_branches)
             )
         else:
             self.allocator = allocator
@@ -460,7 +495,8 @@ class ShardWorker:
             new_sts = jax.vmap(
                 lambda y0, k: init_chain_state(
                     schedule, y0, k, self.theta, noise_mode, keep_trajectory,
-                    self.controller,
+                    self.controller, num_branches=self.num_branches,
+                    branch_controller=self.branch_controller,
                 )
             )(y0s, keys)
             return jax.tree_util.tree_map(
@@ -477,6 +513,8 @@ class ShardWorker:
             lambda k: init_chain_state(
                 schedule, jnp.zeros(self.event_shape), k, self.theta,
                 noise_mode, keep_trajectory, self.controller,
+                num_branches=self.num_branches,
+                branch_controller=self.branch_controller,
             )
         )(jax.random.split(jax.random.PRNGKey(seed), num_slots))
         self._states = dataclasses.replace(
@@ -540,9 +578,18 @@ class ShardWorker:
 
     # -- request lifecycle ---------------------------------------------------
 
-    def _next_key(self) -> jax.Array:
-        self._key, sub = jax.random.split(self._key)
-        return sub
+    def _request_key(self, rid: int) -> jax.Array:
+        """PRNG key for a request submitted WITHOUT one: the worker's serve
+        key folded on the request id.  A pure function of (serve key, rid)
+        — NOT of admission order, slot index, shard placement, or
+        re-admission after a drain — so the sample an unkeyed request gets
+        is pinned by its id alone, and the chain's branch draws (which fold
+        off this key) stay slot-independent.  The old derivation (splitting
+        a mutable engine key per admission) tied every sample to the exact
+        admission sequence: re-running the same request set in a different
+        arrival order, or re-admitting one request, silently changed
+        OTHER requests' samples."""
+        return jax.random.fold_in(self._key, int(rid) & 0xFFFFFFFF)
 
     def _admission_context(self, now: float) -> AdmissionContext:
         return AdmissionContext(
@@ -553,7 +600,7 @@ class ShardWorker:
             now=now,
             round_budget=self.round_budget,
             live_demand=self._live_demand,
-            theta_open=self._theta_open,
+            theta_open=self._points_open,
             rounds_per_sync=self._rps,
             overcommit=self.overcommit,
         )
@@ -738,7 +785,8 @@ class ShardWorker:
                      self.shard_id, entry.request.rid)
         batch = []
         for slot, req in placed:
-            key = req.key if req.key is not None else self._next_key()
+            key = (req.key if req.key is not None
+                   else self._request_key(req.rid))
             if req.y0 is not None:
                 y0 = jnp.asarray(req.y0, jnp.float32)
             else:
@@ -754,9 +802,10 @@ class ShardWorker:
             self._set_weight(
                 slot,
                 max(1.0 + float(getattr(req, "priority", 0.0) or 0.0), 0.1))
-            # a fresh chain opens at the controller's initial window: count
-            # it into the live demand the budget-pressure signal sees
-            self._live_demand += self._theta_open
+            # a fresh chain opens at the controller's initial window times
+            # its opening branch count: count that into the live demand the
+            # budget-pressure signal sees
+            self._live_demand += self._points_open
             self.stats.requests += 1
             batch.append((slot, y0, key, cond_row))
         return batch
@@ -877,12 +926,15 @@ class ShardWorker:
         now = time.perf_counter()
         K = self.schedule.K
         # refresh the budget-pressure signal off the sync we already pay:
-        # live demand = sum over active slots of min(theta_live, K - a)
+        # live demand = sum over active slots of b_live * min(theta_live,
+        # K - a) — each live branch wants its own copy of the window
         occupied = np.zeros((self.num_slots,), bool)
         occupied[self.scheduler.active_slots()] = True
         live = occupied & (a < K)
+        b_live = np.maximum(row["b_live"], 1)
         self._live_demand = int(
-            np.minimum(theta_live[live], (K - a)[live]).sum())
+            (b_live[live]
+             * np.minimum(theta_live[live], (K - a)[live])).sum())
         # the auto budget tier tracks demand through an EWMA, not the raw
         # sample.  Empty boundaries DECAY it multiplicatively instead of
         # blending in the zero: one momentary gap cannot collapse the tier
@@ -931,6 +983,7 @@ class ShardWorker:
                     model_evals=int(row["model_evals"][slot]),
                     accepts=int(row["accepts"][slot]),
                     proposals=int(row["proposals"][slot]),
+                    draft_points=int(row["draft_points"][slot]),
                     deadline=deadline,
                     slo_met=None if deadline is None else now <= deadline,
                 )

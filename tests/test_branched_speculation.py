@@ -1,0 +1,463 @@
+"""Branched multi-draft speculation: the branch axis B through the stack.
+
+The exactness spine: branch 0 IS the canonical single-draft noise stream and
+``num_branches == 1`` compiles the original round body — so a branched-
+configured engine at B = 1 must match the default engine bit for bit, per
+``ASDChainState`` leaf, on every dispatch shape.  At B > 1 the extra
+branches are exchangeable exact continuations, so selection (longest
+accepted prefix, lowest-index tie-break) can only deepen a round's advance,
+never change the chain's law.
+
+Also covered here (PR 9 satellites): kernel grs/pack impls through the
+engine on branched shapes, request-id key pinning (samples independent of
+admission order / slot / re-admission), allocator edge cases under the
+branch axis, the ``timing_breakdown`` fused-dispatch accounting edge, and
+the BranchController units.
+
+Multi-device fused-dispatch tests skip on a single-device install; CI runs
+them under ``XLA_FLAGS=--xla_force_host_platform_device_count``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.asd import asd_round, asd_sample, init_chain_state
+from repro.core.controller import (
+    BRANCH_CONTROLLERS,
+    GainBranches,
+    StaticBranches,
+    make_branch_controller,
+)
+from repro.serving.engine import ContinuousASDEngine, Request
+from repro.serving.metrics import EngineStats, RequestMetrics
+from repro.serving.packing import (
+    PriorityWeightedAllocator,
+    ProportionalAllocator,
+    WaterfillingAllocator,
+    build_branched_pack_maps,
+)
+from repro.serving.sharded import ShardedASDEngine
+
+THETA = 4
+B = 3
+
+
+def _requests(n, seed0=100, keyed=True):
+    return [
+        Request(i,
+                key=jax.random.PRNGKey(seed0 + i) if keyed else None,
+                y0=np.zeros((2,), np.float32))
+        for i in range(n)
+    ]
+
+
+def _continuous(sl_model2, sched_tiny, **kw):
+    base = dict(schedule=sched_tiny, event_shape=(2,), num_slots=4,
+                theta=THETA, eager_head=True, keep_trajectory=True)
+    base.update(kw)
+    return ContinuousASDEngine(lambda cond: sl_model2, **base)
+
+
+def _sharded(sl_model2, sched_tiny, **kw):
+    base = dict(schedule=sched_tiny, event_shape=(2,), num_slots=4,
+                theta=THETA, eager_head=True, keep_trajectory=True)
+    base.update(kw)
+    return ShardedASDEngine(lambda cond: sl_model2, **base)
+
+
+# per-shard dispatch shapes; the branched engine at B=1 must be bitwise on
+# every one of them
+_SHAPES = {
+    "unpacked": {},
+    "packed": dict(execution="packed", round_budget=2 * THETA),
+    "fused_round": dict(execution="packed", round_budget=2 * THETA,
+                        round_impl="fused"),
+}
+
+
+# ---------------------------------------------------------------------------
+# B = 1 bitwise parity, per ASDChainState leaf, across dispatch shapes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", sorted(_SHAPES))
+def test_b1_bitwise_parity(sl_model2, sched_tiny, shape):
+    """A branched-configured engine at num_branches=1 is the single-draft
+    engine bit for bit: samples, trajectories, and speculation counters —
+    and draft_points == proposals (no branch ever drafted extra work)."""
+    kw = _SHAPES[shape]
+    ref = _continuous(sl_model2, sched_tiny, **kw)
+    bra = _continuous(sl_model2, sched_tiny, num_branches=1,
+                      branch_controller=GainBranches(), **kw)
+    out_r = ref.serve(_requests(9))
+    out_b = bra.serve(_requests(9))
+    assert sorted(out_r) == sorted(out_b)
+    for rid in out_r:
+        np.testing.assert_array_equal(out_r[rid], out_b[rid])
+    ref_m = {m.rid: m for m in ref.stats.per_request}
+    for m in bra.stats.per_request:
+        r = ref_m[m.rid]
+        assert (m.rounds, m.head_calls, m.model_evals, m.accepts,
+                m.proposals) == (r.rounds, r.head_calls, r.model_evals,
+                                 r.accepts, r.proposals), m.rid
+        assert m.draft_points == m.proposals, m.rid
+        assert m.wasted_draft_frac == pytest.approx(1.0 - m.accept_rate)
+    assert bra.stats.draft_points_total == bra.stats.proposals_total
+
+
+def test_b1_leafwise_parity_stepped(sl_model2, sched_tiny):
+    """Stepped boundary by boundary, every ASDChainState leaf matches at
+    B = 1 (StaticBranches keeps the bctrl leaf shape identical too)."""
+    ref = _continuous(sl_model2, sched_tiny)
+    bra = _continuous(sl_model2, sched_tiny, num_branches=1,
+                      branch_controller=StaticBranches())
+    for r in _requests(6, seed0=400):
+        ref.submit(r)
+    for r in _requests(6, seed0=400):
+        bra.submit(r)
+    more_r = more_b = True
+    while more_r or more_b:
+        if more_r:
+            more_r = ref.step()
+        if more_b:
+            more_b = bra.step()
+        for lr, lb in zip(jax.tree_util.tree_leaves(ref._states),
+                          jax.tree_util.tree_leaves(bra._states)):
+            np.testing.assert_array_equal(np.asarray(lr), np.asarray(lb))
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs >= 2 devices")
+@pytest.mark.parametrize("round_impl", ["packed", "fused"])
+def test_b1_parity_fused_dispatch(sl_model2, sched_tiny, round_impl):
+    """Same B = 1 guarantee under the sharded fused-dispatch front end."""
+    kw = dict(shards=2, dispatch="fused", execution="packed",
+              round_budget=2 * THETA, round_impl=round_impl)
+    ref = _sharded(sl_model2, sched_tiny, **kw)
+    bra = _sharded(sl_model2, sched_tiny, num_branches=1,
+                   branch_controller=StaticBranches(), **kw)
+    out_r = ref.serve(_requests(7))
+    out_b = bra.serve(_requests(7))
+    assert sorted(out_r) == sorted(out_b)
+    for rid in out_r:
+        np.testing.assert_array_equal(out_r[rid], out_b[rid])
+    assert bra.stats.draft_points_total == bra.stats.proposals_total
+
+
+# ---------------------------------------------------------------------------
+# Core branched rounds: dominance, accounting, cross-mode agreement
+# ---------------------------------------------------------------------------
+
+
+def test_branched_round_never_shallower(sl_model2, sched_tiny, zeros2, keys):
+    """From the same state, the B-branch round commits at least as deep a
+    prefix as the single draft: branch 0 IS the single draft, and selection
+    takes the longest accepted prefix."""
+    for k in keys(8):
+        st1 = init_chain_state(sched_tiny, zeros2, k, THETA)
+        stb = init_chain_state(sched_tiny, zeros2, k, THETA, num_branches=B)
+        r1 = asd_round(sl_model2, sched_tiny, st1, THETA, eager_head=True)
+        rb = asd_round(sl_model2, sched_tiny, stb, THETA, eager_head=True,
+                       num_branches=B)
+        assert int(rb.a) >= int(r1.a)
+        # draft accounting: B whole windows verified, one window committed
+        assert int(rb.draft_points) == B * int(r1.proposals)
+        assert int(rb.proposals) == int(r1.proposals)
+
+
+def test_asd_sample_b1_bitwise(sl_model2, sched_tiny, zeros2):
+    k = jax.random.PRNGKey(7)
+    ref = asd_sample(sl_model2, sched_tiny, zeros2, k, THETA, eager_head=True)
+    bra = asd_sample(sl_model2, sched_tiny, zeros2, k, THETA, eager_head=True,
+                     num_branches=1, branch_controller=GainBranches())
+    np.testing.assert_array_equal(np.asarray(ref.sample),
+                                  np.asarray(bra.sample))
+    np.testing.assert_array_equal(np.asarray(ref.trajectory),
+                                  np.asarray(bra.trajectory))
+    for f in ("rounds", "head_calls", "model_evals", "accepts", "proposals"):
+        assert int(getattr(ref, f)) == int(getattr(bra, f)), f
+    assert int(bra.draft_points) == int(bra.proposals)
+
+
+def test_asd_sample_branched_runs_to_completion(sl_model2, sched_tiny,
+                                                zeros2):
+    res = asd_sample(sl_model2, sched_tiny, zeros2, jax.random.PRNGKey(3),
+                     THETA, eager_head=True, num_branches=B)
+    assert np.isfinite(np.asarray(res.sample)).all()
+    assert int(res.draft_points) >= int(res.proposals)
+    # fewer rounds can only come from deeper commits, never more rounds
+    ref = asd_sample(sl_model2, sched_tiny, zeros2, jax.random.PRNGKey(3),
+                     THETA, eager_head=True)
+    assert int(res.rounds) <= int(ref.rounds)
+
+
+def test_branched_cross_mode_sample_parity(sl_model2, sched_tiny):
+    """At B = 3 the unpacked, packed, and fused-round engines still agree
+    bitwise on every sample: the branched round is one program with three
+    dispatch shapes, not three samplers."""
+    covering = B * 4 * THETA  # 4 slots x B full windows: grants == demands
+    configs = [
+        {},
+        dict(execution="packed", round_budget=covering),
+        dict(execution="packed", round_budget=covering, round_impl="fused"),
+    ]
+    outs = []
+    for kw in configs:
+        eng = _continuous(sl_model2, sched_tiny, num_branches=B, **kw)
+        outs.append(eng.serve(_requests(7)))
+    for out in outs[1:]:
+        assert sorted(out) == sorted(outs[0])
+        for rid in out:
+            np.testing.assert_array_equal(out[rid], outs[0][rid])
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs >= 2 devices")
+def test_branched_sharded_dispatch_parity(sl_model2, sched_tiny):
+    """B = 3, shards=2: per-shard and fused dispatch produce the same bits
+    (host-side dispatch shape cannot move a branched sample)."""
+    kw = dict(shards=2, execution="packed", round_budget=B * 2 * THETA,
+              round_impl="fused", num_branches=B)
+    a = _sharded(sl_model2, sched_tiny, dispatch="per-shard", **kw)
+    b = _sharded(sl_model2, sched_tiny, dispatch="fused", **kw)
+    out_a = a.serve(_requests(7))
+    out_b = b.serve(_requests(7))
+    assert sorted(out_a) == sorted(out_b)
+    for rid in out_a:
+        np.testing.assert_array_equal(out_a[rid], out_b[rid])
+    assert a.stats.draft_points_total == b.stats.draft_points_total
+
+
+def test_branched_engine_stats_lanes(sl_model2, sched_tiny):
+    eng = _continuous(sl_model2, sched_tiny, num_branches=B)
+    eng.serve(_requests(6))
+    s = eng.stats
+    assert s.draft_points_total > s.proposals_total  # extra branches drafted
+    assert 0.0 < s.wasted_draft_frac() < 1.0
+    assert s.branch_accept_depth() > 0.0
+    tb = eng.stats.timing_breakdown()
+    assert tb["branch_accept_depth"] == pytest.approx(s.branch_accept_depth())
+    assert tb["wasted_draft_frac"] == pytest.approx(s.wasted_draft_frac())
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: kernel grs/pack impls end-to-end through the engine at B > 1
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_impls_through_engine_branched(sl_model2, sched_tiny):
+    """grs_impl='kernel' + pack_impl='kernel' through ContinuousASDEngine on
+    branched shapes match the core/ref implementations (interpret mode on
+    CPU; float tolerance, not bitwise — the kernel's accumulation order
+    differs, same bound the unbranched kernel-integration tests pin)."""
+    kw = dict(execution="packed", round_budget=B * 2 * THETA, num_branches=2)
+    ref = _continuous(sl_model2, sched_tiny, grs_impl="core",
+                      pack_impl="ref", **kw)
+    ker = _continuous(sl_model2, sched_tiny, grs_impl="kernel",
+                      pack_impl="kernel", **kw)
+    out_r = ref.serve(_requests(7))
+    out_k = ker.serve(_requests(7))
+    assert sorted(out_r) == sorted(out_k)
+    for rid in out_r:
+        np.testing.assert_allclose(out_r[rid], out_k[rid], atol=1e-5)
+    assert ref.stats.draft_points_total == ker.stats.draft_points_total
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: request-id key pinning — samples never depend on slots/order
+# ---------------------------------------------------------------------------
+
+
+def test_unkeyed_samples_pinned_across_admission_order(sl_model2, sched_tiny):
+    """Unkeyed requests derive their key from the request id, not the slot
+    or admission position: reversing the submission order re-routes every
+    chain but cannot move a single sample's bits."""
+    e1 = _continuous(sl_model2, sched_tiny, num_branches=2)
+    e2 = _continuous(sl_model2, sched_tiny, num_branches=2)
+    out1 = e1.serve(_requests(6, keyed=False))
+    out2 = e2.serve(list(reversed(_requests(6, keyed=False))))
+    assert sorted(out1) == sorted(out2)
+    for rid in out1:
+        np.testing.assert_array_equal(out1[rid], out2[rid])
+
+
+def test_unkeyed_sample_pinned_across_readmission(sl_model2, sched_tiny):
+    """Re-admitting a retired rid on the SAME engine reproduces its sample:
+    the key is a pure function of (serve key, rid), so a re-run is a
+    re-draw of the identical chain."""
+    eng = _continuous(sl_model2, sched_tiny)
+    first = eng.serve(_requests(6, keyed=False))
+    again = eng.serve([Request(3, key=None, y0=np.zeros((2,), np.float32))])
+    np.testing.assert_array_equal(first[3], again[3])
+
+
+def test_unkeyed_samples_pinned_across_shard_counts(sl_model2, sched_tiny):
+    """With a shared serve key, the sample an unkeyed request gets is
+    independent of the shard the router placed it on — single engine and
+    shards=2 agree bitwise."""
+    key = jax.random.PRNGKey(1234)
+    single = _continuous(sl_model2, sched_tiny)
+    duo = _sharded(sl_model2, sched_tiny, shards=2)
+    out_1 = single.serve(_requests(8, keyed=False), key=key)
+    out_2 = duo.serve(_requests(8, keyed=False), key=key)
+    assert sorted(out_1) == sorted(out_2)
+    for rid in out_1:
+        np.testing.assert_array_equal(out_1[rid], out_2[rid])
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: allocator edge cases under the branch axis
+# ---------------------------------------------------------------------------
+
+_ALLOCS = [ProportionalAllocator(), WaterfillingAllocator(theta_max=12),
+           PriorityWeightedAllocator()]
+
+
+def _branch_split(grants, n1, b_live):
+    """The grant -> (branches, per-branch points) split the branched packed
+    round applies: whole windows only, branches shed before window width."""
+    covered = grants >= n1
+    b_r = jnp.clip(grants // jnp.maximum(n1, 1), 1, b_live)
+    pts1 = jnp.where(covered, n1, grants)
+    return np.asarray(b_r), np.asarray(pts1)
+
+
+@pytest.mark.parametrize("alloc", _ALLOCS, ids=lambda a: a.name)
+def test_min1_grant_sheds_branches_before_chains(alloc):
+    """budget == num_chains: every chain keeps its min-1 grant and ALL
+    branches are shed — no chain starves to feed another's branches."""
+    n1 = jnp.full((4,), 3, jnp.int32)
+    b_live = jnp.full((4,), 2, jnp.int32)
+    demand = b_live * n1  # 24 points wanted
+    g = np.asarray(alloc.allocate(demand, 4, jnp.ones((4,), jnp.float32)))
+    assert g.sum() <= 4
+    assert (g >= 1).all()  # min-1: branches shed before chains
+    b_r, pts1 = _branch_split(jnp.asarray(g), n1, b_live)
+    assert (b_r == 1).all()
+    assert (pts1 == g).all()  # the grant becomes the trimmed window
+
+
+@pytest.mark.parametrize("alloc", _ALLOCS, ids=lambda a: a.name)
+def test_ample_budget_grants_exact_branched_demand(alloc):
+    """total demand <= budget short-circuits to grants == demand exactly —
+    the covering-budget bitwise-parity regime for branched rounds."""
+    n1 = jnp.asarray([4, 2, 4, 1], jnp.int32)
+    b_live = jnp.asarray([2, 3, 1, 2], jnp.int32)
+    demand = b_live * n1  # [8, 6, 4, 2] = 20
+    g = alloc.allocate(demand, 20, jnp.ones((4,), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(demand))
+    b_r, pts1 = _branch_split(g, n1, b_live)
+    np.testing.assert_array_equal(b_r, np.asarray(b_live))
+    np.testing.assert_array_equal(pts1, np.asarray(n1))
+
+
+def test_waterfill_level_scan_mixed_branch_demands():
+    """The waterfill level scan stays max-min fair when demands carry mixed
+    branch multipliers (theta_max = theta * B bounds the scan range)."""
+    n1 = jnp.asarray([4, 4, 4, 2], jnp.int32)
+    b_live = jnp.asarray([2, 1, 3, 1], jnp.int32)
+    demand = b_live * n1  # [8, 4, 12, 2] = 26
+    g = np.asarray(WaterfillingAllocator(theta_max=12).allocate(
+        demand, 16, jnp.ones((4,), jnp.float32)))
+    # highest feasible level is L=5: min(d,5) sums to 16 == budget
+    np.testing.assert_array_equal(g, [5, 4, 5, 2])
+    b_r, pts1 = _branch_split(jnp.asarray(g), n1, b_live)
+    # partial extra branches are refused: 5 of a 4-wide window is 1 branch
+    np.testing.assert_array_equal(b_r, [1, 1, 1, 1])
+    np.testing.assert_array_equal(pts1, [4, 4, 4, 2])
+
+
+def test_branched_pack_maps_branch_major_layout():
+    pts1 = jnp.asarray([2, 3, 0, 1], jnp.int32)
+    b_r = jnp.asarray([2, 1, 1, 3], jnp.int32)
+    budget = 16
+    maps = build_branched_pack_maps(pts1, b_r, budget)
+    valid = np.asarray(maps.valid)
+    assert valid.sum() == int((pts1 * b_r).sum()) == int(maps.total)
+    slot = np.asarray(maps.slot_id)[valid]
+    branch = np.asarray(maps.branch_id)[valid]
+    step = np.asarray(maps.step_id)[valid]
+    # branch-major within each slot segment: branch 0's window first
+    np.testing.assert_array_equal(slot, [0, 0, 0, 0, 1, 1, 1, 3, 3, 3])
+    np.testing.assert_array_equal(branch, [0, 0, 1, 1, 0, 0, 0, 0, 1, 2])
+    np.testing.assert_array_equal(step, [0, 1, 0, 1, 0, 1, 2, 0, 0, 0])
+    # b_r == 1 everywhere collapses to the unbranched maps + zero branch lane
+    m1 = build_branched_pack_maps(pts1, jnp.ones((4,), jnp.int32), budget)
+    assert (np.asarray(m1.branch_id)[np.asarray(m1.valid)] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Satellite 6: timing_breakdown fused-dispatch accounting edge
+# ---------------------------------------------------------------------------
+
+
+def test_timing_breakdown_accounts_fused_dispatch():
+    """fused_dispatch_s is part of the accounted total: with components far
+    above the recorded wall, the four fractions still sum to 1 and the
+    fused lane gets its exact share."""
+    s = EngineStats()
+    s.dispatch_s, s.fused_dispatch_s = 1.0, 3.0
+    s.device_s, s.host_sync_s = 2.0, 1.0
+    s.wall_time = 0.5  # components exceed the wall: accounted is the denom
+    tb = s.timing_breakdown()
+    fracs = (tb["dispatch_frac"] + tb["fused_dispatch_frac"]
+             + tb["device_frac"] + tb["host_sync_frac"])
+    assert fracs == pytest.approx(1.0)
+    assert tb["fused_dispatch_frac"] == pytest.approx(3.0 / 7.0)
+    assert tb["dispatch_frac"] == pytest.approx(1.0 / 7.0)
+
+
+def test_wasted_draft_frac_idle_is_zero():
+    s = EngineStats()
+    assert s.wasted_draft_frac() == 0.0
+    assert s.branch_accept_depth() == 0.0
+    rm = RequestMetrics(rid=0, queue_latency=0.0, service_time=0.0, rounds=0,
+                        head_calls=0, model_evals=0, accepts=0, proposals=0)
+    assert rm.wasted_draft_frac == 0.0
+
+
+# ---------------------------------------------------------------------------
+# BranchController units
+# ---------------------------------------------------------------------------
+
+
+def test_static_branches_clamps():
+    bctrl, b = StaticBranches().init(4)
+    assert bctrl.shape == (0,) and int(b) == 4  # default: the full cap
+    assert int(StaticBranches(value=7).init(4)[1]) == 4  # clamped to b_max
+    assert int(StaticBranches(value=0).init(4)[1]) == 1  # floor at 1
+    _, b2 = StaticBranches(value=2).update(bctrl, b, jnp.asarray(5),
+                                           jnp.asarray(4), jnp.asarray(False),
+                                           4)
+    assert int(b2) == 2
+
+
+def test_gain_branches_grows_and_shrinks():
+    ctrl = GainBranches()
+    bctrl, b = ctrl.init(4)
+    assert int(b) == 4  # optimistic open at the cap
+    # persistent gain: grows (clamped at b_max)
+    bctrl2, b2 = ctrl.update(bctrl, jnp.asarray(3, jnp.int32),
+                             jnp.asarray(4, jnp.int32),
+                             jnp.asarray(4, jnp.int32),
+                             jnp.asarray(False), 4)
+    assert int(b2) == 4 and float(bctrl2[0]) > float(bctrl[0])
+    # zero gain, repeatedly: EWMA decays below shrink and b steps to 1
+    bc, bl = bctrl, b
+    for _ in range(40):
+        bc, bl = ctrl.update(bc, bl, jnp.asarray(0, jnp.int32),
+                             jnp.asarray(2, jnp.int32), jnp.asarray(True), 4)
+    assert int(bl) == 1
+    # at b_live == 1 no extra branch ran: the estimate coasts unchanged
+    bc2, bl2 = ctrl.update(bc, bl, jnp.asarray(0, jnp.int32),
+                           jnp.asarray(2, jnp.int32), jnp.asarray(False), 4)
+    assert float(bc2[0]) == pytest.approx(float(bc[0]))
+    assert int(bl2) == 1
+
+
+def test_branch_controller_registry():
+    assert set(BRANCH_CONTROLLERS) == {"static", "gain"}
+    c = make_branch_controller("gain", grow=0.5)
+    assert isinstance(c, GainBranches) and c.grow == 0.5
+    with pytest.raises(ValueError, match="unknown branch controller"):
+        make_branch_controller("nope")

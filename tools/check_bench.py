@@ -49,7 +49,7 @@ RULES = [
     (r"parity|bitwise", "exact", 0.0),
     # machine-phase-sensitive claims / argmax arm names (skipped by --loose)
     (r"non_decreasing|monotone|decreasing|best_packed$|best_fused$|best_r$"
-     r"|best_adaptive$", "phase", 0.0),
+     r"|best_adaptive$|best_multi_arm$", "phase", 0.0),
     # relative metrics: stable across hosts
     (r"ratio|_vs_|frac|accept_rate|occupancy|attainment|speedup", "rel", 0.15),
     # absolute throughput: same-host band only (skipped by --loose)
