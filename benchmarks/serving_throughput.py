@@ -1166,6 +1166,204 @@ def run_model_parallel_sweep(theta, slots, requests, repeats, K=16,
     )
 
 
+def run_ep_sp_sweep(theta, slots, requests, repeats, K=12, mp=2):
+    """Expert- and sequence-parallel verify: the two sharding modes that
+    scale the ``model`` mesh axis past tensor parallelism.  Writes
+    results/model_parallel_ep_sp.json.
+
+    Two real smoke-sized denoisers, every arm serving the identical
+    key-carrying request pool.  In-run assertions, not post-hoc claims:
+
+      * the ep-off mp construction (``mp_param_pspecs`` tensor-only +
+        ``mp_collective_payloads``) is BITWISE identical to the legacy
+        tensor-parallel path (``tp_param_pspecs``) in BOTH dispatch
+        shapes — the refactor is a pure superset;
+      * expert-parallel (qwen3-moe smoke, E=8 over mp=2) matches the
+        replicated golden within allclose (the a2a exchange + psum combine
+        reassociate sums), re-running the arm is bitwise deterministic,
+        and the placed per-device expert stacks hold exactly 1/mp of the
+        replicated bytes;
+      * sequence-parallel (dense smoke, L=8 over sp=2) matches its
+        replicated golden within allclose, is run-twice deterministic,
+        and shards NO params (every placed leaf keeps its full shape);
+      * the superstep count per boundary does not grow under EP.
+
+    Per-arm per-kind collective seconds (psum vs all_to_all) are recorded —
+    the calibrated price each mode pays per round.  Simulate devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
+    from repro.configs.registry import (
+        paper_diffusion_policy_smoke, qwen3_moe_a3b_smoke)
+    from repro.core.schedules import ddpm as ddpm_schedule
+    from repro.distributed.sharding import (
+        mp_param_pspecs, serving_mesh, tp_param_pspecs)
+    from repro.models.diffusion import (
+        denoiser_init, make_ddpm_model_fn, mp_collective_payloads,
+        sp_compatible, tp_collective_payloads)
+    from repro.nn.param import unbox
+
+    n_dev = len(jax.devices())
+    if n_dev < mp:
+        raise SystemExit(
+            f"--ep-sp sweep needs >= {mp} devices, have {n_dev}; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+    sched = ddpm_schedule(K=K)
+    models = {}
+    for key, make in (("moe", qwen3_moe_a3b_smoke),
+                      ("sp", paper_diffusion_policy_smoke)):
+        dc = make()
+        models[key] = (dc, unbox(denoiser_init(jax.random.PRNGKey(0), dc)),
+                       jax.eval_shape(lambda k, d=dc: denoiser_init(k, d),
+                                      jax.random.PRNGKey(0)))
+    ok, why = sp_compatible(models["sp"][0], mp)
+    assert ok, why
+
+    def make_reqs(dc):
+        rng = np.random.default_rng(11)
+        return [
+            Request(i, key=jax.random.PRNGKey(4000 + i),
+                    y0=rng.standard_normal(
+                        (dc.seq_len, dc.d_data)).astype(np.float32))
+            for i in range(requests)
+        ]
+
+    def build(model, dispatch, *, mode="replicated"):
+        dc, params, boxed = models[model]
+        base = dict(
+            schedule=sched, event_shape=(dc.seq_len, dc.d_data),
+            num_slots=slots, shards=1, theta=theta, eager_head=True,
+            noise_mode="counter", keep_trajectory=False, params=params,
+            dispatch=dispatch, router=make_router("round-robin"))
+        if mode == "replicated":
+            return ShardedASDEngine(
+                lambda p, cond: make_ddpm_model_fn(p, dc), **base)
+        mesh = serving_mesh(1, mp)
+        ep, sp = mode == "ep", mp if mode == "sp" else 1
+        if mode == "tp-legacy":  # the exact PR 7 construction
+            specs = tp_param_pspecs(boxed, mesh)
+            payloads = tp_collective_payloads(params, specs, dc)
+        else:
+            specs = mp_param_pspecs(boxed, mesh, tensor=sp == 1, expert=ep)
+            payloads = mp_collective_payloads(
+                params, specs, dc, mp_size=mp, sp_size=sp)
+        factory = lambda p, cond: make_ddpm_model_fn(
+            p, dc,
+            tp_axis="model" if sp == 1 else None,
+            sp_axis="model" if sp > 1 else None, sp_size=sp,
+            ep_axis="model" if ep else None)
+        return ShardedASDEngine(
+            factory, model_shards=mp, param_specs=specs,
+            collective_payloads=payloads, **base)
+
+    def leaf(eng, name):
+        for path, lf in jax.tree_util.tree_flatten_with_path(
+                eng.workers[0]._params)[0]:
+            if getattr(path[-1], "key", None) == name:
+                return lf
+        raise KeyError(name)
+
+    # (name, model, dispatch, mode) — replicated goldens first
+    arms_spec = [
+        ("moe-mp1-per-shard", "moe", "per-shard", "replicated"),
+        ("moe-mp1-fused", "moe", "fused", "replicated"),
+        ("moe-tp2-legacy-per-shard", "moe", "per-shard", "tp-legacy"),
+        ("moe-tp2-per-shard", "moe", "per-shard", "tp"),
+        ("moe-tp2-legacy-fused", "moe", "fused", "tp-legacy"),
+        ("moe-tp2-fused", "moe", "fused", "tp"),
+        ("moe-ep2-fused", "moe", "fused", "ep"),
+        ("sp-mp1-fused", "sp", "fused", "replicated"),
+        ("sp2-fused", "sp", "fused", "sp"),
+    ]
+
+    warms = {}
+    for name, model, dispatch, mode in arms_spec:
+        warm = build(model, dispatch, mode=mode)
+        warm.serve(make_reqs(models[model][0]))
+        warms[name] = warm
+
+    goldens, prev_out, best = {}, {}, {}
+    flags = dict(parity_ep1_tp_bitwise=False, parity_ep_allclose=False,
+                 parity_ep_deterministic_bitwise=False,
+                 parity_expert_shard_bytes=False,
+                 parity_sp_allclose=False,
+                 parity_sp_deterministic_bitwise=False,
+                 parity_sp_params_replicated=False)
+    for _ in range(max(repeats, 2)):  # >= 2: run-twice determinism is in-run
+        for name, model, dispatch, mode in arms_spec:
+            eng = build(model, dispatch, mode=mode).adopt_programs(
+                warms[name])
+            reqs_n = make_reqs(models[model][0])
+            t0 = time.perf_counter()
+            out = eng.serve(reqs_n)
+            wall = time.perf_counter() - t0
+            assert len(out) == requests
+            golden = goldens.setdefault(model, out)
+            if mode == "replicated":  # mp=1 IS the replicated engine
+                for r in reqs_n:
+                    np.testing.assert_array_equal(out[r.rid], golden[r.rid])
+            else:  # reassociated collective sums: tight allclose
+                for r in reqs_n:
+                    np.testing.assert_allclose(out[r.rid], golden[r.rid],
+                                               rtol=1e-5, atol=1e-5)
+                if mode == "ep":
+                    flags["parity_ep_allclose"] = True
+                if mode == "sp":
+                    flags["parity_sp_allclose"] = True
+            if mode == "tp":  # refactor parity: bitwise vs the PR 7 path
+                legacy = prev_out[f"moe-tp2-legacy-{dispatch}"]
+                for r in reqs_n:
+                    np.testing.assert_array_equal(out[r.rid], legacy[r.rid])
+                flags["parity_ep1_tp_bitwise"] = True
+            if name in prev_out:  # fixed reduction order: run-twice bitwise
+                for r in reqs_n:
+                    np.testing.assert_array_equal(out[r.rid],
+                                                  prev_out[name][r.rid])
+                if mode == "ep":
+                    flags["parity_ep_deterministic_bitwise"] = True
+                if mode == "sp":
+                    flags["parity_sp_deterministic_bitwise"] = True
+            prev_out[name] = out
+            if mode == "ep":  # the 1/mp memory claim, on placed shards
+                wg = leaf(eng, "w_gate")
+                assert (wg.addressable_shards[0].data.nbytes * mp
+                        == wg.nbytes)
+                flags["parity_expert_shard_bytes"] = True
+            if mode == "sp":  # SP shards NO params
+                wq = leaf(eng, "wq")
+                assert wq.addressable_shards[0].data.shape == wq.shape
+                flags["parity_sp_params_replicated"] = True
+            if name not in best or wall < best[name][0]:
+                best[name] = (wall, eng.stats)
+
+    arms = {}
+    for (name, model, dispatch, mode) in arms_spec:
+        wall, s = best[name]
+        t = s.timing_breakdown()
+        arms[name] = dict(
+            model=models[model][0].backbone.name, mode=mode,
+            model_shards=1 if mode == "replicated" else mp,
+            dispatch=dispatch, wall_time_s=wall,
+            samples_per_s=s.retired / wall,
+            supersteps=s.supersteps, fused_rounds=s.rounds_total,
+            collective_s=s.collective_s,
+            collective_psum_s=s.collective_psum_s,
+            collective_a2a_s=s.collective_a2a_s,
+            collective_frac=t["collective_frac"], timing=t)
+        print(f"[{name:24s}] {arms[name]['samples_per_s']:.2f} samples/s, "
+              f"{s.rounds_total} rounds / {s.supersteps} supersteps, "
+              f"collectives {1e3 * s.collective_s:.1f}ms "
+              f"(psum {1e3 * s.collective_psum_s:.1f}ms, "
+              f"a2a {1e3 * s.collective_a2a_s:.1f}ms)")
+
+    superstep_parity = (arms["moe-ep2-fused"]["supersteps"]
+                        == arms["moe-mp1-fused"]["supersteps"])
+    return dict(
+        arms=arms, mp=mp, devices=n_dev,
+        models={k: models[k][0].backbone.name for k in models},
+        superstep_count_unchanged=bool(superstep_parity),
+        **flags)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
@@ -1230,6 +1428,14 @@ def main():
                          "an integer mp > 1 runs {1, mp} only (simulate "
                          "devices with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--ep-sp", default="off", choices=("off", "sweep"),
+                    help='"sweep" runs the expert-/sequence-parallel verify '
+                         "arms (qwen3-moe smoke under --expert-parallel "
+                         "semantics, dense smoke under --seq-shards) with "
+                         "in-run parity assertions and writes "
+                         "results/model_parallel_ep_sp.json (simulate "
+                         "devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     ap.add_argument("--num-branches", default="1",
                     help="draft branches per chain: an integer (threads the "
                          "branch axis through the continuous arm), or "
@@ -1272,6 +1478,26 @@ def main():
         "model": (f"gmm-posterior-mean + cond-bend + "
                   f"{args.ballast_depth}x{args.ballast_width} tanh ballast"),
     }
+
+    if args.ep_sp == "sweep":
+        sweep = run_ep_sp_sweep(
+            args.theta, max(args.slots // 4, 2), min(args.requests, 8),
+            args.repeats)
+        report = {
+            "workload": {"models": sweep["models"],
+                         "theta_max": args.theta,
+                         "requests": min(args.requests, 8)},
+            **sweep}
+        out_path = args.out or "results/model_parallel_ep_sp.json"
+        report = write_report(out_path, report)
+        print(json.dumps(report, indent=2))
+        flags = [k for k in report if k.startswith("parity_")]
+        print(f"\nexpert-/sequence-parallel verify on {report['devices']} "
+              f"device(s): "
+              + ", ".join(f"{k}={report[k]}" for k in sorted(flags))
+              + f", superstep count unchanged "
+              f"{report['superstep_count_unchanged']} -> {out_path}")
+        return
 
     if args.model_shards != "1":
         mp_values = ((1, 2, 4) if args.model_shards == "sweep"

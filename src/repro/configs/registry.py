@@ -63,11 +63,30 @@ def paper_diffusion_policy_smoke(action_dim: int = 4) -> DenoiserConfig:
     return DenoiserConfig(backbone=backbone, seq_len=8, d_data=action_dim)
 
 
+def qwen3_moe_a3b_smoke(action_dim: int = 4) -> DenoiserConfig:
+    """CI/demo-sized qwen3-moe-30b-a3b-family denoiser: attention blocks
+    with a token-choice top-k MoE FFN, at smoke dims.  Experts (8) and
+    heads (4) divide a 2- or 4-way ``model`` axis and capacity_factor >=
+    E/k guarantees no token drops, so this is the registry config the
+    ``--expert-parallel`` serve smoke and the EP/SP bench arms use (the
+    full-size config lives in repro.configs.archs as qwen3-moe-30b-a3b)."""
+    backbone = ModelConfig(
+        name="qwen3-moe-a3b-smoke", family="moe", n_layers=2,
+        d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=1,
+        group=(BlockDesc("attn", moe=True),),
+        n_experts=8, top_k=2, capacity_factor=8.0,
+        pos_embed="none", embed_inputs=False, compute_dtype="float32",
+        remat=False,
+    )
+    return DenoiserConfig(backbone=backbone, seq_len=8, d_data=action_dim)
+
+
 PAPER_MODELS = {
     "paper-ldm-dit": paper_ldm_dit,
     "paper-pixel-dit": paper_pixel_dit,
     "paper-diffusion-policy": paper_diffusion_policy,
     "paper-diffusion-policy-smoke": paper_diffusion_policy_smoke,
+    "qwen3-moe-a3b-smoke": qwen3_moe_a3b_smoke,
 }
 
 

@@ -14,6 +14,7 @@ ZeRO-1: optimizer state additionally shards its largest replicated axis over
 
 from __future__ import annotations
 
+import logging
 from typing import Mapping
 
 import jax
@@ -21,6 +22,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.nn.param import Boxed, is_boxed, logical_to_pspec
+
+log = logging.getLogger("repro.serving.sharding")
 
 LOGICAL_RULES: dict = {
     "embed": None,
@@ -182,67 +185,138 @@ TP_VERIFY_SIGS = frozenset({
     ("mlp", "embed"),                 # w_down (row-parallel; forward psums)
 })
 
+# Expert-parallel whitelist: the MoE expert stacks the EP-aware dispatch
+# (repro.nn.moe: local-expert gather + all_to_all token exchange + psum
+# combine) computes on.  Each device owns E/mp expert FFNs; the router stays
+# replicated (it routes every token on every rank).
+EP_VERIFY_SIGS = frozenset({
+    ("experts", "embed", "mlp"),      # w_gate / w_up expert stacks
+    ("experts", "mlp", "embed"),      # w_down expert stack
+})
 
-def tp_param_pspecs(boxed_tree, mesh: Mesh):
-    """Manual-TP serving layout over the mesh ``model`` axis.
+# one-time replication warnings (satellite: misconfigured mp must be visible)
+_REPLICATION_WARNED: set = set()
+
+
+def _warn_replicated(leaf_name: str, core_sig: tuple, axis_name: str,
+                     dim: int, size: int) -> None:
+    key = (leaf_name, core_sig, dim, size)
+    if key in _REPLICATION_WARNED:
+        return
+    _REPLICATION_WARNED.add(key)
+    log.warning(
+        "model-parallel layout: leaf %r (logical %s) replicates on every "
+        "device — its %r dim (%d) does not divide the %d-way model axis; "
+        "the verify serves it unsharded (no memory win for this leaf)",
+        leaf_name, "/".join(core_sig), axis_name, dim, size)
+
+
+def mp_param_pspecs(boxed_tree, mesh: Mesh, *, tensor: bool = True,
+                    expert: bool = False):
+    """Model-parallel serving layout over the mesh ``model`` axis.
 
     Unlike ``param_pspecs`` (whose compiler-assisted layout may shard ANY
     evenly-dividing dim and rely on XLA to insert collectives), this shards
-    ONLY the head/hidden axes the TP-aware forward explicitly all-reduces
-    for (``TP_VERIFY_SIGS``) — and, shape-aware like ``param_pspecs``, drops
-    back to replication when the axis doesn't divide the model-axis size
-    (odd head counts serve replicated rather than erroring; the verify then
-    simply skips its slice+psum)."""
+    ONLY the axes the manual-SPMD serving forward explicitly exchanges for:
+
+      tensor  head/hidden axes of ``TP_VERIFY_SIGS`` (attention + dense FFN
+              slice locally and psum in-program);
+      expert  the leading ``experts`` axis of ``EP_VERIFY_SIGS`` (the MoE
+              dispatch gathers locally, all_to_all-exchanges tokens, and
+              psum-combines — each device owns E/mp expert stacks).
+
+    Shape-aware like ``param_pspecs``: a whitelisted leaf whose axis doesn't
+    divide the model-axis size falls back to replication (odd head/expert
+    counts serve replicated rather than erroring; the verify then simply
+    skips its slice/exchange) — with a one-time ``repro.serving`` WARNING
+    naming the leaf and the axis size, so mp misconfiguration is visible."""
     size = int(mesh.shape["model"])
 
-    def fit(box):
+    def fit(path, box):
         if not is_boxed(box):
             return P()
+        name = next((str(getattr(p, "key", p)) for p in reversed(path)
+                     if getattr(p, "key", None) is not None), "?")
         axes = tuple(box.logical_axes)
         core = tuple(a for a in axes if a != "layers")
-        if size <= 1 or core not in TP_VERIFY_SIGS:
+        is_tp = tensor and core in TP_VERIFY_SIGS
+        is_ep = expert and core in EP_VERIFY_SIGS
+        if size <= 1 or not (is_tp or is_ep):
             return P()
+        shard_axes = ("experts",) if is_ep else ("heads", "mlp")
         entries = []
         for a, dim in zip(axes, box.shape):
-            if a in ("heads", "mlp") and dim % size == 0 and dim >= size:
+            if a in shard_axes and dim % size == 0 and dim >= size:
                 entries.append("model")
             else:
                 entries.append(None)
         if "model" not in entries:
-            return P()  # non-dividing: replicate the whole leaf
+            # non-dividing: replicate the whole leaf (and say so, once)
+            bad_ax, bad_dim = next(
+                ((a, d) for a, d in zip(axes, box.shape) if a in shard_axes),
+                ("?", 0))
+            _warn_replicated(name, core, bad_ax, int(bad_dim), size)
+            return P()
         while entries and entries[-1] is None:
             entries.pop()
         return P(*entries)
 
-    return jax.tree_util.tree_map(fit, boxed_tree, is_leaf=is_boxed)
+    return jax.tree_util.tree_map_with_path(fit, boxed_tree, is_leaf=is_boxed)
+
+
+def tp_param_pspecs(boxed_tree, mesh: Mesh):
+    """PR 7 entry point: tensor-parallel-only layout (experts replicated).
+    Kept as the stable name; ``mp_param_pspecs`` generalizes it with the
+    expert-parallel whitelist."""
+    return mp_param_pspecs(boxed_tree, mesh, tensor=True, expert=False)
 
 
 def measure_collective_seconds(mesh: Mesh, payload_bytes, axis: str = "model",
-                               repeats: int = 3) -> float:
-    """Measured wall seconds for ONE round's worth of tensor-parallel
-    all-reduces on this mesh: a jitted ``shard_map`` program psums one f32
-    buffer per payload over ``axis`` (same op, same axis, same devices as
-    the verify's in-program collectives), timed best-of-``repeats`` after a
-    warmup.  This is the calibration behind ``EngineStats.collective_s`` —
+                               repeats: int = 3,
+                               kind: str = "psum") -> float:
+    """Measured wall seconds for ONE round's worth of model-parallel
+    collectives on this mesh: a jitted ``shard_map`` program runs one
+    collective per payload over ``axis`` (same op, same axis, same devices
+    as the verify's in-program collectives), timed best-of-``repeats`` after
+    a warmup.  This is the calibration behind ``EngineStats.collective_s`` —
     the superstep's collectives run inside one fused program, so their cost
     cannot be timed in isolation in situ; the probe re-creates the payload
     schedule outside and the engine attributes ``probe x rounds`` per
-    dispatch."""
+    dispatch.
+
+    ``kind`` selects the probed collective: ``"psum"`` (tensor-parallel
+    all-reduces, and the EP/SP output combines) or ``"all_to_all"`` (the
+    EP token exchange and the Ulysses sequence<->head trades).  The two are
+    calibrated SEPARATELY — an all-reduce moves (world-1)/world of the
+    buffer twice per device while an all-to-all moves (world-1)/world once,
+    so one probe cannot price both."""
     import time as _time
 
+    if kind not in ("psum", "all_to_all"):
+        raise ValueError(f"unknown collective kind {kind!r}")
     payloads = [max(int(b) // 4, 1) for b in payload_bytes]
     if not payloads or axis not in mesh.axis_names or mesh.shape[axis] <= 1:
         return 0.0
+    world = int(mesh.shape[axis])
     smap = get_shard_map()
 
-    def body(*xs):
-        return tuple(jax.lax.psum(x, axis) for x in xs)
+    if kind == "psum":
+        def body(*xs):
+            return tuple(jax.lax.psum(x, axis) for x in xs)
+        shapes = [(n,) for n in payloads]
+    else:
+        # a (world, n/world) buffer keeps its shape under the tiled
+        # all_to_all while every element still crosses the axis
+        def body(*xs):
+            return tuple(
+                jax.lax.all_to_all(x, axis, 0, 0, tiled=True) for x in xs)
+        shapes = [(world, max(n // world, 1)) for n in payloads]
 
     rep = P()
     fn = jax.jit(smap(body, mesh=mesh, in_specs=(rep,) * len(payloads),
                       out_specs=(rep,) * len(payloads), check_rep=False))
-    xs = tuple(jax.device_put(np.zeros((n,), np.float32),
-                              NamedSharding(mesh, P())) for n in payloads)
+    xs = tuple(jax.device_put(np.zeros(s, np.float32),
+                              NamedSharding(mesh, P())) for s in shapes)
     jax.block_until_ready(fn(*xs))  # compile + warm
     best = float("inf")
     for _ in range(max(repeats, 1)):
@@ -250,6 +324,25 @@ def measure_collective_seconds(mesh: Mesh, payload_bytes, axis: str = "model",
         jax.block_until_ready(fn(*xs))
         best = min(best, _time.perf_counter() - t0)
     return best
+
+
+def measure_collective_seconds_by_kind(mesh: Mesh, payloads_by_kind,
+                                       axis: str = "model",
+                                       repeats: int = 3) -> dict:
+    """Per-kind calibration: ``{"psum": [...bytes...], "all_to_all": [...]}``
+    -> ``{"psum": seconds, "all_to_all": seconds}`` (kinds with an empty
+    payload schedule are omitted).  The engine sums these for the legacy
+    ``collective_s`` total and reports each lane separately so
+    ``timing_breakdown()`` doesn't misattribute EP/SP exchange time to the
+    TP all-reduces."""
+    out = {}
+    for kind, payloads in dict(payloads_by_kind).items():
+        payloads = [int(b) for b in payloads if int(b) > 0]
+        if not payloads:
+            continue
+        out[kind] = measure_collective_seconds(
+            mesh, payloads, axis=axis, repeats=repeats, kind=kind)
+    return out
 
 
 def shard_pspecs(mesh: Mesh, states=None, axis: str = "slots"):

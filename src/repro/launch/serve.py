@@ -71,16 +71,32 @@ never cross shards (and on a pod, never cross hosts):
   --overcommit 1.5                             BudgetAware admits up to
                                                1.5x the budget's demand
 
-Model-parallel shards (tensor parallelism INSIDE each shard): every shard
+Model-parallel shards (model parallelism INSIDE each shard): every shard
 owns an mp-device model group — a row of ``serving_mesh(shards, mp)`` —
-and its verify call shards QKV/output projections and the FFN over the
-group's "model" axis (``tp_param_pspecs``), with the all-reduce inside the
-superstep program so the boundary still costs one dispatch:
+and its verify call runs sharded over the group's "model" axis, with every
+collective inside the superstep program so the boundary still costs one
+dispatch.  Three modes share the axis:
 
-  --model-shards 2                             devices per model group
-                                               (needs shards * mp devices;
-                                               1 = replicated, bit-identical
-                                               to the existing engine)
+  --model-shards 2      tensor parallelism: QKV/output projections and the
+                        dense FFN shard (``tp_param_pspecs``); psum
+                        all-reduces per layer.  1 = replicated,
+                        bit-identical to the existing engine.
+  --expert-parallel     expert parallelism for MoE backbones: the (E,d,ff)
+                        expert stacks shard over the group (each device
+                        owns E/mp experts, ``mp_param_pspecs(expert=True)``)
+                        and tokens reach their expert owners via two
+                        all_to_all exchanges per MoE layer.  Composes with
+                        either mode above/below; needs a model group
+                        (--model-shards > 1 or --seq-shards > 1).
+  --seq-shards 2        Ulysses sequence parallelism: weights replicate,
+                        the residual stream is sequence-sharded through the
+                        stack, and attention trades sequence for heads
+                        (all_to_all) around its core — activation memory
+                        and attention FLOPs at 1/mp for long-context
+                        backbones.  Mutually exclusive with
+                        --model-shards > 1 (both consume the head axis);
+                        requires attn-only groups, heads % sp == 0 and
+                        seq_len % sp == 0.
 
 Observability (repro/serving/obs): structured tracing, live metrics, and
 profiling are opt-in and cost nothing when off:
@@ -124,16 +140,17 @@ from repro.core.schedules import ddpm as ddpm_schedule
 from repro.distributed.sharding import (
     batch_pspec,
     chain_state_shardings,
+    mp_param_pspecs,
     param_pspecs,
     serving_mesh,
     shard_placements,
     shardings_from_pspecs,
-    tp_param_pspecs,
 )
 from repro.models.diffusion import (
     denoiser_init,
     make_ddpm_model_fn,
-    tp_collective_payloads,
+    mp_collective_payloads,
+    sp_compatible,
 )
 from repro.nn.param import unbox
 from repro.serving.engine import ContinuousASDEngine, Request
@@ -273,33 +290,55 @@ def run_continuous(args):
         overcommit=args.overcommit,
         tracer=tracer,
     )
-    if args.shards > 1 or args.model_shards > 1:
+    # model-parallel mode resolution: TP and SP both consume the head
+    # axis, so they are mutually exclusive; EP rides whichever is on.
+    mp, sp, ep = args.model_shards, args.seq_shards, args.expert_parallel
+    if mp > 1 and sp > 1:
+        raise SystemExit(
+            "--model-shards > 1 and --seq-shards > 1 are mutually "
+            "exclusive: both consume the attention head axis (TP's FFN "
+            "psum would sum partial products of different token slices)")
+    if sp > 1:
+        ok, reason = sp_compatible(dc, sp)
+        if not ok:
+            raise SystemExit(f"--seq-shards {sp}: {reason}")
+    mp_total = mp if mp > 1 else sp  # devices per model group
+    if ep and mp_total <= 1:
+        raise SystemExit(
+            "--expert-parallel needs a model group to shard experts over: "
+            "set --model-shards > 1 (or --seq-shards > 1)")
+    if args.shards > 1 or mp_total > 1:
         # shard-local workers: each pinned to its own device of the mesh's
         # device set (round-robin when shards > devices), requests routed
         # above the compute layer — no cross-shard gathers by construction.
-        # --model-shards > 1 widens each shard to an mp-device model group
-        # and runs the verify tensor-parallel inside it.
-        mp = args.model_shards
+        # A model group (mp_total > 1) widens each shard to mp_total
+        # devices and runs the verify model-parallel inside it.
         factory = lambda p, cond: make_ddpm_model_fn(p, dc)
         eng_devices = shard_placements(args.shards, list(mesh.devices.flat))
         tp_kwargs = {}
-        if mp > 1:
-            tp_mesh = serving_mesh(args.shards, mp)  # validates device count
+        if mp_total > 1:
+            tp_mesh = serving_mesh(args.shards, mp_total)  # validates devices
             boxed = jax.eval_shape(
                 lambda k: denoiser_init(k, dc), jax.random.PRNGKey(0))
-            specs = tp_param_pspecs(boxed, tp_mesh)
+            specs = mp_param_pspecs(boxed, tp_mesh,
+                                    tensor=mp > 1, expert=ep)
             tp_kwargs = dict(
                 param_specs=specs,
-                collective_payloads=tp_collective_payloads(params, specs, dc))
+                collective_payloads=mp_collective_payloads(
+                    params, specs, dc, mp_size=mp_total, sp_size=sp))
             factory = lambda p, cond: make_ddpm_model_fn(
-                p, dc, tp_axis="model")
+                p, dc,
+                tp_axis="model" if mp > 1 else None,
+                sp_axis="model" if sp > 1 else None,
+                sp_size=sp,
+                ep_axis="model" if ep else None)
             eng_devices = list(tp_mesh.devices.flat)
         eng = ShardedASDEngine(
             factory,
             params=params,
             num_slots=slots,
             shards=args.shards,
-            model_shards=mp,
+            model_shards=mp_total,
             router=make_router(args.router),
             dispatch=args.dispatch,
             devices=eng_devices,
@@ -334,8 +373,12 @@ def run_continuous(args):
                  if args.execution == "packed" else "unpacked")
     shard_desc = (f", shards={args.shards} router={args.router}"
                   if args.shards > 1 else "")
-    if args.model_shards > 1:
-        shard_desc += f", mp={args.model_shards}"
+    if mp_total > 1:
+        shard_desc += f", mp={mp_total}"
+        if sp > 1:
+            shard_desc += f" (sequence-parallel)"
+        if ep:
+            shard_desc += f" (expert-parallel)"
     print(f"[continuous] served {s.retired} requests on {slots} slots "
           f"({exec_desc}{shard_desc}, K={args.K}, policy={args.policy}, "
           f"controller={args.theta_controller}, grs={args.grs_impl}, "
@@ -351,11 +394,11 @@ def run_continuous(args):
           f"mean queue latency {s.mean_queue_latency()*1e3:.0f}ms, "
           f"SLO attainment {s.slo_attainment():.2f}, "
           f"{s.throughput():.2f} samples/s")
-    if args.shards > 1 or args.model_shards > 1:
+    if args.shards > 1 or mp_total > 1:
         if args.dispatch == "fused":
             rows = np.asarray(eng._mesh.devices).reshape(eng.num_shards, -1)
             devs = [list(r) for r in rows]
-        elif args.model_shards > 1:
+        elif mp_total > 1:
             devs = [list(w._model_mesh.devices.flat) for w in eng.workers]
         else:
             devs = [w.device for w in eng.workers]
@@ -363,10 +406,12 @@ def run_continuous(args):
             log.info("shard %d: %d routed, %d retired, %d rounds, "
                      "budget %s, device %s", w.shard_id, n, w.stats.retired,
                      w.stats.rounds_total, w.round_budget, dev)
-    if args.model_shards > 1:
+    if mp_total > 1:
         tb = s.timing_breakdown()
         print(f"  collectives: {tb['collective_s']*1e3:.1f}ms "
-              f"({tb['collective_frac']:.1%} of wall, calibrated)")
+              f"({tb['collective_frac']:.1%} of wall, calibrated; "
+              f"psum {tb['collective_psum_s']*1e3:.1f}ms, "
+              f"all_to_all {tb['collective_a2a_s']*1e3:.1f}ms)")
     sample = next(iter(out.values()))
     print(f"output {sample.shape} per request, "
           f"finite={bool(np.isfinite(sample).all())}")
@@ -459,6 +504,20 @@ def main():
                          "QKV/output projections and FFN shard over the "
                          "group's 'model' axis, all-reduce inside the "
                          "superstep program)")
+    ap.add_argument("--expert-parallel", action="store_true",
+                    help="shard MoE expert stacks over the model group "
+                         "(each device owns E/mp experts; tokens reach "
+                         "their expert owners via all_to_all inside the "
+                         "superstep program).  Needs a model group: "
+                         "--model-shards > 1 or --seq-shards > 1")
+    ap.add_argument("--seq-shards", type=int, default=1,
+                    help="Ulysses sequence parallelism inside each shard: "
+                         "weights replicate, the residual stream is "
+                         "sequence-sharded and attention trades sequence "
+                         "for heads (all_to_all) around its core.  "
+                         "Mutually exclusive with --model-shards > 1; "
+                         "needs attn-only groups, heads %% sp == 0, "
+                         "seq_len %% sp == 0")
     ap.add_argument("--router", default="least-loaded",
                     choices=sorted(ROUTERS),
                     help="sharded serving request router")

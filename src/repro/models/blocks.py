@@ -38,18 +38,33 @@ def _maybe_ffn_init(key, cfg: ModelConfig, desc: BlockDesc):
 
 
 def _maybe_ffn_fwd(params, x, cfg: ModelConfig, desc: BlockDesc,
-                   tp_axis: str | None = None):
-    # tp_axis: manual tensor parallelism for the dense FFN only (the MoE
-    # expert stack serves replicated under the manual-TP layout; see
-    # repro.distributed.sharding.TP_VERIFY_SIGS).
+                   tp_axis: str | None = None, ep_axis: str | None = None,
+                   seq_sharded: bool = False):
+    # tp_axis: manual tensor parallelism for the dense FFN; ep_axis: expert
+    # parallelism for the MoE expert stacks (local-expert gather +
+    # all_to_all token exchange, see repro.nn.moe); seq_sharded: x is the
+    # rank's Ulysses sequence slice — the dense FFN / norms are then
+    # embarrassingly parallel (replicated weights, local rows) and the MoE
+    # dispatch keeps the output local instead of psum-replicating it.
     aux = {}
     if "moe" in params:
-        h, aux = moe_lib.moe_apply(params["moe"], rmsnorm_apply(params["ffn_norm"], x), cfg)
+        h, aux = moe_lib.moe_apply(
+            params["moe"], rmsnorm_apply(params["ffn_norm"], x), cfg,
+            ep_axis=ep_axis, seq_sharded=seq_sharded)
         x = x + h
     elif "ffn" in params:
         x = x + ffn_lib.ffn_apply(params["ffn"], rmsnorm_apply(params["ffn_norm"], x),
                                   d_ff=cfg.d_ff, tp_axis=tp_axis)
     return x, aux
+
+
+def _mp_ffn_kwargs(ctx):
+    # model-parallel kwargs threaded from the decoder ctx into the FFN
+    return dict(
+        tp_axis=ctx.get("tp_axis"),
+        ep_axis=ctx.get("ep_axis"),
+        seq_sharded=ctx.get("sp_axis") is not None,
+    )
 
 
 # ------------------------------------------------------------------- attn
@@ -77,9 +92,10 @@ def attn_block_fwd(params, x, cfg, desc, ctx, window):
         impl=ctx.get("impl", "naive"),
         chunk=ctx.get("chunk", 1024),
         tp_axis=ctx.get("tp_axis"),
+        sp_axis=ctx.get("sp_axis"),
     )
     x = x + h
-    return _maybe_ffn_fwd(params, x, cfg, desc, tp_axis=ctx.get("tp_axis"))
+    return _maybe_ffn_fwd(params, x, cfg, desc, **_mp_ffn_kwargs(ctx))
 
 
 def attn_block_cache_init(params, cfg, desc, batch, max_len, dtype=jnp.bfloat16):
@@ -129,7 +145,7 @@ def xattn_block_fwd(params, x, cfg, desc, ctx, window):
         tp_axis=ctx.get("tp_axis"),
     )
     x = x + h
-    return _maybe_ffn_fwd(params, x, cfg, desc, tp_axis=ctx.get("tp_axis"))
+    return _maybe_ffn_fwd(params, x, cfg, desc, **_mp_ffn_kwargs(ctx))
 
 
 def xattn_block_cache_init(params, cfg, desc, batch, max_len, dtype=jnp.bfloat16):
@@ -204,7 +220,7 @@ def hymba_block_fwd(params, x, cfg, desc, ctx, window):
     )
     m = ssm_lib.mamba_fwd(params["mamba"], h, cfg)
     x = x + 0.5 * (a + m)  # hymba: parallel attn+mamba heads, mean-fused
-    return _maybe_ffn_fwd(params, x, cfg, desc, tp_axis=ctx.get("tp_axis"))
+    return _maybe_ffn_fwd(params, x, cfg, desc, **_mp_ffn_kwargs(ctx))
 
 
 def hymba_block_cache_init(params, cfg, desc, batch, max_len, dtype=jnp.bfloat16):

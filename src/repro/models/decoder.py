@@ -53,12 +53,17 @@ def decoder_init(key, cfg: ModelConfig):
 def _group_fwd(cfg: ModelConfig, ctx):
     """Builds the per-repeat body fn: (x, (slices, windows)) -> (x, aux).
 
-    Two ctx keys carry parallelism through the stack: ``sp`` (GSPMD
-    sequence-parallel sharding constraint, below) and ``tp_axis`` (manual
+    Four ctx keys carry parallelism through the stack: ``sp`` (GSPMD
+    sequence-parallel sharding constraint, below), ``tp_axis`` (manual
     tensor parallelism under shard_map — the blocks compute on local
-    head/hidden shards and psum in-program; the collectives sit inside this
+    head/hidden shards and psum in-program), ``ep_axis`` (expert
+    parallelism — MoE blocks exchange capacity rows with their expert
+    owners via all_to_all, see repro.nn.moe) and ``sp_axis`` (manual
+    Ulysses sequence parallelism — x is each rank's sequence slice and
+    attention trades sequence for heads around its core; distinct from the
+    compiler-driven ``sp``).  The collectives sit inside this
     scanned/rematted body, so depth still costs O(group) HLO and the round
-    stays one dispatch)."""
+    stays one dispatch."""
 
     sp = ctx.get("sp")  # NamedSharding for sequence-parallel residuals
 

@@ -180,6 +180,7 @@ def attn_fwd(
     impl: str = "naive",
     chunk: int = 1024,
     tp_axis: str | None = None,
+    sp_axis: str | None = None,
 ):
     """Full-sequence attention (self by default, cross when kv_x given).
 
@@ -189,7 +190,22 @@ def attn_fwd(
     (``jax.lax.psum``), keeping the round body a single dispatch.  Local
     vs global head count is detected from the param shapes, so replicated
     params compile the exact unsharded program.
+
+    ``sp_axis``: mesh axis name for Ulysses sequence parallelism — x is the
+    rank's (B, L/mp, d) sequence slice (``positions`` its position slice)
+    and every weight is REPLICATED (SP shards activations, not params, so
+    there is no shape to detect — the caller opts in explicitly).  q/k/v
+    are projected on the local slice, an ``all_to_all`` trades the sharded
+    sequence axis for a sharded head axis (the softmax core then sees the
+    FULL sequence on H/mp local heads — exact, not blockwise), and a second
+    ``all_to_all`` trades back before the full wo projection; the output is
+    the rank's sequence slice again, no psum.  Mutually exclusive with
+    ``tp_axis`` (both consume the head axis; composing them would psum
+    partial sums of different token slices).  Self-attention only.
     """
+    if sp_axis is not None:
+        assert tp_axis is None, "sp_axis and tp_axis are mutually exclusive"
+        assert kv_x is None, "Ulysses sequence parallelism is self-attn only"
     B, L, _ = x.shape
     if positions is None:
         positions = jnp.arange(L)
@@ -200,6 +216,18 @@ def attn_fwd(
         )
     q, k, v = _project_qkv(params, x, xkv, cfg, positions, kv_positions,
                            tp_axis=tp_axis)
+    if sp_axis is not None:
+        # seq -> head exchange: split the head axis (rank s keeps heads
+        # [s*H/mp, (s+1)*H/mp)), concatenate the sequence sender-major —
+        # rank r owns slice [r*Lc, (r+1)*Lc), so concat IS global order
+        seq2head = functools.partial(
+            jax.lax.all_to_all, axis_name=sp_axis,
+            split_axis=2, concat_axis=1, tiled=True,
+        )
+        q, k, v = seq2head(q), seq2head(k), seq2head(v)
+        # masks (causal / windowed) need the full position vector
+        positions = jax.lax.all_gather(positions, sp_axis, tiled=True)
+        kv_positions = positions
     # Pallas flash path (TPU kernel; interpret-mode on CPU).  Requires a
     # static window (hymba's per-layer scanned windows fall back to chunked).
     if impl == "flash" and isinstance(window, int):
@@ -224,6 +252,11 @@ def attn_fwd(
             if impl == "chunked"
             else core(q, k, v, mask, cfg.attn_softcap)
         )
+    if sp_axis is not None:
+        # head -> seq exchange (exact inverse): rank r keeps its sequence
+        # slice back, heads concatenate sender-major into global order
+        o = jax.lax.all_to_all(
+            o, sp_axis, split_axis=1, concat_axis=2, tiled=True)
     out = jnp.einsum("blhk,hkd->bld", o, params["wo"].astype(x.dtype))
     if tp_axis is not None and o.shape[2] != cfg.n_heads:
         out = jax.lax.psum(out, tp_axis)  # row-parallel wo partial sums

@@ -105,6 +105,11 @@ class EngineStats:
     device_s: float = 0.0
     host_sync_s: float = 0.0
     collective_s: float = 0.0
+    # per-kind split of collective_s (psum all-reduces vs all_to_all token /
+    # sequence exchanges) — calibrated separately because their per-device
+    # wire bytes differ; same view-into-device_s rule as the total
+    collective_psum_s: float = 0.0
+    collective_a2a_s: float = 0.0
     head_calls_total: int = 0
     model_evals_total: int = 0
     accepts_total: int = 0
@@ -132,7 +137,8 @@ class EngineStats:
     _MERGE_SUM = (
         "requests", "retired", "batches", "rounds_total", "supersteps",
         "dispatch_s", "fused_dispatch_s", "device_s", "host_sync_s",
-        "collective_s", "head_calls_total",
+        "collective_s", "collective_psum_s", "collective_a2a_s",
+        "head_calls_total",
         "model_evals_total", "accepts_total", "proposals_total",
         "draft_points_total",
         "queue_latency_total", "dropped", "slo_tracked", "slo_met_count",
@@ -292,11 +298,15 @@ class EngineStats:
             "device_s": self.device_s,
             "host_sync_s": self.host_sync_s,
             "collective_s": self.collective_s,
+            "collective_psum_s": self.collective_psum_s,
+            "collective_a2a_s": self.collective_a2a_s,
             "dispatch_frac": self.dispatch_s / denom,
             "fused_dispatch_frac": self.fused_dispatch_s / denom,
             "device_frac": self.device_s / denom,
             "host_sync_frac": self.host_sync_s / denom,
             "collective_frac": self.collective_s / denom,
+            "collective_psum_frac": self.collective_psum_s / denom,
+            "collective_a2a_frac": self.collective_a2a_s / denom,
             # branched speculation lanes (not time components — ride along
             # here so the bench's timing dump carries the branch economics)
             "branch_accept_depth": self.branch_accept_depth(),

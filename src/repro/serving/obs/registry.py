@@ -289,6 +289,23 @@ def instrument_engine(registry: MetricsRegistry, engine) -> MetricsRegistry:
         for name, help_text, fn in gauges:
             registry.gauge(name, help_text,
                            fn=(lambda w=w, f=fn: f(w)), **lab)
+        # model-parallel collective time: calibrated seconds INSIDE the
+        # fused superstep programs (a view into device time, see
+        # EngineStats), total plus the per-primitive split — psum
+        # all-reduces (TP row-parallel / EP combine) vs all_to_all
+        # exchanges (EP token routing, Ulysses sequence<->head trades)
+        registry.gauge(
+            "asd_collective_seconds",
+            "calibrated model-parallel collective seconds inside the "
+            "superstep programs (view into device time)",
+            fn=(lambda w=w: w.stats.collective_s), **lab)
+        for kind, field in (("psum", "collective_psum_s"),
+                            ("all_to_all", "collective_a2a_s")):
+            registry.gauge(
+                "asd_collective_kind_seconds",
+                "calibrated collective seconds by primitive kind",
+                fn=(lambda w=w, f=field: getattr(w.stats, f)),
+                kind=kind, **lab)
         for q in (50, 95, 99):
             registry.gauge(
                 "asd_completion_latency_seconds",

@@ -139,13 +139,17 @@ class ShardedASDEngine:
         seed: int = 0,
         **worker_kwargs,
     ):
-        # model_shards (mp): tensor parallelism WITHIN each shard — one
+        # model_shards (mp): model parallelism WITHIN each shard — one
         # shard = an mp-device model group (serving_mesh row).  mp=1 keeps
         # every existing code path bit-identical.  mp>1 needs explicit
-        # ``params`` plus ``param_specs`` (a tp_param_pspecs tree) in
-        # worker_kwargs, a model_fn_factory built with tp_axis="model", and
-        # shards*mp distinct devices; ``collective_payloads`` (see
-        # tp_collective_payloads) calibrates EngineStats.collective_s.
+        # ``params`` plus ``param_specs`` (a tp_param_pspecs or
+        # mp_param_pspecs tree — tensor- and/or expert-parallel; Ulysses
+        # sequence parallelism rides the same axis with replicated weights)
+        # in worker_kwargs, a model_fn_factory built with
+        # tp_axis/ep_axis/sp_axis="model", and shards*mp distinct devices;
+        # ``collective_payloads`` (a {kind: [bytes...]} dict from
+        # mp_collective_payloads, or a legacy flat psum list) calibrates
+        # EngineStats.collective_s and its per-kind split.
         if shards < 1:
             raise ValueError(f"shards must be >= 1, got {shards}")
         if model_shards < 1:
@@ -175,7 +179,9 @@ class ShardedASDEngine:
                 "(tp_param_pspecs tree): a factory closure cannot be "
                 "sharded over a model group")
         self._param_specs = param_specs if mp > 1 else None
-        self._collective_payloads = tuple(collective_payloads)
+        self._collective_payloads = (
+            dict(collective_payloads) if isinstance(collective_payloads, dict)
+            else tuple(collective_payloads))
         if (fused and worker_kwargs.get("round_budget") == "auto"
                 and worker_kwargs.get("round_impl") != "fused"):
             raise ValueError(
@@ -260,7 +266,7 @@ class ShardedASDEngine:
         superstep partitions over BOTH axes in the same single dispatch per
         boundary — the verify all-reduce runs inside the program."""
         from repro.distributed.sharding import (
-            measure_collective_seconds, serving_mesh, shard_pspecs,
+            measure_collective_seconds_by_kind, serving_mesh, shard_pspecs,
             shardings_from_pspecs, slots_mesh)
 
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -287,18 +293,24 @@ class ShardedASDEngine:
             for w in self.workers:
                 w._params = rep_params
         if mp > 1 and self._collective_payloads:
-            # calibrate the per-round all-reduce seconds on the live mesh
-            # and stamp every worker: the fused harvest reuses the ordinary
-            # per-worker _harvest, which accounts R * this per boundary
+            # calibrate the per-round collective seconds, per kind, on the
+            # live mesh and stamp every worker: the fused harvest reuses
+            # the ordinary per-worker _harvest, which accounts R * this
+            # per boundary into collective_s and the per-kind lanes
             points = (
                 w0._budget_cap + (1 + w0.num_branches) * w0.num_slots
                 if w0.execution == "packed"
                 else w0.num_slots * (w0.theta * w0.num_branches + 1))
-            per_round = measure_collective_seconds(
+            by_kind = (self._collective_payloads
+                       if isinstance(self._collective_payloads, dict)
+                       else {"psum": list(self._collective_payloads)})
+            kind_s = measure_collective_seconds_by_kind(
                 self._mesh,
-                [int(b) * points for b in self._collective_payloads])
+                {k: [int(b) * points for b in v]
+                 for k, v in by_kind.items()})
             for w in self.workers:
-                w._collective_s_per_round = per_round
+                w._collective_kind_s = dict(kind_s)
+                w._collective_s_per_round = sum(kind_s.values())
         stacked = jax.tree_util.tree_map(
             lambda *x: jnp.stack(x), *[w._states for w in self.workers])
         self._states = jax.device_put(

@@ -239,15 +239,18 @@ class ShardWorker:
         collective_payloads=(),
         tracer=None,
     ):
-        # Tensor parallelism: with ``model_mesh`` (a Mesh whose "model" axis
+        # Model parallelism: with ``model_mesh`` (a Mesh whose "model" axis
         # is this worker's device GROUP) the worker wraps every superstep in
         # shard_map over the group — params enter via ``param_specs``
-        # (tp_param_pspecs layout), slot states / weights / conds replicate
-        # across the group, and the TP-aware model fn all-reduces
-        # IN-PROGRAM, so the dispatch count per boundary is unchanged.
-        # ``collective_payloads`` (per-point all-reduce bytes of one model
-        # call, see tp_collective_payloads) calibrates the
-        # EngineStats.collective_s estimate at init.
+        # (tp_param_pspecs / mp_param_pspecs layout: tensor-, expert- or
+        # sequence-parallel), slot states / weights / conds replicate
+        # across the group, and the parallelism-aware model fn runs its
+        # psums / all_to_alls IN-PROGRAM, so the dispatch count per
+        # boundary is unchanged.  ``collective_payloads`` (per-point
+        # collective bytes of one model call — a {kind: [bytes...]} dict
+        # from mp_collective_payloads, or a legacy flat psum list from
+        # tp_collective_payloads) calibrates the EngineStats.collective_s
+        # estimate (and its per-kind split) at init.
         self.schedule = schedule
         self.event_shape = tuple(event_shape)
         self.num_slots = num_slots
@@ -371,9 +374,10 @@ class ShardWorker:
         self._model_mesh = model_mesh
         self._param_specs = param_specs
         self._collective_s_per_round = 0.0
+        self._collective_kind_s: dict = {}
         if model_mesh is not None:
             from repro.distributed.sharding import (
-                measure_collective_seconds, shardings_from_pspecs)
+                measure_collective_seconds_by_kind, shardings_from_pspecs)
 
             if params is None or param_specs is None:
                 raise ValueError(
@@ -383,19 +387,27 @@ class ShardWorker:
             params = jax.device_put(
                 params, shardings_from_pspecs(model_mesh, param_specs))
             if collective_payloads:
-                # calibrate the per-round collective estimate once: the
-                # verify's psums run INSIDE the fused program, so their cost
-                # is probed with the same payload schedule on the same group
-                # (~budget + (1 + B)*slots points per packed round: verify
-                # lanes + the plan's head call + the per-branch eager head
-                # lanes)
+                # calibrate the per-round collective estimate once, per
+                # collective kind: the verify's psums / all_to_alls run
+                # INSIDE the fused program, so their cost is probed with the
+                # same payload schedule on the same group (~budget +
+                # (1 + B)*slots points per packed round: verify lanes + the
+                # plan's head call + the per-branch eager head lanes).
+                # ``collective_payloads``: {kind: [bytes...]} from
+                # mp_collective_payloads, or a legacy flat list (all psum).
                 points = (
                     self._budget_cap + (1 + self.num_branches) * num_slots
                     if execution == "packed"
                     else num_slots * (self.theta * self.num_branches + 1))
-                self._collective_s_per_round = measure_collective_seconds(
+                by_kind = (collective_payloads
+                           if isinstance(collective_payloads, dict)
+                           else {"psum": list(collective_payloads)})
+                self._collective_kind_s = measure_collective_seconds_by_kind(
                     model_mesh,
-                    [int(b) * points for b in collective_payloads])
+                    {k: [int(b) * points for b in v]
+                     for k, v in by_kind.items()})
+                self._collective_s_per_round = sum(
+                    self._collective_kind_s.values())
         self._params = params
         if params is None:
             self._make_fn = lambda p, cond: model_fn_factory(cond)
@@ -912,6 +924,10 @@ class ShardWorker:
             # superstep (one psum-probe wall per round, measured at init on
             # this group's devices), so attribute probe x R per boundary
             self.stats.collective_s += R * self._collective_s_per_round
+            self.stats.collective_psum_s += (
+                R * self._collective_kind_s.get("psum", 0.0))
+            self.stats.collective_a2a_s += (
+                R * self._collective_kind_s.get("all_to_all", 0.0))
             if tr is not None:
                 # a view INTO device execution, anchored to end at the sync
                 # packet's readiness — the estimate, flagged as such

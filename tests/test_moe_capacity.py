@@ -1,0 +1,165 @@
+"""MoE capacity-overflow drop semantics (ISSUE 10 satellite).
+
+Pins the GShard-with-dropping contract of ``repro.nn.moe``:
+
+  * At low ``capacity_factor`` each (batch row, expert) keeps only its
+    top-C tokens BY ROUTING WEIGHT — which tokens drop is deterministic
+    and asserted exactly, and a dropped token contributes nothing to the
+    output (its residual passes through untouched upstream).
+  * ``capacity = min(capacity, L)`` clamping changes how many tokens fit,
+    never the per-token routing weight: the renormalized gate weights of
+    surviving tokens sum to 1 per token, and an absurdly large explicit
+    capacity produces bit-identical output to capacity = L.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import BlockDesc, ModelConfig
+from repro.nn import moe as moe_lib
+
+
+def _cfg(E=2, k=1, cf=1.0, d=8, ff=16):
+    return ModelConfig(
+        name="moe-cap-test", family="moe", n_layers=1, d_model=d,
+        n_heads=2, n_kv_heads=2, d_ff=ff, vocab_size=1,
+        group=(BlockDesc("attn", moe=True),),
+        n_experts=E, top_k=k, capacity_factor=cf,
+        pos_embed="none", embed_inputs=False, compute_dtype="float32",
+        remat=False,
+    )
+
+
+def _params(cfg, seed=0):
+    p = moe_lib.moe_init(jax.random.PRNGKey(seed), cfg)
+    return jax.tree_util.tree_map(
+        lambda b: b.value if hasattr(b, "value") else b, p,
+        is_leaf=lambda x: hasattr(x, "value"))
+
+
+def _steer_router(params, cfg, logits_per_token):
+    """Replace the router with one that produces the given (L, E) logits
+    regardless of token content: routing becomes a pinned fixture."""
+    L, E = logits_per_token.shape
+    # x rows are one-hot-ish scaled basis vectors; router maps basis row i
+    # to logits_per_token[i].  Easier: make x orthonormal rows and solve.
+    x = jnp.eye(L, cfg.d_model, dtype=jnp.float32)  # L <= d_model
+    router = jnp.zeros((cfg.d_model, E), jnp.float32)
+    router = router.at[:L].set(jnp.asarray(logits_per_token, jnp.float32))
+    params = dict(params)
+    params["router"] = router
+    return params, x[None]  # (1, L, d)
+
+
+def test_low_capacity_drops_lowest_gate_tokens_exactly():
+    """k=2, E=2, cf small -> capacity 1: every token selects both experts
+    with softmax-renormalized weights, each expert keeps only its single
+    strongest token, and the two losing tokens produce ZERO output rows.
+    Which tokens drop is pinned exactly by the router logit margins."""
+    cfg = _cfg(E=2, k=2, cf=0.25)  # capacity = ceil(2*4*0.25/2) = 1
+    params = _params(cfg)
+    # expert-0 margins: token 2 (6.0) > 0 (4.0) > 1 (2.0) > 3 (1.0); the
+    # expert-1 weights are the complements, so expert 1's top token is 3
+    logits = jnp.asarray([[4.0, 0.0],
+                          [2.0, 0.0],
+                          [6.0, 0.0],
+                          [1.0, 0.0]])
+    params, x = _steer_router(params, cfg, logits)
+    out, _ = moe_lib.moe_apply(params, x, cfg)
+    kept = np.abs(np.asarray(out[0])).sum(axis=-1) > 0
+    assert kept.tolist() == [False, False, True, True]
+    gate_vals, token_idx, keep, _, _ = moe_lib._route(params, x, cfg, None)
+    assert gate_vals.shape[-1] == 1  # capacity 1
+    assert int(token_idx[0, 0, 0]) == 2  # expert 0 keeps its margin winner
+    assert int(token_idx[0, 1, 0]) == 3  # expert 1 keeps ITS winner
+    # with k = E = 2 the renormalized gate weight IS the softmax prob
+    np.testing.assert_allclose(
+        float(gate_vals[0, 0, 0]),
+        float(jax.nn.softmax(logits[2])[0]), rtol=1e-6)
+
+
+def test_capacity_overflow_partial_expert():
+    """top_k=2 over 3 experts at capacity 2: each expert keeps its top-2
+    gate-weight tokens; a token dropped by ONE of its experts still gets
+    the other expert's (renormalized) contribution — drops are per
+    (expert, token) pairs, not per token."""
+    cfg = _cfg(E=3, k=2, cf=1.0, d=8)  # capacity = ceil(2*4*1.0/3) = 3 -> pin 2
+    params = _params(cfg)
+    # renormalized top-2 gate weight for the stronger expert is
+    # sigmoid(margin) — margins chosen DISTINCT so drop order is exact:
+    # expert 0 sees tokens {0,1,2} at sigmoid(0.2) < sigmoid(1) < sigmoid(2);
+    # expert 1 sees all four at sigmoid(-2) < sigmoid(-1) < sigmoid(-0.8)
+    # < sigmoid(-0.2) (token 3 routes to experts {2, 1})
+    logits = jnp.asarray([[5.0, 4.8, 0.0],
+                          [5.5, 4.5, 0.0],
+                          [6.0, 4.0, 0.0],
+                          [0.0, 4.2, 5.0]])
+    params, x = _steer_router(params, cfg, logits)
+    gate_vals, token_idx, keep, _, _ = moe_lib._route(
+        params, x, cfg, 2)  # explicit capacity 2
+    # expert 0 keeps its top-2 by gate weight: tokens 2 and 1 — token 0 drops
+    e0 = sorted(int(i) for i, kp in
+                zip(token_idx[0, 0], keep[0, 0]) if bool(kp))
+    assert e0 == [1, 2]
+    # token 0 lost expert 0 but its expert-1 assignment survives (0.450 and
+    # 0.310 beat 0.269 and 0.119)
+    e1 = sorted(int(i) for i, kp in
+                zip(token_idx[0, 1], keep[0, 1]) if bool(kp))
+    assert e1 == [0, 3]
+    out, _ = moe_lib.moe_apply(params, x, cfg, capacity=2)
+    assert np.abs(np.asarray(out[0, 0])).sum() > 0  # partial, not zeroed
+
+
+def test_capacity_clamp_preserves_gate_normalization():
+    """capacity=min(capacity, L): a cf so large that the unclamped
+    capacity far exceeds L must (a) clamp to L, (b) keep every routed
+    token, and (c) leave the per-token renormalized gate mass at exactly
+    1 — clamping affects how many tokens FIT, never the weights."""
+    cfg = _cfg(E=4, k=2, cf=64.0, d=16)
+    params = _params(cfg)
+    B, L = 2, 6
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, L, cfg.d_model),
+                          jnp.float32)
+    gate_vals, token_idx, keep, _, _ = moe_lib._route(params, x, cfg, None)
+    assert gate_vals.shape[-1] == L  # ceil(2*6*64/4)=192, clamped to 6
+    # per-token gate mass: scatter the kept gate values back by token
+    mass = np.zeros((B, L))
+    gv, ti, kp = (np.asarray(gate_vals), np.asarray(token_idx),
+                  np.asarray(keep))
+    for b in range(B):
+        for e in range(cfg.n_experts):
+            for c in range(gv.shape[-1]):
+                if kp[b, e, c]:
+                    mass[b, ti[b, e, c]] += gv[b, e, c]
+    np.testing.assert_allclose(mass, 1.0, rtol=1e-5)
+    # explicit capacity >> L is bit-identical to the clamped default
+    out_a, _ = moe_lib.moe_apply(params, x, cfg)
+    out_b, _ = moe_lib.moe_apply(params, x, cfg, capacity=10 * L)
+    np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_b))
+
+
+def test_no_drop_capacity_equals_dense_mixture():
+    """With cf >= E/k no token can overflow: the capacity-gather output
+    equals the explicit dense mixture sum_e w_e(x) * FFN_e(x) computed
+    without any capacity machinery."""
+    cfg = _cfg(E=4, k=2, cf=2.0, d=16)  # cf = E/k exactly
+    params = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 5, cfg.d_model),
+                          jnp.float32)
+    out, _ = moe_lib.moe_apply(params, x, cfg)
+
+    logits = (x @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    weights = jnp.einsum(
+        "blk,blke->ble", top_p,
+        jax.nn.one_hot(top_idx, cfg.n_experts, dtype=jnp.float32))
+    y_all = moe_lib._expert_ffn(
+        params, jnp.broadcast_to(
+            x[:, None], (2, cfg.n_experts, 5, cfg.d_model)), jnp.float32)
+    dense = jnp.einsum("ble,beld->bld", weights, y_all)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               rtol=1e-4, atol=1e-5)

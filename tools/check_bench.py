@@ -47,6 +47,10 @@ RULES = [
     (r"(^|\.)routed(\.|$)|(^|\.)argv(\.|$)", "ignore", 0.0),
     # correctness verdicts: never drift
     (r"parity|bitwise", "exact", 0.0),
+    # EP/SP layout claims (expert shard bytes, replicated SP params,
+    # superstep-count invariance): in-run assertions' verdicts — exact
+    (r"shard_bytes|params_replicated|count_unchanged|deterministic",
+     "exact", 0.0),
     # machine-phase-sensitive claims / argmax arm names (skipped by --loose)
     (r"non_decreasing|monotone|decreasing|best_packed$|best_fused$|best_r$"
      r"|best_adaptive$|best_multi_arm$", "phase", 0.0),
